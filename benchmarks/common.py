@@ -1,0 +1,52 @@
+"""Shared benchmark utilities: timing, CSV emission, standard instances."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core import MatchingObjective, MaximizerConfig, normalize_rows
+from repro.instances import (
+    MatchingInstanceSpec,
+    bucketize,
+    generate_matching_instance,
+)
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time per call in microseconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def cpu_instance(sources: int, *, destinations: int = 1000, avg_degree: float = 8.0,
+                 families: int = 1, seed: int = 0, shard_multiple: int = 1):
+    """CPU-scaled matching instance (paper uses 25M-100M; we sweep 10k-1M)."""
+    spec = MatchingInstanceSpec(
+        num_sources=sources,
+        num_destinations=destinations,
+        avg_degree=avg_degree,
+        num_families=families,
+        seed=seed,
+    )
+    inst = generate_matching_instance(spec)
+    packed = bucketize(inst, shard_multiple=shard_multiple)
+    scaled, d = normalize_rows(packed)
+    return inst, packed, scaled

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig1,table2]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    "table2_iteration_time",
+    "fig1_fused_kernel",
+    "fig2_bucketing",
+    "fig3_scaling",
+    "table3_vs_pdhg",
+    "table4_quality",
+    "fig4_preconditioning",
+    "fig5_continuation",
+    "roofline_report",
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in SUITES:
+        if only and name not in only:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

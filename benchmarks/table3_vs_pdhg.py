@@ -1,0 +1,56 @@
+"""Table 3: Dualip (this system) vs D-PDLP-family baseline, runtime to target.
+
+CPU-scaled instances.  Dualip runs its continuation schedule; PDHG runs to the
+paper's 1e-4 relative tolerance.  Also reports the structural memory argument
+from Table 3: PDHG must materialise the simplex rows explicitly (the L1/
+reformulation blow-up that OOMs D-PDLP at scale), while the bucketed layout
+absorbs them into the projection operator.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import cpu_instance, emit
+from repro.core import (
+    Maximizer,
+    MaximizerConfig,
+    MatchingObjective,
+    PDHGConfig,
+    from_edge_list,
+    solve_pdhg,
+)
+
+
+def run() -> None:
+    for sources in (20_000, 100_000):
+        inst, packed, scaled = cpu_instance(sources, destinations=500)
+        obj = MatchingObjective(scaled)
+        cfg = MaximizerConfig(iters_per_stage=150)
+        mx = Maximizer(obj, cfg)
+        t0 = time.perf_counter()
+        res = mx.solve()
+        t_dualip = time.perf_counter() - t0
+
+        lp = from_edge_list(inst)
+        t0 = time.perf_counter()
+        pres = solve_pdhg(lp, PDHGConfig(max_iters=20_000))
+        jax.block_until_ready(pres.x)
+        t_pdhg = time.perf_counter() - t0
+
+        # explicit-row memory for the generic formulation vs bucketed layout
+        pdhg_nnz = int(lp.rows.shape[0])
+        ours_slots = sum(b.rows * b.length for b in packed.buckets)
+        emit(
+            f"table3/dualip_s{sources}", t_dualip * 1e6,
+            f"g={float(res.g):.4f};slots={ours_slots}",
+        )
+        emit(
+            f"table3/pdhg_s{sources}", t_pdhg * 1e6,
+            f"obj={float(pres.primal_obj):.4f};iters={int(pres.iters)};"
+            f"converged={bool(pres.converged)};explicit_nnz={pdhg_nnz};"
+            f"nnz_blowup={pdhg_nnz / max(inst.nnz, 1):.2f}x",
+        )

@@ -1,0 +1,78 @@
+"""End-to-end production driver: recurring solves with stability control.
+
+Simulates the paper's production cadence: day-0 solve, then a day-1 solve on
+perturbed data, warm-started from day-0 duals, with the gamma floor bounding
+run-to-run primal drift (paper contribution 2).  Reports solve quality, drift,
+and the theoretical bound.
+
+    PYTHONPATH=src python examples/production_solve.py [--sources 100000]
+"""
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import (
+    MaximizerConfig,
+    RecurringSolver,
+    drift_bound,
+    normalize_rows,
+)
+from repro.instances import (
+    MatchingInstanceSpec,
+    bucketize,
+    generate_matching_instance,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sources", type=int, default=50_000)
+    ap.add_argument("--destinations", type=int, default=1_000)
+    ap.add_argument("--gamma-floor", type=float, default=0.01)
+    args = ap.parse_args()
+
+    gammas = tuple(
+        g for g in (1e3, 1e2, 10.0, 1.0, 0.1, 0.01) if g >= args.gamma_floor
+    )
+    solver = RecurringSolver(
+        MaximizerConfig(gammas=gammas, iters_per_stage=120)
+    )
+
+    spec0 = MatchingInstanceSpec(
+        num_sources=args.sources, num_destinations=args.destinations,
+        avg_degree=8.0, seed=0,
+    )
+    day0 = generate_matching_instance(spec0)
+    packed0, _ = normalize_rows(bucketize(day0))
+
+    t0 = time.time()
+    res0, _ = solver.solve(packed0)
+    print(f"[day 0] solved in {time.time() - t0:.1f}s  g={float(res0.g):.4f}  "
+          f"viol={float(res0.stats[-1].max_violation[-1]):.2e}")
+
+    # day 1: same graph, values perturbed ~2% (slowly evolving inputs)
+    day1 = dataclasses.replace(day0)
+    rng = np.random.default_rng(1)
+    noise = 1.0 + 0.02 * rng.standard_normal(day1.nnz)
+    day1.values = day1.values * noise
+    day1.coeff = day1.coeff * noise
+    packed1, _ = normalize_rows(bucketize(day1))
+
+    t0 = time.time()
+    res1, report = solver.solve(packed1)
+    dc = float(np.linalg.norm(packed1.buckets[0].cost - packed0.buckets[0].cost))
+    bound = drift_bound(args.gamma_floor, dc_norm=dc, dlam_norm=float(
+        np.linalg.norm(np.asarray(res1.lam) - np.asarray(res0.lam))))
+    print(f"[day 1] warm-started solve in {time.time() - t0:.1f}s  "
+          f"g={float(res1.g):.4f}")
+    print(f"        primal drift ||x1-x0|| = {report['drift_l2']:.4f} "
+          f"(relative {report['drift_rel']:.4f})")
+    print(f"        theoretical bound (gamma={args.gamma_floor}): {bound:.4f}")
+    assert report["drift_l2"] <= bound * 1.01, "drift bound violated!"
+    print("        drift within the gamma-control bound — stability holds")
+
+
+if __name__ == "__main__":
+    main()

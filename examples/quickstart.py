@@ -1,0 +1,50 @@
+"""Quickstart: build a matching LP, solve it with the paper's pipeline, check it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    Maximizer,
+    MaximizerConfig,
+    MatchingObjective,
+    normalize_rows,
+)
+from repro.instances import (
+    MatchingInstanceSpec,
+    bucketize,
+    generate_matching_instance,
+    unpack_primal,
+)
+
+
+def main():
+    # 1. a synthetic matching workload (Appendix A): 5k users x 200 items
+    spec = MatchingInstanceSpec(
+        num_sources=5_000, num_destinations=200, avg_degree=6.0, seed=0
+    )
+    inst = generate_matching_instance(spec)
+    print(f"instance: {spec.num_sources} sources, {spec.num_destinations} "
+          f"destinations, {inst.nnz} eligible pairs")
+
+    # 2. pack into the TPU bucketed-ELL layout + Jacobi row normalization
+    packed = bucketize(inst)
+    scaled, _ = normalize_rows(packed)
+    print("buckets:", [(b.length, b.rows) for b in scaled.buckets])
+
+    # 3. solve: accelerated dual ascent with the paper's gamma continuation
+    obj = MatchingObjective(scaled)
+    res = Maximizer(obj, MaximizerConfig(iters_per_stage=300)).solve()
+    print(f"dual objective g = {float(res.g):.4f}  "
+          f"(sigma_max^2 = {float(res.sigma_sq):.3f})")
+
+    # 4. recover and check the primal
+    x = unpack_primal(packed, res.x_slabs)
+    matched_value = -float(np.dot(inst.cost, x))
+    viol = float(res.stats[-1].max_violation[-1])
+    print(f"matched value = {matched_value:.4f}, max violation = {viol:.2e}")
+    print(f"assignment mass per source (mean) = {x.sum() / spec.num_sources:.3f}")
+
+
+if __name__ == "__main__":
+    main()

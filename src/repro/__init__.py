@@ -1,0 +1,8 @@
+"""repro: Large-Scale Regularized Matching on TPU Pods.
+
+JAX/Pallas reproduction of Rahmattalabi et al. (CS.DC 2026) — distributed
+ridge-regularized matching LP solver — plus the assigned 10-architecture LM
+pool on the same multi-pod substrate.  See README.md / DESIGN.md.
+"""
+
+__version__ = "1.0.0"

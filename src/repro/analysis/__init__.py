@@ -1,0 +1,11 @@
+"""Compiled-artifact analysis: HLO collective stats and roofline terms."""
+from repro.analysis.hlo_stats import collective_stats, parse_shape_bytes
+from repro.analysis.roofline import RooflineTerms, roofline_from_stats, V5E
+
+__all__ = [
+    "collective_stats",
+    "parse_shape_bytes",
+    "RooflineTerms",
+    "roofline_from_stats",
+    "V5E",
+]

@@ -1,0 +1,213 @@
+"""Parse collective communication out of compiled (post-SPMD) HLO text.
+
+cost_analysis() does not expose collective bytes, so we parse
+compiled.as_text(): every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op contributes its *operand* bytes (the
+payload entering the network on each device).  Shapes of named operands are
+resolved from their defining lines; `-start` variants are counted once and
+`-done` lines skipped.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Optional
+
+__all__ = ["parse_shape_bytes", "collective_stats"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^)]*?\)?)\s+[\w\-]+\(")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\((.*?)\)",
+)
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _computations(hlo_text: str) -> dict[str, list[str]]:
+    """Split HLO text into named computations -> list of body lines.
+
+    Computation headers sit at column 0: `[ENTRY ]%name (args...) -> type {`
+    (args may contain nested tuple parens, so match on position + `{`/`->`
+    instead of balancing).
+    """
+    comps: dict[str, list[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{") and "->" in line:
+            head = line.split("(", 1)[0].strip()
+            if head.startswith("ENTRY"):
+                head = head[len("ENTRY"):].strip()
+            cur = head.lstrip("%").strip()
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Trip count of a lax.scan/while: the constant in the LT compare."""
+    consts = {}
+    for line in cond_lines:
+        m = re.match(r"\s*%?([\w\.\-]+)\s*=\s*\w+\[\]\s+constant\((\d+)\)", line)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for line in cond_lines:
+        if "compare(" in line and "direction=LT" in line:
+            for name in re.findall(r"%([\w\.\-]+)", line.split("compare(")[1]):
+                if name in consts:
+                    return consts[name]
+    # fall back: any constant in the condition
+    return max(consts.values()) if consts else 1
+
+
+def loop_multipliers(hlo_text: str) -> dict[str, int]:
+    """Execution-count multiplier per computation (nested while loops).
+
+    XLA's cost_analysis counts each computation once; collectives inside a
+    lax.scan body execute trip_count times per step.  This walks while ops,
+    reads trip counts from their condition computations, and propagates
+    multipliers down the (acyclic) computation references.
+    """
+    comps = _computations(hlo_text)
+    # while ops: (parent_comp, body, cond)
+    whiles = []
+    for parent, lines in comps.items():
+        for line in lines:
+            if " while(" in line or "while(" in line.lstrip()[:70]:
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                if mb and mc:
+                    whiles.append((parent, mb.group(1), mc.group(1)))
+    mult: dict[str, int] = {name: 1 for name in comps}
+    # iterate to fixpoint (nesting depth is small)
+    for _ in range(8):
+        changed = False
+        for parent, body, cond in whiles:
+            t = _trip_count(comps.get(cond, []))
+            want = mult.get(parent, 1) * max(t, 1)
+            if mult.get(body, 1) != want:
+                mult[body] = want
+                mult[cond] = want
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def collective_stats(hlo_text: str, loop_aware: bool = False) -> dict:
+    """Per-kind collective op counts and payload bytes (per device).
+
+    loop_aware=True multiplies collectives inside while/scan bodies by their
+    trip counts (XLA statics count each body once).
+
+    Returns {"counts": {kind: n}, "bytes": {kind: B}, "total_bytes": B,
+             "ops": [(kind, bytes, result_shape)]}.
+    """
+    if loop_aware:
+        return _collective_stats_loop_aware(hlo_text)
+    # name -> result shape string (first token after '=')
+    shapes: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        head, _, rest = line.partition("=")
+        name = head.strip().lstrip("%").replace("ROOT", "").strip()
+        rest = rest.strip()
+        # result shape = leading type expression
+        m = re.match(r"(\([^)]*\)|[\w\[\],]+)", rest)
+        if m and name:
+            shapes[name] = m.group(1)
+
+    counts: dict[str, int] = defaultdict(int)
+    byts: dict[str, int] = defaultdict(int)
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        _, result_shape, kind, start, operands = m.groups()
+        counts[kind] += 1
+        # operand bytes: resolve %names; fall back to the result shape
+        b = 0
+        for op_name in re.findall(r"%([\w\.\-]+)", operands):
+            b += parse_shape_bytes(shapes.get(op_name, ""))
+        if b == 0:
+            b = parse_shape_bytes(result_shape)
+        byts[kind] += b
+        ops.append((kind, b, result_shape.strip()))
+    return {
+        "counts": dict(counts),
+        "bytes": dict(byts),
+        "total_bytes": int(sum(byts.values())),
+        "ops": ops,
+    }
+
+
+def _collective_stats_loop_aware(hlo_text: str) -> dict:
+    comps = _computations(hlo_text)
+    mult = loop_multipliers(hlo_text)
+    # resolve result shapes globally (operand lookup)
+    shapes: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        head, _, rest = line.partition("=")
+        name = head.strip().lstrip("%").replace("ROOT", "").strip()
+        rest = rest.strip()
+        m = re.match(r"(\([^)]*\)|[\w\[\],]+)", rest)
+        if m and name:
+            shapes[name] = m.group(1)
+
+    counts: dict[str, int] = defaultdict(int)
+    byts: dict[str, int] = defaultdict(int)
+    ops = []
+    for comp, lines in comps.items():
+        k = mult.get(comp, 1)
+        for line in lines:
+            m = _COLL_RE.match(line)
+            if not m:
+                continue
+            _, result_shape, kind, start, operands = m.groups()
+            b = 0
+            for op_name in re.findall(r"%([\w\.\-]+)", operands):
+                b += parse_shape_bytes(shapes.get(op_name, ""))
+            if b == 0:
+                b = parse_shape_bytes(result_shape)
+            counts[kind] += k
+            byts[kind] += b * k
+            ops.append((kind, b * k, result_shape.strip()))
+    return {
+        "counts": dict(counts),
+        "bytes": dict(byts),
+        "total_bytes": int(sum(byts.values())),
+        "ops": ops,
+    }

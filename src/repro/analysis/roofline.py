@@ -1,0 +1,102 @@
+"""Three-term roofline model from compiled dry-run artifacts (TPU v5e target).
+
+    compute    = HLO_FLOPs_global   / (chips * peak_FLOP/s)
+    memory     = HLO_bytes_global   / (chips * HBM_bw)
+    collective = collective_bytes_global / (chips * link_bw)
+
+cost_analysis() on a partitioned module reports *per-device* numbers, so
+global = per_device * chips; the collective parser is also per-device.  The
+dominant term is the bottleneck; roofline fraction = dominant / sum (how close
+the dominant resource is to being the only cost, i.e. perfect overlap), and
+MODEL_FLOPS/HLO_FLOPs catches remat/causal/dispatch redundancy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["HW", "V5E", "RooflineTerms", "roofline_from_stats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float  # per chip, bf16
+    hbm_bw: float  # bytes/s per chip
+    link_bw: float  # bytes/s per chip (ICI)
+
+
+V5E = HW(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops: Optional[float] = None  # 6*N*D (or 6*N_active*D)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if self.model_flops is None or self.flops_per_device <= 0:
+            return None
+        return self.model_flops / (self.flops_per_device * self.chips)
+
+    @property
+    def mfu_bound(self) -> Optional[float]:
+        """Model-FLOPs utilisation if the dominant term were the runtime."""
+        if self.model_flops is None or self.bound_s <= 0:
+            return None
+        hw_flops = self.flops_per_device * self.chips / max(self.compute_s, 1e-30)
+        return self.model_flops / (self.bound_s * hw_flops)
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def roofline_from_stats(
+    flops_per_device: float,
+    bytes_per_device: float,
+    coll_bytes_per_device: float,
+    chips: int,
+    hw: HW = V5E,
+    model_flops: Optional[float] = None,
+) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_per_device / hw.peak_flops,
+        memory_s=bytes_per_device / hw.hbm_bw,
+        collective_s=coll_bytes_per_device / hw.link_bw,
+        chips=chips,
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        coll_bytes_per_device=coll_bytes_per_device,
+        model_flops=model_flops,
+    )

@@ -1,0 +1,4 @@
+"""Fault-tolerant sharded checkpointing."""
+from repro.checkpoint.manager import CheckpointManager, latest_step
+
+__all__ = ["CheckpointManager", "latest_step"]

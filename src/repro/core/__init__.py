@@ -1,0 +1,66 @@
+"""The paper's primary contribution: ridge-regularized matching LP solver.
+
+Operator-centric programming model (paper Table 1 / §5):
+  ObjectiveFunction -> `MatchingObjective`      (objective.py)
+  ProjectionMap     -> `UnitSimplexProjection`, `BoxProjection`,
+                       `BoxCutProjection`       (projections.py)
+  Maximizer         -> `Maximizer` (single device, maximizer.py) and
+                       `DistributedMaximizer` (column-sharded, sharding.py)
+
+Plus: gamma-stability control (stability.py) and the unstructured PDHG
+baseline the paper compares against (pdhg.py).
+"""
+from repro.core.objective import MatchingObjective, DualEval, normalize_rows
+from repro.core.projections import (
+    ProjectionMap,
+    UnitSimplexProjection,
+    BoxProjection,
+    BoxCutProjection,
+    project_simplex,
+    project_box,
+    project_box_cut,
+)
+from repro.core.maximizer import (
+    Maximizer,
+    MaximizerConfig,
+    SolveResult,
+    StageStats,
+    PAPER_GAMMA_SCHEDULE,
+)
+from repro.core.sharding import (
+    DistConfig,
+    DistributedMaximizer,
+    shard_instance,
+    instance_pspecs,
+)
+from repro.core.stability import drift_bound, primal_drift, RecurringSolver
+from repro.core.pdhg import COOLP, PDHGConfig, solve_pdhg, from_edge_list
+
+__all__ = [
+    "MatchingObjective",
+    "DualEval",
+    "normalize_rows",
+    "ProjectionMap",
+    "UnitSimplexProjection",
+    "BoxProjection",
+    "BoxCutProjection",
+    "project_simplex",
+    "project_box",
+    "project_box_cut",
+    "Maximizer",
+    "MaximizerConfig",
+    "SolveResult",
+    "StageStats",
+    "PAPER_GAMMA_SCHEDULE",
+    "DistConfig",
+    "DistributedMaximizer",
+    "shard_instance",
+    "instance_pspecs",
+    "drift_bound",
+    "primal_drift",
+    "RecurringSolver",
+    "COOLP",
+    "PDHGConfig",
+    "solve_pdhg",
+    "from_edge_list",
+]

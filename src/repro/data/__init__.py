@@ -1,0 +1,4 @@
+"""Data pipeline substrate."""
+from repro.data.pipeline import SyntheticLMData
+
+__all__ = ["SyntheticLMData"]

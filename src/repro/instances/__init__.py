@@ -1,0 +1,30 @@
+"""Synthetic matching-LP instances (paper Appendix A) and TPU-native packing.
+
+The paper stores the coupling matrix in CSC with one column per source.  On TPU
+we use the equivalent *bucketed ELL* layout (`buckets.py`): per length-bucket
+dense slabs of destination indices / coefficients, which simultaneously realises
+the paper's CSC compactness (§4.1) and its batched-projection bucketing (§4.2).
+"""
+from repro.instances.generator import (
+    MatchingInstanceSpec,
+    generate_matching_instance,
+    EdgeListInstance,
+)
+from repro.instances.buckets import (
+    Bucket,
+    BucketedInstance,
+    bucketize,
+    pack_single_slab,
+    unpack_primal,
+)
+
+__all__ = [
+    "MatchingInstanceSpec",
+    "generate_matching_instance",
+    "EdgeListInstance",
+    "Bucket",
+    "BucketedInstance",
+    "bucketize",
+    "pack_single_slab",
+    "unpack_primal",
+]

@@ -1,0 +1,232 @@
+"""Bucketed-ELL packing of matching LPs — the TPU analogue of the paper's §4.1+§4.2.
+
+The paper stores A in CSC (one column per source) and separately buckets the
+per-source slices by length for batched projection.  On TPU both collapse into
+one structure: sources whose eligible-degree d lies in (2^{t-1}, 2^t] are packed
+into a dense slab of width L_t = 2^t.  Each bucket is a fixed-shape set of
+arrays (gather/segment-sum friendly, shardable along rows); padding within a
+bucket is bounded by 2x, exactly the paper's bound, and the number of distinct
+kernel launches is 1 + floor(log2 s_max), exactly the paper's launch count.
+
+Layout per bucket (n rows = sources, L = slab width):
+  idx   [n, L] int32  destination id of each eligible edge (0 for padding)
+  coeff [m, n, L] f32 constraint coefficient per family    (0 for padding)
+  cost  [n, L] f32    minimisation cost c_ij               (0 for padding)
+  mask  [n, L] f32    1.0 for real edges, 0.0 for padding
+
+Rows are padded up to a multiple of ``shard_multiple`` so `shard_map` sees
+equal per-device shapes; padded rows are all-mask-zero and contribute exact
+zeros to gradients.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import weakref
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.instances.generator import EdgeListInstance
+
+__all__ = [
+    "Bucket",
+    "BucketedInstance",
+    "bucketize",
+    "pack_single_slab",
+    "unpack_primal",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Bucket:
+    idx: jax.Array | np.ndarray  # [n, L] int32
+    coeff: jax.Array | np.ndarray  # [m, n, L] f32
+    cost: jax.Array | np.ndarray  # [n, L] f32
+    mask: jax.Array | np.ndarray  # [n, L] f32
+    length: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def rows(self) -> int:
+        return int(self.idx.shape[0])
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BucketedInstance:
+    buckets: tuple[Bucket, ...]
+    rhs: jax.Array | np.ndarray  # [m * J] f32
+    num_sources: int = dataclasses.field(metadata=dict(static=True))
+    num_destinations: int = dataclasses.field(metadata=dict(static=True))
+    num_families: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def dual_dim(self) -> int:
+        return self.num_families * self.num_destinations
+
+    @property
+    def nnz(self) -> int:
+        return int(sum(float(np.sum(np.asarray(b.mask))) for b in self.buckets))
+
+    def row_norms_sq(self) -> np.ndarray:
+        """||A_r||_2^2 per coupling row r = k*J + j (for Jacobi / Lemma B.1)."""
+        m, J = self.num_families, self.num_destinations
+        out = np.zeros(m * J)
+        for b in self.buckets:
+            idx = np.asarray(b.idx)
+            coeff = np.asarray(b.coeff)
+            mask = np.asarray(b.mask)
+            for k in range(m):
+                np.add.at(out, k * J + idx.ravel(), (coeff[k] ** 2 * mask).ravel())
+        return out
+
+    def shape_dtype_structs(self) -> "BucketedInstance":
+        """ShapeDtypeStruct twin of this instance (for .lower() dry-runs)."""
+        as_sds = lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
+        return jax.tree.map(as_sds, self)
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _PackInfo:
+    """Host-side bookkeeping to map packed slabs back to edge order."""
+
+    # per bucket: source id per row (-1 pad), edge offset of each row's slice
+    source_ids: list[np.ndarray]
+    edge_starts: list[np.ndarray]
+    degrees: list[np.ndarray]
+
+
+_PACK_INFO: dict[int, _PackInfo] = {}
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (int(x) - 1).bit_length())
+
+
+def _pad_rows(n: int, multiple: int) -> int:
+    return int(math.ceil(max(n, 1) / multiple) * multiple)
+
+
+def bucketize(
+    inst: EdgeListInstance,
+    *,
+    shard_multiple: int = 1,
+    min_length: int = 1,
+    max_length: Optional[int] = None,
+    dtype=np.float32,
+) -> BucketedInstance:
+    """Pack an edge list into the bucketed-ELL layout.
+
+    Edges in ``inst`` must be sorted by (source, destination) — the generator
+    guarantees this.  ``shard_multiple`` pads every bucket's row count so it
+    divides evenly across that many shards.
+    """
+    spec = inst.spec
+    I, J, m = spec.num_sources, spec.num_destinations, spec.num_families
+
+    deg = np.bincount(inst.src, minlength=I)
+    active = np.flatnonzero(deg)  # sources with at least one edge
+    if active.size == 0:
+        raise ValueError("instance has no edges")
+    # edge offsets per source (sorted by src)
+    starts = np.zeros(I + 1, dtype=np.int64)
+    np.cumsum(deg, out=starts[1:])
+
+    max_deg = int(deg.max())
+    cap = _next_pow2(max_deg)
+    if max_length is not None:
+        if cap > max_length:
+            raise ValueError(
+                f"max degree {max_deg} exceeds max bucket length {max_length}"
+            )
+    lengths = []
+    L = max(1, _next_pow2(min_length))
+    cap = max(cap, L)
+    while L <= cap:
+        lengths.append(L)
+        L *= 2
+    # bucket index per active source: smallest L >= degree, but >= min length
+    b_of = np.searchsorted(np.asarray(lengths), deg[active])
+
+    buckets: list[Bucket] = []
+    info = _PackInfo(source_ids=[], edge_starts=[], degrees=[])
+    for t, Lt in enumerate(lengths):
+        rows_src = active[b_of == t]
+        n = _pad_rows(rows_src.size, shard_multiple)
+        idx = np.zeros((n, Lt), dtype=np.int32)
+        coeff = np.zeros((m, n, Lt), dtype=dtype)
+        cost = np.zeros((n, Lt), dtype=dtype)
+        mask = np.zeros((n, Lt), dtype=dtype)
+        d = deg[rows_src]
+        st = starts[rows_src]
+        # vectorised slab fill: flat positions of each (row, within-slice) pair
+        if rows_src.size:
+            r = np.repeat(np.arange(rows_src.size), d)
+            o = np.concatenate([np.arange(k) for k in d]) if d.size else np.empty(0, int)
+            e = np.repeat(st, d) + o
+            idx[r, o] = inst.dst[e]
+            cost[r, o] = inst.cost[e]
+            mask[r, o] = 1.0
+            for k in range(m):
+                coeff[k, r, o] = inst.coeff[k, e]
+        buckets.append(
+            Bucket(idx=idx, coeff=coeff, cost=cost, mask=mask, length=Lt)
+        )
+        sid = np.full(n, -1, dtype=np.int64)
+        sid[: rows_src.size] = rows_src
+        info.source_ids.append(sid)
+        info.edge_starts.append(st)
+        info.degrees.append(d)
+
+    out = BucketedInstance(
+        buckets=tuple(buckets),
+        rhs=inst.rhs.astype(dtype),
+        num_sources=I,
+        num_destinations=J,
+        num_families=m,
+    )
+    _PACK_INFO[id(out)] = info
+    weakref.finalize(out, _PACK_INFO.pop, id(out), None)
+    return out
+
+
+def pack_single_slab(
+    inst: EdgeListInstance, *, shard_multiple: int = 1, dtype=np.float32
+) -> BucketedInstance:
+    """The paper's `batching=False` baseline: one slab of width next_pow2(s_max).
+
+    Used by benchmarks/fig2_bucketing.py to reproduce Figure 2 (padding waste of
+    the single-slab layout vs geometric bucketing).
+    """
+    deg = np.bincount(inst.src, minlength=inst.spec.num_sources)
+    width = _next_pow2(int(deg.max()))
+    return bucketize(
+        inst, shard_multiple=shard_multiple, min_length=width, dtype=dtype
+    )
+
+
+def unpack_primal(
+    packed: BucketedInstance, x_slabs: Sequence[np.ndarray | jax.Array]
+) -> np.ndarray:
+    """Scatter per-bucket primal slabs back to edge order (sorted by src,dst)."""
+    info = _PACK_INFO.get(id(packed))
+    if info is None:
+        raise KeyError("unpack_primal: packing info not found for this instance")
+    nnz = int(sum(d.sum() for d in info.degrees))
+    x_edges = np.zeros(nnz)
+    for bi, slab in enumerate(x_slabs):
+        slab = np.asarray(slab)
+        d = info.degrees[bi]
+        st = info.edge_starts[bi]
+        if d.size == 0:
+            continue
+        r = np.repeat(np.arange(d.size), d)
+        o = np.concatenate([np.arange(k) for k in d])
+        e = np.repeat(st, d) + o
+        x_edges[e] = slab[r, o]
+    return x_edges

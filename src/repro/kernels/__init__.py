@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+simplex_proj.py  fused Duchi simplex projection (paper §4.3): bitonic sort
+                 network + Hillis-Steele scan along lanes, VMEM-tiled.
+dual_primal.py   beyond-paper fusion of the whole primal step (eq. 3):
+                 gather(lam) -> axpy -> scale -> project in one kernel.
+ops.py           jit'd wrappers: block sizing, padding, bucket dispatch,
+                 >8192-width fallback, interpret/TPU switch.
+ref.py           pure-jnp oracles (the kernel tests' ground truth).
+
+Validated with interpret=True on CPU; BlockSpecs target TPU v5e VMEM.
+"""
+from repro.kernels.ops import fused_dual_primal, fused_project_simplex
+
+__all__ = ["fused_dual_primal", "fused_project_simplex"]

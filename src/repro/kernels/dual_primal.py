@@ -1,0 +1,125 @@
+"""Fused dual-primal Pallas kernel — beyond-paper fusion of the whole primal step.
+
+The paper's Triton kernel fuses only the projection (§4.3); the candidate
+z = -(A^T lam + c)/gamma is still materialised to global memory by separate
+gather/axpy kernels.  On TPU the dual vector lam (m*J fp32, ~40 KiB-4 MiB for
+production J) fits in VMEM, so the *entire* primal step (eq. 3)
+
+    x = Pi_simplex( -(gather(lam)[idx] . coeff + cost) / gamma )
+
+fuses into one kernel: lam is staged into VMEM once per grid step, the
+per-edge gather runs against VMEM, and the candidate tile never touches HBM.
+This removes one full slab round-trip (read z + write z = 8 bytes/edge) per
+iteration relative to the paper's fusion boundary — see EXPERIMENTS.md §Perf.
+
+The gather `lam2[k, idx]` uses dynamic indices from VMEM.  That lowers on
+recent Mosaic TPU (32-bit gather within a VMEM block); as with every kernel in
+this repo it is *validated* in interpret mode on CPU, and ops.py keeps the
+unfused reference path as a fallback switch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.simplex_proj import (
+    MAX_FUSED_LENGTH,
+    bitonic_sort_desc,
+    inclusive_scan,
+    _lane_iota,
+    _NEG,
+)
+
+__all__ = ["make_dual_primal_call"]
+
+
+def dual_primal_kernel_body(
+    idx_ref,  # [block, L] int32
+    coeff_ref,  # [m, block, L]
+    cost_ref,  # [block, L]
+    mask_ref,  # [block, L]
+    lam_ref,  # [m, J]  (whole dual vector in VMEM, replicated per grid step)
+    ginv_ref,  # [1, 1]  1/gamma (dynamic: continuation changes it per stage)
+    out_ref,  # [block, L]
+    *,
+    radius: float,
+    inequality: bool,
+):
+    idx = idx_ref[...]
+    cost = cost_ref[...].astype(jnp.float32)
+    mask = mask_ref[...].astype(jnp.float32)
+    m = coeff_ref.shape[0]
+
+    # gather + axpy: A^T lam restricted to this tile
+    atl = jnp.zeros_like(cost)
+    for k in range(m):  # m is tiny (constraint families); unrolled
+        lam_k = lam_ref[k, :]
+        atl = atl + coeff_ref[k].astype(jnp.float32) * jnp.take(
+            lam_k, idx, axis=0
+        )
+    v = -(atl + cost) * ginv_ref[0, 0].astype(jnp.float32)
+
+    # fused Duchi projection (same pipeline as simplex_proj kernel)
+    z = jnp.float32(radius)
+    vm = jnp.where(mask > 0, v, _NEG)
+    u = bitonic_sort_desc(vm)
+    css = inclusive_scan(u)
+    j = _lane_iota(v.shape).astype(jnp.float32) + 1.0
+    cond = u * j > css - z
+    rho = jnp.maximum(jnp.sum(cond.astype(jnp.float32), axis=-1, keepdims=True), 1.0)
+    css_rho = jnp.sum(jnp.where(j == rho, css, 0.0), axis=-1, keepdims=True)
+    theta = (css_rho - z) / rho
+    w_eq = jnp.maximum(vm - theta, 0.0) * mask
+    if inequality:
+        w0 = jnp.maximum(v, 0.0) * mask
+        feasible = jnp.sum(w0, axis=-1, keepdims=True) <= z
+        out = jnp.where(feasible, w0, w_eq)
+    else:
+        out = w_eq
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def make_dual_primal_call(
+    n_rows: int,
+    length: int,
+    num_families: int,
+    num_destinations: int,
+    block_rows: int,
+    dtype,
+    *,
+    radius: float = 1.0,
+    inequality: bool = True,
+    interpret: bool = True,
+):
+    """pallas_call for one bucket slab: x = Pi( -(A^T lam + c)/gamma ).
+
+    Arguments at call time: (idx, coeff, cost, mask, lam2, gamma_inv) with
+    lam2 = lam.reshape(m, J) staged whole into VMEM for every grid step and
+    gamma_inv a (1, 1) array (traced — continuation changes it per stage
+    without retracing).
+    """
+    assert n_rows % block_rows == 0
+    assert length <= MAX_FUSED_LENGTH
+    grid = (n_rows // block_rows,)
+    row_spec = pl.BlockSpec((block_rows, length), lambda i: (i, 0))
+    coeff_spec = pl.BlockSpec(
+        (num_families, block_rows, length), lambda i: (0, i, 0)
+    )
+    lam_spec = pl.BlockSpec(
+        (num_families, num_destinations), lambda i: (0, 0)
+    )
+    ginv_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    body = functools.partial(
+        dual_primal_kernel_body, radius=radius, inequality=inequality
+    )
+    return pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((n_rows, length), dtype),
+        grid=grid,
+        in_specs=[row_spec, coeff_spec, row_spec, row_spec, lam_spec, ginv_spec],
+        out_specs=row_spec,
+        interpret=interpret,
+    )

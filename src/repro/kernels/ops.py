@@ -1,0 +1,143 @@
+"""jit'd wrappers around the Pallas kernels (block sizing, padding, fallbacks).
+
+Responsibilities (mirrors the paper's dispatch policy, §4.3):
+  * pick `block_rows` so the VMEM working set stays bounded and row counts
+    stay register-shaped (multiples of 8 sublanes);
+  * pad row counts up to the block multiple, strip padding on the way out
+    (padded rows are mask-zero, so they project to exact zeros);
+  * fall back to the multi-op reference implementation for slab widths beyond
+    MAX_FUSED_LENGTH = 8192 or non-power-of-two widths — "beyond this limit,
+    execution falls back to the multi-launch implementation";
+  * `interpret=None` auto-selects: real Mosaic lowering on TPU backends,
+    interpret mode (Python execution of the same kernel body) on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.kernels.dual_primal import make_dual_primal_call
+from repro.kernels.simplex_proj import MAX_FUSED_LENGTH, make_simplex_call
+
+__all__ = [
+    "fused_project_simplex",
+    "fused_dual_primal",
+    "pick_block_rows",
+]
+
+# Budget for live fp32 tiles inside the kernel (~5 copies), kept well under
+# the ~16 MiB VMEM of TPU v5e: 4 MiB / (5 copies * 4 B) = ~200k elements.
+_VMEM_TILE_ELEMS = 1 << 17  # 128k fp32 elements per tile
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def pick_block_rows(n_rows: int, length: int) -> int:
+    """Rows per VMEM tile: 8-sublane aligned, tile <= _VMEM_TILE_ELEMS."""
+    max_rows = max(1, _VMEM_TILE_ELEMS // max(length, 1))
+    # round down to a multiple of 8 (sublane count), floor at 8
+    block = max(8, (max_rows // 8) * 8)
+    return min(block, max(8, n_rows))
+
+
+def _pad_rows(x: jax.Array, target: int) -> jax.Array:
+    pad = target - x.shape[0]
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths)
+
+
+def _use_interpret(interpret) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("radius", "inequality", "interpret")
+)
+def fused_project_simplex(
+    v: jax.Array,
+    mask: jax.Array,
+    *,
+    radius: float = 1.0,
+    inequality: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused Duchi simplex projection of slab rows (paper §4.3).
+
+    v, mask: [n, L].  Falls back to the reference pipeline when L is not a
+    power of two or exceeds MAX_FUSED_LENGTH.
+    """
+    n, L = v.shape
+    if not _is_pow2(L) or L > MAX_FUSED_LENGTH:
+        return kref.simplex_ref(v, mask, radius, inequality=inequality)
+    block = pick_block_rows(n, L)
+    n_pad = ((n + block - 1) // block) * block
+    call = make_simplex_call(
+        n_pad,
+        L,
+        block,
+        v.dtype,
+        radius=radius,
+        inequality=inequality,
+        interpret=_use_interpret(interpret),
+    )
+    out = call(_pad_rows(v, n_pad), _pad_rows(mask, n_pad))
+    return out[:n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_destinations", "radius", "inequality", "interpret"),
+)
+def fused_dual_primal(
+    idx: jax.Array,  # [n, L] int32
+    coeff: jax.Array,  # [m, n, L]
+    cost: jax.Array,  # [n, L]
+    mask: jax.Array,  # [n, L]
+    lam: jax.Array,  # [m * J]
+    gamma: jax.Array,  # scalar
+    *,
+    num_destinations: int,
+    radius: float = 1.0,
+    inequality: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Whole fused primal step  x = Pi( -(A^T lam + c)/gamma )  for one bucket."""
+    n, L = cost.shape
+    m = coeff.shape[0]
+    if not _is_pow2(L) or L > MAX_FUSED_LENGTH:
+        return kref.dual_primal_ref(
+            idx, coeff, cost, mask, lam, gamma, num_destinations,
+            radius, inequality=inequality,
+        )
+    block = pick_block_rows(n, L)
+    n_pad = ((n + block - 1) // block) * block
+    call = make_dual_primal_call(
+        n_pad,
+        L,
+        m,
+        num_destinations,
+        block,
+        cost.dtype,
+        radius=radius,
+        inequality=inequality,
+        interpret=_use_interpret(interpret),
+    )
+    ginv = (1.0 / gamma).astype(jnp.float32).reshape(1, 1)
+    out = call(
+        _pad_rows(idx, n_pad),
+        _pad_rows(coeff.swapaxes(0, 1), n_pad).swapaxes(0, 1),
+        _pad_rows(cost, n_pad),
+        _pad_rows(mask, n_pad),
+        lam.reshape(m, num_destinations),
+        ginv,
+    )
+    return out[:n]

@@ -1,0 +1,154 @@
+"""Fused simplex-projection Pallas kernel — TPU adaptation of the paper's §4.3.
+
+The paper fuses the Duchi pipeline into one Triton kernel where each *program*
+owns one column and sorts in registers.  That design leans on CUDA warp
+semantics; the TPU-native formulation instead processes a whole
+``(block_rows, L)`` VMEM tile per grid step and runs the sort as a **bitonic
+compare-exchange network along lanes**, data-parallel across rows on the VPU:
+
+  * bitonic sort (descending): log2(L)*(log2(L)+1)/2 compare-exchange stages,
+    each expressed as roll + elementwise min/max/where (no gather, no scatter,
+    no cross-lane divergence).  Bucket widths are powers of two by
+    construction (§4.2), so the network needs no padding logic.
+  * inclusive prefix sum: Hillis-Steele scan, log2(L) shifted adds.
+  * cutoff rho via a boolean reduction over the monotone Duchi condition,
+    threshold theta via a masked reduction, then subtract-and-clamp — all in
+    the same tile, nothing is materialised to HBM between stages.
+  * inequality early exit (paper: "in-kernel early exit"): feasible rows take
+    the clamp-only path, selected per row with a vector `where` (branchless —
+    on TPU a uniform early `return` would stall the pipeline anyway).
+
+Matching the paper's Triton kernel: fp32 internally, column lengths up to
+MAX_FUSED_LENGTH = 8192, multi-op fallback beyond (see ops.py).
+
+VMEM budget: the kernel keeps ~5 live (block_rows, L) fp32 tiles (input, mask,
+sorted, scan, output); ops.py picks block_rows so the working set stays under
+~4 MiB of the ~16 MiB VMEM, and rounds block_rows to the 8-sublane register
+shape.  All shapes are static; grid iterates over row blocks only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["simplex_kernel_body", "MAX_FUSED_LENGTH", "bitonic_sort_desc", "inclusive_scan"]
+
+MAX_FUSED_LENGTH = 8192
+_NEG = -1.0e30
+
+
+def _lane_iota(shape, dtype=jnp.int32):
+    return jax.lax.broadcasted_iota(dtype, shape, len(shape) - 1)
+
+
+def _roll(x: jax.Array, shift: int) -> jax.Array:
+    """Circular roll along lanes via two static slices (Pallas-friendly)."""
+    if shift == 0:
+        return x
+    L = x.shape[-1]
+    shift = shift % L
+    return jnp.concatenate([x[..., L - shift :], x[..., : L - shift]], axis=-1)
+
+
+def bitonic_sort_desc(x: jax.Array) -> jax.Array:
+    """Descending bitonic sort along the last axis (length must be a power of 2).
+
+    Every stage is roll + min/max/where over the whole tile: the partner of
+    lane i at substage j is i XOR j, reached by rolling left for lanes with
+    bit j clear and right for lanes with bit j set.
+    """
+    L = x.shape[-1]
+    assert L & (L - 1) == 0, f"bitonic sort needs power-of-2 length, got {L}"
+    if L == 1:
+        return x
+    iota = _lane_iota(x.shape)
+    log_l = L.bit_length() - 1
+    for k_exp in range(1, log_l + 1):
+        k = 1 << k_exp
+        for j_exp in range(k_exp - 1, -1, -1):
+            j = 1 << j_exp
+            partner = jnp.where((iota & j) == 0, _roll(x, -j), _roll(x, j))
+            mn = jnp.minimum(x, partner)
+            mx = jnp.maximum(x, partner)
+            # descending overall: invert the classic ascending direction bit.
+            # (At the final merge k == L the bit is always clear, making every
+            # comparison descending — the whole row comes out descending.)
+            asc = (iota & k) != 0
+            lower = (iota & j) == 0
+            x = jnp.where(lower == asc, mn, mx)
+    return x
+
+
+def inclusive_scan(x: jax.Array) -> jax.Array:
+    """Hillis-Steele inclusive prefix sum along lanes (log2 L shifted adds)."""
+    L = x.shape[-1]
+    iota = _lane_iota(x.shape)
+    s = 1
+    while s < L:
+        shifted = jnp.where(iota >= s, _roll(x, s), 0.0)
+        x = x + shifted
+        s *= 2
+    return x
+
+
+def simplex_kernel_body(
+    v_ref, mask_ref, out_ref, *, radius: float, inequality: bool
+):
+    """Kernel body: one (block_rows, L) tile, entire Duchi pipeline fused."""
+    v = v_ref[...].astype(jnp.float32)
+    mask = mask_ref[...].astype(jnp.float32)
+    L = v.shape[-1]
+    z = jnp.float32(radius)
+
+    vm = jnp.where(mask > 0, v, _NEG)
+    u = bitonic_sort_desc(vm)
+    css = inclusive_scan(u)
+    j = (_lane_iota(v.shape).astype(jnp.float32)) + 1.0
+    cond = u * j > css - z  # monotone Duchi condition
+    rho = jnp.maximum(jnp.sum(cond.astype(jnp.float32), axis=-1, keepdims=True), 1.0)
+    css_rho = jnp.sum(jnp.where(j == rho, css, 0.0), axis=-1, keepdims=True)
+    theta = (css_rho - z) / rho
+    w_eq = jnp.maximum(vm - theta, 0.0) * mask
+    if inequality:
+        w0 = jnp.maximum(v, 0.0) * mask
+        feasible = jnp.sum(w0, axis=-1, keepdims=True) <= z
+        out = jnp.where(feasible, w0, w_eq)
+    else:
+        out = w_eq
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def make_simplex_call(
+    n_rows: int,
+    length: int,
+    block_rows: int,
+    dtype,
+    *,
+    radius: float = 1.0,
+    inequality: bool = True,
+    interpret: bool = True,
+):
+    """Build the pallas_call for an (n_rows, length) slab.
+
+    BlockSpec tiles the row dimension; each grid step owns a full-width
+    (block_rows, length) VMEM tile — the projection is a per-row reduction so
+    the lane dimension must stay unsplit.
+    """
+    assert n_rows % block_rows == 0
+    assert length <= MAX_FUSED_LENGTH
+    grid = (n_rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, length), lambda i: (i, 0))
+    body = functools.partial(
+        simplex_kernel_body, radius=radius, inequality=inequality
+    )
+    return pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((n_rows, length), dtype),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        interpret=interpret,
+    )

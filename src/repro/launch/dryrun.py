@@ -1,0 +1,346 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: for the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh, every
+cell's step function must .lower().compile() under its production shardings.
+The compiled artifact yields memory_analysis() (fits-in-HBM evidence) and
+cost_analysis() + parsed collective bytes (the §Roofline inputs).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single_pod
+  python -m repro.launch.dryrun --solver s100M-d10K --mesh multi_pod
+  python -m repro.launch.dryrun --all --jobs 6 --out results/dryrun
+(The XLA_FLAGS line above must run before any jax import; spawned --all
+workers inherit it through this module.)
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _mesh(mesh_name: str):
+    from repro.launch.mesh import make_production_mesh
+
+    return make_production_mesh(multi_pod=(mesh_name == "multi_pod"))
+
+
+def run_arch_cell(arch: str, shape_name: str, mesh_name: str,
+                  moe_groups: int = 0, kv_dtype: str = "") -> dict:
+    import dataclasses as _dc
+
+    from repro.analysis.hlo_stats import collective_stats
+    from repro.configs import SHAPES, get_config, input_specs, skip_reason
+    from repro.launch.mesh import default_profile
+    from repro.models.model import Model
+    from repro.serving.steps import lower_decode_step, lower_prefill
+    from repro.training.train_step import lower_train_step
+
+    cfg = get_config(arch)
+    if moe_groups and cfg.moe is not None:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, groups=moe_groups))
+    if kv_dtype:
+        cfg = _dc.replace(cfg, kv_cache_dtype=kv_dtype)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"cell": f"{arch}/{shape_name}/{mesh_name}", "status": "skip",
+                "reason": reason}
+    mesh = _mesh(mesh_name)
+    model = Model(cfg)
+    specs = input_specs(cfg, shape, model)
+    profile = default_profile(cfg, mesh)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        lowered = lower_train_step(cfg, specs, mesh, profile)
+    elif shape.kind == "prefill":
+        lowered = lower_prefill(cfg, specs, mesh, profile)
+    else:
+        lowered = lower_decode_step(cfg, specs, mesh, profile)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    print(compiled.memory_analysis())
+    print({k: v for k, v in ca.items() if k in ("flops", "bytes accessed", "transcendentals")})
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo, loop_aware=True)
+    coll_static = collective_stats(hlo)
+
+    from repro.analysis.flops_model import cell_cost
+
+    cost = cell_cost(cfg, shape)
+
+    n = model.param_count()
+    n_active = model.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence; 2*N per token + cache read
+        tokens = shape.global_batch
+        model_flops = 2.0 * n_active * tokens
+
+    return {
+        "cell": f"{arch}/{shape_name}/{mesh_name}",
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": mesh_name,
+        "chips": int(mesh.size),
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "params": n,
+        "active_params": n_active,
+        "model_flops": model_flops,
+        "hlo_flops_per_device": float(ca.get("flops", 0.0)),
+        "hlo_bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        # analytic totals (XLA statics count while bodies once; see
+        # analysis/flops_model.py + tests/test_flops_model.py validation)
+        "flops_global": cost.flops,
+        "bytes_global": cost.bytes,
+        "layer_fwd_flops": cost.layer_fwd_flops,
+        "extra_flops": cost.extra_flops,
+        "collectives": {"counts": coll["counts"], "bytes": coll["bytes"]},
+        "coll_bytes_per_device": coll["total_bytes"],
+        "coll_bytes_per_device_static": coll_static["total_bytes"],
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+    }
+
+
+def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
+                    compress="none", iters: int = 100,
+                    slab_dtype: str = "float32",
+                    fused_kernel: bool = False) -> dict:
+    from repro.analysis.hlo_stats import collective_stats
+    from repro.configs import LP_INSTANCES
+    from repro.core.maximizer import MaximizerConfig
+    from repro.core.sharding import DistConfig, DistributedMaximizer
+    from repro.instances.specs import solver_input_specs
+    from repro.launch.mesh import solver_axes
+
+    mesh = _mesh(mesh_name)
+    axes = solver_axes(mesh)
+    n_shards = int(mesh.size)
+    spec = LP_INSTANCES[inst_name]
+    inst = solver_input_specs(
+        spec["num_sources"], spec["num_destinations"], spec["num_families"],
+        spec["avg_degree"], shard_multiple=n_shards,
+        dtype=jnp.dtype(slab_dtype),
+    )
+    dm = DistributedMaximizer(
+        inst, mesh,
+        MaximizerConfig(iters_per_stage=iters),
+        DistConfig(axes=axes, comm_mode=comm_mode, compress=compress,
+                   fused_kernel=fused_kernel, kernel_interpret=True),
+    )
+    t0 = time.time()
+    lowered = dm.lower_stage()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    print(compiled.memory_analysis())
+    print({k: v for k, v in ca.items() if k in ("flops", "bytes accessed")})
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo, loop_aware=True)
+    nnz = sum(
+        float(jnp.prod(jnp.asarray(b.cost.shape))) for b in inst.buckets
+    )  # upper bound incl. padding
+    # useful work per stage: 2 SpMVs (2 flops/nnz each) per iteration
+    model_flops = 4.0 * nnz * iters
+    return {
+        "cell": f"solver-{inst_name}/{comm_mode}+{compress}/{mesh_name}",
+        "arch": f"solver-{inst_name}",
+        "shape": f"stage{iters}",
+        "kind": "solver",
+        "mesh": mesh_name,
+        "chips": n_shards,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "model_flops": model_flops,
+        "hlo_flops_per_device": float(ca.get("flops", 0.0)),
+        "hlo_bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        # solver analytic per-stage totals: gather+axpy (2 flops/nnz-slot) and
+        # segment-sum (2) per SpMV, projection sort network ~log2(L)^2/2
+        # compare-exchanges, x iters; bytes: slabs read 2x + lam traffic
+        "flops_global": float(
+            iters * sum(
+                (8 + b.length.bit_length() ** 2)
+                * float(jnp.prod(jnp.asarray(b.cost.shape)))
+                for b in inst.buckets
+            )
+        ),
+        "bytes_global": float(
+            iters * sum(
+                # per slot per iteration: idx(4B) + coeff/cost/mask reads +
+                # x write + (unfused only) z write+read
+                (4 + 3 * jnp.dtype(slab_dtype).itemsize
+                 + jnp.dtype(slab_dtype).itemsize
+                 + (0 if fused_kernel else 8))
+                * float(jnp.prod(jnp.asarray(b.cost.shape)))
+                for b in inst.buckets
+            )
+        ),
+        "collectives": {"counts": coll["counts"], "bytes": coll["bytes"]},
+        "coll_bytes_per_device": coll["total_bytes"],
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+    }
+
+
+def _all_cells() -> list[tuple[str, str, str]]:
+    from repro.configs import ARCH_IDS, SHAPES
+
+    cells = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            for mesh in ("single_pod", "multi_pod"):
+                cells.append((arch, shape, mesh))
+    return cells
+
+
+def _driver(out_dir: str, jobs: int, solver: bool) -> int:
+    """Spawn one subprocess per cell (isolated compile, parallel workers)."""
+    os.makedirs(out_dir, exist_ok=True)
+    work = [("arch", a, s, m) for a, s, m in _all_cells()]
+    if solver:
+        from repro.configs import LP_INSTANCES
+
+        for name in LP_INSTANCES:
+            for mesh in ("single_pod", "multi_pod"):
+                work.append(("solver", name, "", mesh))
+    procs: list[tuple[subprocess.Popen, str]] = []
+    failures = 0
+
+    def launch(item):
+        kind = item[0]
+        if kind == "arch":
+            _, a, s, m = item
+            tag = f"{a}__{s}__{m}"
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+                   "--shape", s, "--mesh", m, "--out", out_dir]
+        else:
+            _, name, _, m = item
+            tag = f"solver-{name}__{m}"
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--solver",
+                   name, "--mesh", m, "--out", out_dir]
+        if os.path.exists(os.path.join(out_dir, tag + ".json")):
+            print("cached:", tag)
+            return None
+        log = open(os.path.join(out_dir, tag + ".log"), "w")
+        return (subprocess.Popen(cmd, stdout=log, stderr=subprocess.STDOUT), tag)
+
+    queue = list(work)
+    while queue or procs:
+        while queue and len(procs) < jobs:
+            p = launch(queue.pop(0))
+            if p is not None:
+                procs.append(p)
+        if not procs:
+            break
+        time.sleep(2)
+        still = []
+        for p, tag in procs:
+            if p.poll() is None:
+                still.append((p, tag))
+            else:
+                ok = p.returncode == 0
+                if not ok:
+                    failures += 1
+                print(("PASS " if ok else "FAIL ") + tag, flush=True)
+        procs = still
+    return failures
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--solver")
+    ap.add_argument("--comm-mode", default="psum")
+    ap.add_argument("--compress", default="none")
+    ap.add_argument("--mesh", default="single_pod",
+                    choices=["single_pod", "multi_pod"])
+    ap.add_argument("--moe-groups", type=int, default=0)
+    ap.add_argument("--kv-dtype", default="")
+    ap.add_argument("--slab-dtype", default="float32")
+    ap.add_argument("--fused-kernel", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for the output json")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--with-solver", action="store_true")
+    ap.add_argument("--jobs", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    if args.all:
+        return _driver(args.out, args.jobs, args.with_solver)
+
+    try:
+        if args.solver:
+            rec = run_solver_cell(args.solver, args.mesh,
+                                  comm_mode=args.comm_mode,
+                                  compress=args.compress,
+                                  slab_dtype=args.slab_dtype,
+                                  fused_kernel=args.fused_kernel)
+            tag = f"solver-{args.solver}__{args.mesh}"
+            if args.comm_mode != "psum" or args.compress != "none":
+                tag += f"__{args.comm_mode}-{args.compress}"
+            if args.tag:
+                tag += "__" + args.tag
+        else:
+            rec = run_arch_cell(args.arch, args.shape, args.mesh,
+                                moe_groups=args.moe_groups,
+                                kv_dtype=args.kv_dtype)
+            tag = f"{args.arch}__{args.shape}__{args.mesh}"
+            if args.tag:
+                tag += "__" + args.tag
+    except Exception:
+        traceback.print_exc()
+        return 1
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=2)
+    print(json.dumps({k: rec[k] for k in ("cell", "status") if k in rec}))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,49 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips ("pod", "data", "model") — the "pod" axis
+is pure data parallelism across the DCI; the solver's column shard flattens
+all axes into one logical wafer.
+
+Defined as functions (not module constants) so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.models.config import ModelConfig, ShardingProfile
+
+__all__ = [
+    "make_production_mesh",
+    "make_host_mesh",
+    "default_profile",
+    "solver_axes",
+]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(n: int | None = None, axis: str = "data"):
+    """Small CPU mesh over however many host devices exist (tests/benchmarks)."""
+    n = n or len(jax.devices())
+    return jax.make_mesh((n,), (axis,), axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def default_profile(cfg: ModelConfig, mesh) -> ShardingProfile:
+    """TP for <=10B-active archs; TP+FSDP for the >=70B ones."""
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    big = cfg.param_count() >= 3e10
+    return ShardingProfile(tp_axis="model", dp_axes=dp, fsdp=big)
+
+
+def solver_axes(mesh) -> tuple[str, ...]:
+    """The paper's column shard uses every mesh axis as one flat wafer."""
+    return tuple(mesh.axis_names)

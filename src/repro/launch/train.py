@@ -1,0 +1,51 @@
+"""LM training CLI over the assigned architecture pool.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --reduced \
+        --steps 100 --batch 8 --seq 128 [--ckpt-dir DIR]
+
+--reduced uses the smoke-scale config (CPU-runnable); full configs are for
+real pods (their distribution is proven by `repro.launch.dryrun`).
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--save-every", type=int, default=50)
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+
+    from repro.configs import get_config, get_reduced_config
+    from repro.data.pipeline import SyntheticLMData
+    from repro.models.model import Model
+    from repro.training.loop import TrainLoopConfig, train_loop
+    from repro.training.optimizer import AdamWConfig
+
+    cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    model = Model(cfg)
+    print(f"{cfg.name}: {model.param_count():,} params")
+    data = SyntheticLMData(cfg, batch=args.batch, seq=args.seq, seed=0)
+    state = train_loop(
+        model,
+        data,
+        AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                    total_steps=args.steps),
+        TrainLoopConfig(total_steps=args.steps, save_every=args.save_every),
+        ckpt_dir=args.ckpt_dir or None,
+    )
+    print(f"done at step {int(state.step)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

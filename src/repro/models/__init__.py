@@ -1,0 +1,23 @@
+"""Assigned architecture pool: 10 LM-family transformers as framework configs.
+
+Families: dense GQA decoders, MoE (top-k + shared experts, optional LP router
+from the paper's solver), MLA (DeepSeek), SSM (Mamba2 SSD), hybrid
+(Mamba2 + shared attention), encoder-decoder (audio), VLM backbone.
+"""
+from repro.models.config import (
+    ModelConfig,
+    MoEConfig,
+    MLAConfig,
+    SSMConfig,
+    ShardingProfile,
+)
+from repro.models.model import Model
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "MLAConfig",
+    "SSMConfig",
+    "ShardingProfile",
+    "Model",
+]

@@ -1,0 +1,410 @@
+"""Core transformer layers: norms, RoPE, GQA/MLA attention, MLPs.
+
+Pure functional style: `init_*` builds param dicts (fp32 masters), `apply_*`
+consumes them, casting to the compute dtype at use.  All sequence mixing is
+KV-chunked (flash-style online softmax over static chunk pairs) so activation
+memory stays O(S * chunk) rather than O(S^2) — required for the 32k prefill
+cells on 16 GiB/chip HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "init_dense",
+    "init_attention",
+    "apply_attention",
+    "apply_attention_decode",
+    "init_mlp",
+    "apply_mlp",
+    "init_mla",
+    "apply_mla",
+    "apply_mla_decode",
+    "chunked_attention",
+]
+
+_NEG = -1.0e30
+
+
+def _cast(x, dtype):
+    return x.astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(
+    x: jax.Array, positions: jax.Array, theta: float = 1e4
+) -> jax.Array:
+    """Rotary embedding on the last dim. x: [..., S, ..., D], positions: [B?, S]."""
+    D = x.shape[-1]
+    half = D // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    # broadcast angles over any head dims between S and D
+    while ang.ndim < x.ndim:
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, *, std: float = 0.02, bias=False):
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * std}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def apply_dense(p, x):
+    y = x @ _cast(p["w"], x.dtype)
+    if "b" in p:
+        y = y + _cast(p["b"], x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,  # [B, Sq, H, D]
+    k: jax.Array,  # [B, Sk, K, D]
+    v: jax.Array,  # [B, Sk, K, Dv]
+    *,
+    causal: bool,
+    chunk: int = 1024,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Online-softmax attention over static (q-chunk, kv-chunk) pairs.
+
+    Memory is O(Cq * Ck) per head per step instead of O(S^2); the scan carries
+    (m, l, acc) per query chunk.  GQA: H query heads grouped over K kv heads.
+    """
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    cq = min(chunk, Sq)
+    ck = min(chunk, Sk)
+    assert Sq % cq == 0 and Sk % ck == 0, (Sq, cq, Sk, ck)
+    nq, nk = Sq // cq, Sk // ck
+
+    qb = q.reshape(B, nq, cq, K, G, D)
+    kb = jnp.moveaxis(k.reshape(B, nk, ck, K, D), 1, 0)  # [nk, B, ck, K, D]
+    vb = jnp.moveaxis(v.reshape(B, nk, ck, K, Dv), 1, 0)
+
+    q_pos_base = jnp.arange(cq)
+    k_pos_base = jnp.arange(ck)
+
+    def q_step(_, qi_blk):
+        qi, qblk = qi_blk  # qblk [B, cq, K, G, D]
+        q_pos = q_offset + qi * cq + q_pos_base  # [cq]
+
+        def kv_step(carry, kj_blks):
+            m, l, acc = carry
+            kj, kblk, vblk = kj_blks
+            s = jnp.einsum(
+                "bqkgd,bckd->bqkgc", qblk, kblk,
+                preferred_element_type=jnp.float32,
+            ) * scale  # [B, cq, K, G, ck]
+            if causal:
+                k_pos = kj * ck + k_pos_base
+                mask = q_pos[:, None] >= k_pos[None, :]  # [cq, ck]
+                s = jnp.where(mask[None, :, None, None, :], s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, cq, K, G), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, cq, K, G), jnp.float32)
+        a0 = jnp.zeros((B, cq, K, G, Dv), jnp.float32)
+        # nested remat = flash-attention backward: recompute the (cq x ck)
+        # score block per kv chunk instead of saving all of them (O(S^2)).
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0), (jnp.arange(nk), kb, vb)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(
+        q_step, None, (jnp.arange(nq), jnp.moveaxis(qb, 1, 0))
+    )
+    # blocks: [nq, B, cq, K, G, Dv] -> [B, Sq, H, Dv]
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, K, G, Dv)
+    return out.reshape(B, Sq, H, Dv)
+
+
+def decode_attention(
+    q: jax.Array,  # [B, 1, H, D]
+    k_cache: jax.Array,  # [B, S, K, D]
+    v_cache: jax.Array,  # [B, S, K, Dv]
+    pos: jax.Array,  # [] current position (number of valid cache entries - 1)
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly seq-sharded) KV cache.
+
+    Plain einsum + masked softmax: when the cache's S dim is sharded, XLA's
+    partitioner emits the distributed max/sum reductions (flash-decoding
+    combine) automatically.
+    """
+    B, _, H, D = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, K, G, D)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg) -> dict:
+    ks = jax.random.split(key, 5)
+    d, H, K, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": init_dense(ks[0], d, H * Dh, bias=cfg.qkv_bias),
+        "wk": init_dense(ks[1], d, K * Dh, bias=cfg.qkv_bias),
+        "wv": init_dense(ks[2], d, K * Dh, bias=cfg.qkv_bias),
+        "wo": init_dense(ks[3], H * Dh, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((Dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((Dh,), jnp.float32)
+    return p
+
+
+def _qkv(p, cfg, x, positions, use_rope: bool = True):
+    B, S, _ = x.shape
+    H, K, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = apply_dense(p["wq"], x).reshape(B, S, H, Dh)
+    k = apply_dense(p["wk"], x).reshape(B, S, K, Dh)
+    v = apply_dense(p["wv"], x).reshape(B, S, K, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rmsnorm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rmsnorm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply_attention(
+    p, cfg, x, positions, *, causal=True, q_offset=0,
+    kv: Optional[tuple] = None, use_rope: bool = True,
+):
+    """Full-sequence attention (train / prefill).  Returns (out, (k, v)).
+
+    kv=(k, v) switches to cross-attention against an encoder memory (no rope,
+    no causal mask).
+    """
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions, use_rope=use_rope and kv is None)
+    if kv is not None:  # cross-attention: keys/values from encoder memory
+        k, v = kv
+        causal = False
+    out = chunked_attention(
+        q, k, v, causal=causal, chunk=cfg.attn_chunk, q_offset=q_offset
+    )
+    return apply_dense(p["wo"], out.reshape(B, S, -1)), (k, v)
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-token-per-head absmax int8 quantization. x: [B, 1, K, D]."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0  # [B,1,K]
+    q = jnp.round(
+        x.astype(jnp.float32) / jnp.maximum(scale, 1e-8)[..., None]
+    ).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def apply_attention_decode(p, cfg, x, pos, cache):
+    """One-token step against a bf16 or int8 (quantized) KV cache.
+
+    bf16 cache:  {"k", "v"} [B,S,K,D]
+    int8 cache:  + {"k_scale", "v_scale"} [B,S,K] — per-token-per-head absmax
+                 scales; halves cache HBM traffic (EXPERIMENTS.md §Perf H3).
+    """
+    B = x.shape[0]
+    H, K, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, cfg, x, positions)
+    quant = cache["k"].dtype == jnp.int8
+    new_cache = {}
+    if quant:
+        k_q, k_s = quantize_kv(k_new)
+        v_q, v_s = quantize_kv(v_new)
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k_q, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v_q, (0, pos, 0, 0))
+        ks = jax.lax.dynamic_update_slice(cache["k_scale"], k_s, (0, pos, 0))
+        vs = jax.lax.dynamic_update_slice(cache["v_scale"], v_s, (0, pos, 0))
+        new_cache = {"k": k_cache, "v": v_cache, "k_scale": ks, "v_scale": vs}
+        k_deq = k_cache.astype(jnp.bfloat16) * ks[..., None].astype(jnp.bfloat16)
+        v_deq = v_cache.astype(jnp.bfloat16) * vs[..., None].astype(jnp.bfloat16)
+        out = decode_attention(q, k_deq, v_deq, pos)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0)
+        )
+        new_cache = {"k": k_cache, "v": v_cache}
+        out = decode_attention(q, k_cache, v_cache, pos)
+    return apply_dense(p["wo"], out.reshape(B, 1, -1)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, ff: int) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(ks[0], d, ff),
+        "w_up": init_dense(ks[1], d, ff),
+        "w_down": init_dense(ks[2], ff, d),
+    }
+
+
+def apply_mlp(p, x, mlp_type: str = "swiglu"):
+    g = apply_dense(p["w_gate"], x)
+    u = apply_dense(p["w_up"], x)
+    act = jax.nn.gelu(g) if mlp_type == "geglu" else jax.nn.silu(g)
+    return apply_dense(p["w_down"], act * u)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": init_dense(ks[0], d, m.q_lora_rank),
+        "q_norm": jnp.ones((m.q_lora_rank,), jnp.float32),
+        "wq_b": init_dense(ks[1], m.q_lora_rank, H * (dn + dr)),
+        "wkv_a": init_dense(ks[2], d, m.kv_lora_rank + dr),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "wkv_b": init_dense(ks[3], m.kv_lora_rank, H * (dn + dv)),
+        "wo": init_dense(ks[4], H * dv, d),
+    }
+
+
+def _mla_qkv(p, cfg, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    ql = rms_norm(apply_dense(p["wq_a"], x), p["q_norm"], cfg.rmsnorm_eps)
+    q = apply_dense(p["wq_b"], ql).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], rope(q[..., dn:], positions, cfg.rope_theta)
+    kv_a = apply_dense(p["wkv_a"], x)
+    latent = rms_norm(kv_a[..., : m.kv_lora_rank], p["kv_norm"], cfg.rmsnorm_eps)
+    k_rope = rope(
+        kv_a[..., m.kv_lora_rank:][:, :, None, :], positions, cfg.rope_theta
+    )  # [B,S,1,dr] shared across heads
+    return q_nope, q_rope, latent, k_rope
+
+
+def apply_mla(p, cfg, x, positions, *, q_offset=0):
+    """MLA for train/prefill: materialise per-head K/V from the latent."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q_nope, q_rope, latent, k_rope = _mla_qkv(p, cfg, x, positions)
+    kv = apply_dense(p["wkv_b"], latent).reshape(B, S, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], axis=-1
+    )
+    out = chunked_attention(
+        q, k, v, causal=True, chunk=cfg.attn_chunk, q_offset=q_offset,
+        scale=(dn + dr) ** -0.5,
+    )
+    return apply_dense(p["wo"], out.reshape(B, S, -1)), latent, k_rope
+
+
+def apply_mla_decode(p, cfg, x, pos, cache):
+    """Absorbed MLA decode: the cache stores only the compressed latent
+    [B, S, kv_lora + dr] (the 93% KV-cache reduction that motivates MLA).
+
+    score_h = q_nope_h' Wkv_b_k_h latent + q_rope_h' k_rope   (weight absorption)
+    out_h   = (attn @ latent) Wkv_b_v_h
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    r = m.kv_lora_rank
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, latent_new, k_rope_new = _mla_qkv(p, cfg, x, positions)
+    entry = jnp.concatenate(
+        [latent_new, k_rope_new[:, :, 0, :]], axis=-1
+    )  # [B,1,r+dr]
+    lat_cache = jax.lax.dynamic_update_slice(
+        cache["latent"], entry.astype(cache["latent"].dtype), (0, pos, 0)
+    )
+    latent, k_rope = lat_cache[..., :r], lat_cache[..., r:]
+    wkv_b = p["wkv_b"]["w"].reshape(r, H, dn + dv)
+    wk, wv = wkv_b[..., :dn], wkv_b[..., dn:]  # [r,H,dn], [r,H,dv]
+    # absorb: q_abs [B,H,r]
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wk.astype(x.dtype))
+    s = (
+        jnp.einsum("bhr,bsr->bhs", q_abs, latent.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], k_rope.astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    ) * (dn + dr) ** -0.5
+    S = latent.shape[1]
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, :], s, _NEG)
+    pw = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", pw.astype(x.dtype), latent.astype(x.dtype))
+    out = jnp.einsum("bhr,rhv->bhv", ctx, wv.astype(x.dtype))
+    return (
+        apply_dense(p["wo"], out.reshape(B, 1, -1)),
+        {"latent": lat_cache},
+    )

@@ -1,0 +1,762 @@
+"""Unified model builder: one functional Model for all assigned families.
+
+Families and their block stacks:
+  dense / vlm : [embed (+patch stub)] -> scan(attn+MLP blocks) -> head
+  moe         : prefix dense layer(s) -> scan(attn+MoE blocks) -> head
+                (deepseek-v2 uses MLA attention; kimi-k2 uses GQA)
+  ssm         : scan(Mamba2 SSD blocks)
+  hybrid      : scan(Mamba2 blocks with a *shared* attention block applied
+                every `attn_period` layers via lax.cond)
+  encdec      : encoder scan (bidirectional) + decoder scan (causal + cross)
+
+All stacks scan over stacked per-layer params (compact HLO independent of
+depth) with optional per-block remat.  Entry points:
+
+  init(key)                         -> params (fp32 masters)
+  loss(params, batch)               -> scalar LM loss      (train_* shapes)
+  prefill(params, batch)            -> (logits_last, cache) (prefill_* shapes)
+  decode_step(params, token, pos, cache) -> (logits, cache) (decode_*/long_*)
+  init_cache(batch, seq)            -> cache pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+
+__all__ = ["Model"]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        # Megatron-style sequence-parallel activation constraint: a
+        # NamedSharding for [B, S, d] hiddens (set by the step builders; None
+        # on single-device paths).  Applied to the residual stream between
+        # blocks so the per-layer saved carries shard over the tp axis —
+        # without it, scan-over-layers keeps L full-size activations per
+        # device and 32k-seq training cells blow past HBM.
+        self.act_sharding = None
+
+    def _c(self, h):
+        if self.act_sharding is not None and h.ndim == 3 and h.shape[1] > 1:
+            return jax.lax.with_sharding_constraint(h, self.act_sharding)
+        return h
+
+    def _lowp(self, params):
+        """Cast >=2D fp32 weights to the compute dtype ONCE, before the layer
+        stack.  With FSDP shardings the parameter all-gathers then move bf16
+        instead of fp32 — halving gather volume and peak temp memory.  Norm
+        scales and biases (1D) stay fp32."""
+        dt = _dtype(self.cfg)
+        cast = lambda x: x.astype(dt) if (x.dtype == jnp.float32 and x.ndim >= 2) else x
+        return jax.tree.map(cast, params)
+
+    # ------------------------------------------------------------------ init
+    def _init_block(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        if cfg.family == "ssm" or (cfg.family == "hybrid"):
+            return {
+                "ln": jnp.ones((cfg.d_model,), jnp.float32),
+                "mamba": S.init_mamba(ks[0], cfg),
+            }
+        p: dict[str, Any] = {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if cfg.mla is not None:
+            p["attn"] = L.init_mla(ks[0], cfg)
+        else:
+            p["attn"] = L.init_attention(ks[0], cfg)
+        if cfg.family == "moe":
+            p["moe"] = M.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+        return p
+
+    def _init_dense_block(self, key, ff: int) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        p = {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "mlp": L.init_mlp(ks[1], cfg.d_model, ff),
+        }
+        if cfg.mla is not None:
+            p["attn"] = L.init_mla(ks[0], cfg)
+        else:
+            p["attn"] = L.init_attention(ks[0], cfg)
+        return p
+
+    def _init_shared_attn(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": L.init_attention(ks[0], cfg),
+            "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+        }
+
+    def _init_xblock(self, key) -> dict:
+        """Encoder-decoder decoder block: self-attn + cross-attn + MLP."""
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln_x": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": L.init_attention(ks[0], cfg),
+            "xattn": L.init_attention(ks[1], cfg),
+            "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff),
+        }
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_embed, k_blocks, k_extra, k_head = jax.random.split(key, 4)
+        params: dict[str, Any] = {
+            "embed": jax.random.normal(
+                k_embed, (cfg.vocab_size, cfg.d_model), jnp.float32
+            ) * 0.01,
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size), jnp.float32)
+                * 0.01
+            )
+        if cfg.encdec:
+            ke, kd = jax.random.split(k_blocks)
+            params["enc_blocks"] = jax.vmap(self._init_dense_block, in_axes=(0, None))(
+                jax.random.split(ke, cfg.enc_layers), cfg.d_ff
+            )
+            params["dec_blocks"] = jax.vmap(self._init_xblock)(
+                jax.random.split(kd, cfg.num_layers)
+            )
+            return params
+        n_scan = cfg.num_layers - cfg.n_dense_layers
+        if cfg.n_dense_layers:
+            params["prefix"] = [
+                self._init_dense_block(k, cfg.dense_ff or cfg.d_ff)
+                for k in jax.random.split(k_extra, cfg.n_dense_layers)
+            ]
+        params["blocks"] = jax.vmap(self._init_block)(
+            jax.random.split(k_blocks, n_scan)
+        )
+        if cfg.family == "hybrid":
+            params["shared_attn"] = self._init_shared_attn(k_head)
+        return params
+
+    def param_count(self, active_only: bool = False) -> int:
+        shapes = jax.eval_shape(self.init, jax.random.key(0))
+        total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+        cfg = self.cfg
+        if active_only and cfg.moe is not None:
+            m = cfg.moe
+            n_moe_layers = cfg.num_layers - cfg.n_dense_layers
+            per_expert = 3 * cfg.d_model * m.expert_ff
+            routed = n_moe_layers * m.num_experts * per_expert
+            active_routed = n_moe_layers * m.top_k * per_expert
+            total = total - routed + active_routed
+        return total
+
+    # -------------------------------------------------------------- blocks
+    def _block_fwd(self, p, h, positions, q_offset=0):
+        cfg = self.cfg
+        if cfg.family in ("ssm", "hybrid"):
+            out, _ = S.apply_mamba(p["mamba"], cfg, L.rms_norm(h, p["ln"], cfg.rmsnorm_eps))
+            return h + out
+        hn = L.rms_norm(h, p["ln1"], cfg.rmsnorm_eps)
+        if cfg.mla is not None:
+            a, _, _ = L.apply_mla(p["attn"], cfg, hn, positions, q_offset=q_offset)
+        else:
+            a, _ = L.apply_attention(
+                p["attn"], cfg, hn, positions, causal=cfg.causal, q_offset=q_offset
+            )
+        h = h + a
+        hn = L.rms_norm(h, p["ln2"], cfg.rmsnorm_eps)
+        if cfg.family == "moe":
+            B, Sq, d = hn.shape
+            out = M.apply_moe(p["moe"], cfg, hn.reshape(B * Sq, d)).reshape(B, Sq, d)
+        else:
+            out = L.apply_mlp(p["mlp"], hn, cfg.mlp_type)
+        return h + out
+
+    def _dense_block_fwd(self, p, h, positions, *, causal=True, kv=None):
+        """Attention + plain MLP block (prefix layers, encoder blocks)."""
+        cfg = self.cfg
+        hn = L.rms_norm(h, p["ln1"], cfg.rmsnorm_eps)
+        if cfg.mla is not None:
+            a, _, _ = L.apply_mla(p["attn"], cfg, hn, positions)
+            kv_out = None
+        else:
+            a, kv_out = L.apply_attention(
+                p["attn"], cfg, hn, positions, causal=causal, kv=kv
+            )
+        h = h + a
+        hn = L.rms_norm(h, p["ln2"], cfg.rmsnorm_eps)
+        return h + L.apply_mlp(p["mlp"], hn, cfg.mlp_type), kv_out
+
+    def _shared_attn_fwd(self, p, h, positions):
+        cfg = self.cfg
+        hn = L.rms_norm(h, p["ln1"], cfg.rmsnorm_eps)
+        a, _ = L.apply_attention(p["attn"], cfg, hn, positions, causal=True)
+        h = h + a
+        hn = L.rms_norm(h, p["ln2"], cfg.rmsnorm_eps)
+        return h + L.apply_mlp(p["mlp"], hn, cfg.mlp_type)
+
+    # ------------------------------------------------------------- forward
+    def _stack(self, params, h, positions):
+        """Scan the main block stack over hidden states h [B,S,d]."""
+        cfg = self.cfg
+
+        def body(carry, xs):
+            p, idx = xs
+            hh = self._block_fwd(p, carry, positions)
+            if cfg.family == "hybrid" and cfg.attn_period:
+                hh = jax.lax.cond(
+                    (idx + 1) % cfg.attn_period == 0,
+                    lambda v: self._shared_attn_fwd(params["shared_attn"], v, positions),
+                    lambda v: v,
+                    hh,
+                )
+            return self._c(hh), None
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        n_scan = cfg.num_layers - cfg.n_dense_layers
+        h, _ = jax.lax.scan(fn, h, (params["blocks"], jnp.arange(n_scan)))
+        return h
+
+    def hidden_states(self, params, tokens, extra_embeds=None):
+        """Token (+frontend) embedding -> block stack -> final norm."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        h = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+        if extra_embeds is not None:  # vlm/audio stub: precomputed embeddings
+            h = jnp.concatenate([extra_embeds.astype(dt), h], axis=1)
+        B, Sq, _ = h.shape
+        h = self._c(h)
+        positions = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+        for p in params.get("prefix", []):
+            fwd = lambda pp, hh: self._c(self._dense_block_fwd(pp, hh, positions)[0])
+            h = jax.checkpoint(fwd)(p, h) if cfg.remat else fwd(p, h)
+        h = self._stack(params, h, positions)
+        return L.rms_norm(h, params["final_norm"], cfg.rmsnorm_eps)
+
+    def logits(self, params, h):
+        cfg = self.cfg
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return h @ w.astype(h.dtype)
+
+    def loss(self, params, batch: dict) -> jax.Array:
+        """batch: tokens [B,S], labels [B,S] (-100 = ignore), optional
+        'embeds' [B,P,d] frontend stub (labels then cover P+S positions)."""
+        cfg = self.cfg
+        params = self._lowp(params)
+        if cfg.encdec:
+            return self._encdec_loss(params, batch)
+        h = self.hidden_states(params, batch["tokens"], batch.get("embeds"))
+        logits = self._c(self.logits(params, h))  # [B, S-tp, V]: seq-sharded
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        picked = jnp.take_along_axis(
+            logits.astype(jnp.float32),
+            jnp.maximum(labels, 0)[..., None], axis=-1,
+        )[..., 0]
+        valid = (labels >= 0).astype(jnp.float32)
+        nll = (lse - picked) * valid
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1.0)
+
+    # --------------------------------------------------------- encoder-decoder
+    def _encode(self, params, embeds):
+        cfg = self.cfg
+        h = embeds.astype(_dtype(cfg))
+        B, Sq, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+
+        def body(carry, p):
+            out, _ = self._dense_block_fwd(p, carry, positions, causal=False)
+            return self._c(out), None
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        h, _ = jax.lax.scan(fn, h, params["enc_blocks"])
+        return h
+
+    def _decode_stack(self, params, h, positions, memory):
+        cfg = self.cfg
+
+        def body(carry, p):
+            hn = L.rms_norm(carry, p["ln1"], cfg.rmsnorm_eps)
+            a, _ = L.apply_attention(p["attn"], cfg, hn, positions, causal=True)
+            carry = carry + a
+            hn = L.rms_norm(carry, p["ln_x"], cfg.rmsnorm_eps)
+            mem_k, mem_v = self._cross_kv(p, memory)
+            a, _ = L.apply_attention(
+                p["xattn"], cfg, hn, positions, kv=(mem_k, mem_v)
+            )
+            carry = carry + a
+            hn = L.rms_norm(carry, p["ln2"], cfg.rmsnorm_eps)
+            return self._c(carry + L.apply_mlp(p["mlp"], hn, cfg.mlp_type)), None
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        h, _ = jax.lax.scan(fn, h, params["dec_blocks"])
+        return h
+
+    def _cross_kv(self, p, memory):
+        cfg = self.cfg
+        B, Sm, _ = memory.shape
+        K, Dh = cfg.num_kv_heads, cfg.head_dim
+        k = L.apply_dense(p["xattn"]["wk"], memory).reshape(B, Sm, K, Dh)
+        v = L.apply_dense(p["xattn"]["wv"], memory).reshape(B, Sm, K, Dh)
+        return k, v
+
+    def _encdec_loss(self, params, batch):
+        cfg = self.cfg
+        memory = self._encode(params, batch["embeds"])
+        tokens = batch["tokens"]
+        h = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+        B, Sq, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+        h = self._decode_stack(params, h, positions, memory)
+        h = L.rms_norm(h, params["final_norm"], cfg.rmsnorm_eps)
+        logits = self._c(self.logits(params, h))
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        picked = jnp.take_along_axis(
+            logits.astype(jnp.float32), jnp.maximum(labels, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = (labels >= 0).astype(jnp.float32)
+        return jnp.sum((lse - picked) * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+    # --------------------------------------------------------------- serving
+    def init_cache(self, batch: int, seq: int, dtype=None) -> dict:
+        cfg = self.cfg
+        if dtype is None:
+            dtype = jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.bfloat16
+        K, Dh = cfg.num_kv_heads, cfg.head_dim
+        n_scan = cfg.num_layers - cfg.n_dense_layers
+        if cfg.encdec:
+            return {
+                "self_k": jnp.zeros((cfg.num_layers, batch, seq, K, Dh), dtype),
+                "self_v": jnp.zeros((cfg.num_layers, batch, seq, K, Dh), dtype),
+                # cross K/V filled at prefill from the encoder memory
+                "cross_k": jnp.zeros((cfg.num_layers, batch, seq, K, Dh), dtype),
+                "cross_v": jnp.zeros((cfg.num_layers, batch, seq, K, Dh), dtype),
+            }
+        if cfg.family == "ssm":
+            s = cfg.ssm
+            H = s.num_heads(cfg.d_model)
+            conv_dim = s.d_inner(cfg.d_model) + 2 * s.n_groups * s.state_dim
+            return {
+                "h": jnp.zeros((n_scan, batch, H, s.head_dim, s.state_dim), jnp.float32),
+                "conv": jnp.zeros((n_scan, batch, s.conv_width - 1, conv_dim), dtype),
+            }
+        if cfg.family == "hybrid":
+            s = cfg.ssm
+            H = s.num_heads(cfg.d_model)
+            conv_dim = s.d_inner(cfg.d_model) + 2 * s.n_groups * s.state_dim
+            n_attn = n_scan // cfg.attn_period
+            out = {
+                "h": jnp.zeros((n_scan, batch, H, s.head_dim, s.state_dim), jnp.float32),
+                "conv": jnp.zeros(
+                    (n_scan, batch, s.conv_width - 1, conv_dim),
+                    jnp.bfloat16 if dtype == jnp.int8 else dtype,
+                ),
+                "attn_k": jnp.zeros((n_attn, batch, seq, K, Dh), dtype),
+                "attn_v": jnp.zeros((n_attn, batch, seq, K, Dh), dtype),
+            }
+            if dtype == jnp.int8:
+                out["attn_k_scale"] = jnp.zeros((n_attn, batch, seq, K), jnp.bfloat16)
+                out["attn_v_scale"] = jnp.zeros((n_attn, batch, seq, K), jnp.bfloat16)
+            return out
+        if cfg.mla is not None:
+            r = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+            cache = {"latent": jnp.zeros(
+                (n_scan, batch, seq, r),
+                jnp.bfloat16 if dtype == jnp.int8 else dtype,
+            )}
+        else:
+            cache = {
+                "k": jnp.zeros((n_scan, batch, seq, K, Dh), dtype),
+                "v": jnp.zeros((n_scan, batch, seq, K, Dh), dtype),
+            }
+            if dtype == jnp.int8:
+                cache["k_scale"] = jnp.zeros((n_scan, batch, seq, K), jnp.bfloat16)
+                cache["v_scale"] = jnp.zeros((n_scan, batch, seq, K), jnp.bfloat16)
+        if cfg.n_dense_layers:
+            if cfg.mla is not None:
+                r = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+                cache["prefix_latent"] = jnp.zeros(
+                    (cfg.n_dense_layers, batch, seq, r), dtype
+                )
+            else:
+                cache["prefix_k"] = jnp.zeros(
+                    (cfg.n_dense_layers, batch, seq, K, Dh), dtype
+                )
+                cache["prefix_v"] = jnp.zeros(
+                    (cfg.n_dense_layers, batch, seq, K, Dh), dtype
+                )
+        return cache
+
+    def decode_step(self, params, tokens, pos, cache):
+        """One-token decode. tokens [B,1], pos scalar. Returns (logits, cache)."""
+        cfg = self.cfg
+        params = self._lowp(params)
+        if cfg.encdec:
+            return self._encdec_decode_step(params, tokens, pos, cache)
+        dt = _dtype(cfg)
+        h = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+        B = h.shape[0]
+        new_cache = dict(cache)
+
+        for i, p in enumerate(params.get("prefix", [])):
+            hn = L.rms_norm(h, p["ln1"], cfg.rmsnorm_eps)
+            if cfg.mla is not None:
+                a, lc2 = L.apply_mla_decode(
+                    p["attn"], cfg, hn, pos,
+                    {"latent": cache["prefix_latent"][i]},
+                )
+                new_cache["prefix_latent"] = cache["prefix_latent"].at[i].set(lc2["latent"])
+            else:
+                lc = {"k": cache["prefix_k"][i], "v": cache["prefix_v"][i]}
+                a, lc2 = L.apply_attention_decode(p["attn"], cfg, hn, pos, lc)
+                new_cache["prefix_k"] = cache["prefix_k"].at[i].set(lc2["k"])
+                new_cache["prefix_v"] = cache["prefix_v"].at[i].set(lc2["v"])
+            h = h + a
+            hn = L.rms_norm(h, p["ln2"], cfg.rmsnorm_eps)
+            h = h + L.apply_mlp(p["mlp"], hn, cfg.mlp_type)
+
+        if cfg.family in ("ssm", "hybrid"):
+            h, new_cache = self._ssm_decode_scan(params, h, pos, cache, new_cache)
+        else:
+            h, new_cache = self._attn_decode_scan(params, h, pos, cache, new_cache)
+        h = L.rms_norm(h, params["final_norm"], cfg.rmsnorm_eps)
+        return self.logits(params, h), new_cache
+
+    def _attn_decode_scan(self, params, h, pos, cache, new_cache):
+        cfg = self.cfg
+
+        quant = cfg.kv_cache_dtype == "int8" and cfg.mla is None
+
+        def body(carry, xs):
+            if cfg.mla is not None:
+                p, lat = xs
+                hn = L.rms_norm(carry, p["ln1"], cfg.rmsnorm_eps)
+                a, c2 = L.apply_mla_decode(p["attn"], cfg, hn, pos, {"latent": lat})
+                carry = carry + a
+                ys = (c2["latent"],)
+            else:
+                if quant:
+                    p, k, v, ks, vs = xs
+                    lc = {"k": k, "v": v, "k_scale": ks, "v_scale": vs}
+                else:
+                    p, k, v = xs
+                    lc = {"k": k, "v": v}
+                hn = L.rms_norm(carry, p["ln1"], cfg.rmsnorm_eps)
+                a, c2 = L.apply_attention_decode(p["attn"], cfg, hn, pos, lc)
+                carry = carry + a
+                ys = (
+                    (c2["k"], c2["v"], c2["k_scale"], c2["v_scale"])
+                    if quant else (c2["k"], c2["v"])
+                )
+            hn = L.rms_norm(carry, p["ln2"], cfg.rmsnorm_eps)
+            if cfg.family == "moe":
+                B = hn.shape[0]
+                out = M.apply_moe(p["moe"], cfg, hn.reshape(B, -1)).reshape(B, 1, -1)
+            else:
+                out = L.apply_mlp(p["mlp"], hn, cfg.mlp_type)
+            return carry + out, ys
+
+        if cfg.mla is not None:
+            h, (lat,) = jax.lax.scan(body, h, (params["blocks"], cache["latent"]))
+            new_cache["latent"] = lat
+        elif quant:
+            h, (k, v, ks, vs) = jax.lax.scan(
+                body, h,
+                (params["blocks"], cache["k"], cache["v"],
+                 cache["k_scale"], cache["v_scale"]),
+            )
+            new_cache["k"], new_cache["v"] = k, v
+            new_cache["k_scale"], new_cache["v_scale"] = ks, vs
+        else:
+            h, (k, v) = jax.lax.scan(
+                body, h, (params["blocks"], cache["k"], cache["v"])
+            )
+            new_cache["k"], new_cache["v"] = k, v
+        return h, new_cache
+
+    def _ssm_decode_scan(self, params, h, pos, cache, new_cache):
+        cfg = self.cfg
+        hybrid = cfg.family == "hybrid"
+
+        def body(carry, xs):
+            p, hs, conv, idx = xs
+            hn = L.rms_norm(carry, p["ln"], cfg.rmsnorm_eps)
+            out, c2 = S.apply_mamba_decode(
+                p["mamba"], cfg, hn, {"h": hs, "conv": conv}
+            )
+            return carry + out, (c2["h"], c2["conv"])
+
+        n_scan = cfg.num_layers - cfg.n_dense_layers
+        if not hybrid:
+            h, (hs, conv) = jax.lax.scan(
+                body, h,
+                (params["blocks"], cache["h"], cache["conv"], jnp.arange(n_scan)),
+            )
+            new_cache["h"], new_cache["conv"] = hs, conv
+            return h, new_cache
+        # hybrid: interleave shared attention every attn_period layers.
+        # Scan over groups of attn_period mamba layers, then one shared-attn
+        # application with its own (per-application) KV cache slot.
+        period = cfg.attn_period
+        n_groups = n_scan // period
+        grp = lambda a: a.reshape((n_groups, period) + a.shape[1:])
+        blocks_g = jax.tree.map(grp, params["blocks"])
+        hs_g, conv_g = grp(cache["h"]), grp(cache["conv"])
+
+        quant = cfg.kv_cache_dtype == "int8"
+
+        def group_body(carry, xs):
+            if quant:
+                bg, hsg, convg, ak, av, aks, avs = xs
+                lc = {"k": ak, "v": av, "k_scale": aks, "v_scale": avs}
+            else:
+                bg, hsg, convg, ak, av = xs
+                lc = {"k": ak, "v": av}
+
+            def inner(c, ys):
+                p, hs_l, conv_l = ys
+                hn = L.rms_norm(c, p["ln"], cfg.rmsnorm_eps)
+                out, c2 = S.apply_mamba_decode(
+                    p["mamba"], cfg, hn, {"h": hs_l, "conv": conv_l}
+                )
+                return c + out, (c2["h"], c2["conv"])
+
+            c, (hs2, conv2) = jax.lax.scan(inner, carry, (bg, hsg, convg))
+            sp = params["shared_attn"]
+            hn = L.rms_norm(c, sp["ln1"], cfg.rmsnorm_eps)
+            a, c2 = L.apply_attention_decode(sp["attn"], cfg, hn, pos, lc)
+            c = c + a
+            hn = L.rms_norm(c, sp["ln2"], cfg.rmsnorm_eps)
+            c = c + L.apply_mlp(sp["mlp"], hn, cfg.mlp_type)
+            ys_out = (
+                (hs2, conv2, c2["k"], c2["v"], c2["k_scale"], c2["v_scale"])
+                if quant else (hs2, conv2, c2["k"], c2["v"])
+            )
+            return c, ys_out
+
+        if quant:
+            h, (hs2, conv2, ak, av, aks, avs) = jax.lax.scan(
+                group_body, h,
+                (blocks_g, hs_g, conv_g, cache["attn_k"], cache["attn_v"],
+                 cache["attn_k_scale"], cache["attn_v_scale"]),
+            )
+            new_cache["attn_k_scale"], new_cache["attn_v_scale"] = aks, avs
+        else:
+            h, (hs2, conv2, ak, av) = jax.lax.scan(
+                group_body, h,
+                (blocks_g, hs_g, conv_g, cache["attn_k"], cache["attn_v"]),
+            )
+        new_cache["h"] = hs2.reshape(cache["h"].shape)
+        new_cache["conv"] = conv2.reshape(cache["conv"].shape)
+        new_cache["attn_k"], new_cache["attn_v"] = ak, av
+        return h, new_cache
+
+    def _encdec_decode_step(self, params, tokens, pos, cache):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        h = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+
+        def body(carry, xs):
+            p, sk, sv, ck, cv = xs
+            hn = L.rms_norm(carry, p["ln1"], cfg.rmsnorm_eps)
+            a, c2 = L.apply_attention_decode(p["attn"], cfg, hn, pos, {"k": sk, "v": sv})
+            carry = carry + a
+            hn = L.rms_norm(carry, p["ln_x"], cfg.rmsnorm_eps)
+            B = hn.shape[0]
+            q = L.apply_dense(p["xattn"]["wq"], hn).reshape(
+                B, 1, cfg.num_heads, cfg.head_dim
+            )
+            a = L.decode_attention(q, ck, cv, jnp.asarray(ck.shape[1] - 1))
+            a = L.apply_dense(p["xattn"]["wo"], a.reshape(B, 1, -1))
+            carry = carry + a
+            hn = L.rms_norm(carry, p["ln2"], cfg.rmsnorm_eps)
+            return carry + L.apply_mlp(p["mlp"], hn, cfg.mlp_type), (c2["k"], c2["v"])
+
+        h, (sk, sv) = jax.lax.scan(
+            body, h,
+            (params["dec_blocks"], cache["self_k"], cache["self_v"],
+             cache["cross_k"], cache["cross_v"]),
+        )
+        cache = dict(cache)
+        cache["self_k"], cache["self_v"] = sk, sv
+        h = L.rms_norm(h, params["final_norm"], cfg.rmsnorm_eps)
+        return self.logits(params, h), cache
+
+    def prefill(self, params, batch, max_seq: Optional[int] = None):
+        """Prefill: full forward pass + cache population.
+
+        Returns (last-position logits, cache).  For encdec: encode the memory
+        and precompute cross K/V.  Attention families re-run K/V projections
+        per layer to fill the cache (single pass, no decode loop).
+        `max_seq` pads cache seq dims with headroom for subsequent decode.
+        """
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        params = self._lowp(params)
+        if cfg.encdec:
+            memory = self._encode(params, batch["embeds"])
+            B, Sm, _ = memory.shape
+
+            def xkv(p):
+                return self._cross_kv(p, memory)
+
+            ck, cv = jax.vmap(xkv)(params["dec_blocks"])
+            cache = {
+                "self_k": jnp.zeros(
+                    (cfg.num_layers, B, Sm, cfg.num_kv_heads, cfg.head_dim), dt
+                ),
+                "self_v": jnp.zeros(
+                    (cfg.num_layers, B, Sm, cfg.num_kv_heads, cfg.head_dim), dt
+                ),
+                "cross_k": ck.astype(dt),
+                "cross_v": cv.astype(dt),
+            }
+            tokens = batch["tokens"]  # decoder BOS prompt [B, 1]
+            h = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+            positions = jnp.zeros_like(tokens)
+            h = self._decode_stack(params, h, positions, memory)
+            h = L.rms_norm(h, params["final_norm"], cfg.rmsnorm_eps)
+            return self.logits(params, h), cache
+
+        if cfg.family in ("ssm", "hybrid"):
+            logits, cache = self._ssm_prefill(params, batch)
+            if max_seq is not None and "attn_k" in cache:
+                pad = max_seq - cache["attn_k"].shape[2]
+                if pad > 0:
+                    w = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+                    cache["attn_k"] = jnp.pad(cache["attn_k"], w)
+                    cache["attn_v"] = jnp.pad(cache["attn_v"], w)
+            return logits, cache
+
+        tokens = batch["tokens"]
+        extra = batch.get("embeds")
+        h = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+        if extra is not None:
+            h = jnp.concatenate([extra.astype(dt), h], axis=1)
+        B, Sq, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+        caches = []
+
+        def block_with_cache(p, hh, dense: bool = False):
+            hn = L.rms_norm(hh, p["ln1"], cfg.rmsnorm_eps)
+            if cfg.mla is not None:
+                a, latent, k_rope = L.apply_mla(p["attn"], cfg, hn, positions)
+                c = jnp.concatenate([latent, k_rope[:, :, 0, :]], axis=-1)
+                cache_entry = (c.astype(dt),)
+            else:
+                a, (k, v) = L.apply_attention(
+                    p["attn"], cfg, hn, positions, causal=cfg.causal
+                )
+                cache_entry = (k.astype(dt), v.astype(dt))
+            hh = hh + a
+            hn = L.rms_norm(hh, p["ln2"], cfg.rmsnorm_eps)
+            if cfg.family == "moe" and not dense:
+                out = M.apply_moe(p["moe"], cfg, hn.reshape(B * Sq, -1)).reshape(B, Sq, -1)
+            else:
+                out = L.apply_mlp(p["mlp"], hn, cfg.mlp_type)
+            return self._c(hh + out), cache_entry
+
+        new_cache: dict[str, Any] = {}
+        for i, p in enumerate(params.get("prefix", [])):
+            h, ce = block_with_cache(p, h, dense=True)
+            new_cache.setdefault("prefix_entries", []).append(ce)
+
+        def body(carry, p):
+            return block_with_cache(p, carry)
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        h, entries = jax.lax.scan(fn, h, params["blocks"])
+        if cfg.mla is not None:
+            new_cache["latent"] = entries[0]
+        else:
+            new_cache["k"], new_cache["v"] = entries
+        if "prefix_entries" in new_cache:
+            pe = new_cache.pop("prefix_entries")
+            if cfg.mla is not None:
+                new_cache["prefix_latent"] = jnp.stack([e[0] for e in pe])
+            else:
+                new_cache["prefix_k"] = jnp.stack([e[0] for e in pe])
+                new_cache["prefix_v"] = jnp.stack([e[1] for e in pe])
+        if max_seq is not None:
+            def pad_seq(x):
+                pad = max_seq - x.shape[2]
+                if pad <= 0:
+                    return x
+                w = [(0, 0)] * x.ndim
+                w[2] = (0, pad)
+                return jnp.pad(x, w)
+
+            new_cache = {k: pad_seq(v) for k, v in new_cache.items()}
+        h = L.rms_norm(h, params["final_norm"], cfg.rmsnorm_eps)
+        return self.logits(params, h[:, -1:, :]), new_cache
+
+    def _ssm_prefill(self, params, batch):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        tokens = batch["tokens"]
+        h = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+        B, Sq, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+        hybrid = cfg.family == "hybrid"
+
+        def body(carry, xs):
+            p, idx = xs
+            hn = L.rms_norm(carry, p["ln"], cfg.rmsnorm_eps)
+            out, (hs, conv_tail) = S.apply_mamba(p["mamba"], cfg, hn)
+            carry = carry + out
+            if hybrid and cfg.attn_period:
+                def attn(v):
+                    sp = params["shared_attn"]
+                    hn2 = L.rms_norm(v, sp["ln1"], cfg.rmsnorm_eps)
+                    a, (k, vv) = L.apply_attention(sp["attn"], cfg, hn2, positions)
+                    v = v + a
+                    hn2 = L.rms_norm(v, sp["ln2"], cfg.rmsnorm_eps)
+                    return v + L.apply_mlp(sp["mlp"], hn2, cfg.mlp_type), k, vv
+
+                def no(v):
+                    B_, S_, _ = v.shape
+                    z = jnp.zeros((B_, S_, cfg.num_kv_heads, cfg.head_dim), v.dtype)
+                    return v, z, z
+
+                carry, k, vv = jax.lax.cond(
+                    (idx + 1) % cfg.attn_period == 0, attn, no, carry
+                )
+                return self._c(carry), (hs, conv_tail.astype(dt), k.astype(dt), vv.astype(dt))
+            return self._c(carry), (hs, conv_tail.astype(dt))
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        n_scan = cfg.num_layers
+        h, entries = jax.lax.scan(fn, h, (params["blocks"], jnp.arange(n_scan)))
+        cache: dict[str, Any] = {"h": entries[0], "conv": entries[1]}
+        if hybrid:
+            # keep only the populated shared-attn cache slots
+            k_all, v_all = entries[2], entries[3]
+            sel = jnp.arange(1, n_scan // cfg.attn_period + 1) * cfg.attn_period - 1
+            cache["attn_k"], cache["attn_v"] = k_all[sel], v_all[sel]
+        h = L.rms_norm(h, params["final_norm"], cfg.rmsnorm_eps)
+        return self.logits(params, h[:, -1:, :]), cache

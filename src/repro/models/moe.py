@@ -1,0 +1,152 @@
+"""Mixture-of-experts layer: sort-based grouped matmul + optional LP routing.
+
+Dispatch strategy (TPU-native, MaxText-style "dropping"): flatten the T*k
+(token, expert) assignments, sort by expert, compute each assignment's rank
+within its expert, and scatter into a dense [E, C, d] buffer (assignments
+beyond capacity C are dropped).  Expert FFNs then run as one batched einsum
+over the stacked [E, d, ff] weights — sharding E over the "model" axis gives
+expert parallelism, and XLA inserts the all-to-alls at the scatter/gather
+boundaries.
+
+`router="lp"` routes with the paper's solver: token->expert assignment *is* a
+regularized matching LP (tokens = sources under a top-k simplex constraint,
+experts = destinations under capacity coupling constraints).  A few dual-
+ascent iterations (eq. 3/4 with Jacobi-free unit coefficients) produce a
+balanced fractional assignment, BASE-layers style — the §Arch-applicability
+integration point of the paper's technique into the MoE pool members.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projections import project_simplex
+from repro.models.layers import apply_dense, init_dense
+
+__all__ = ["init_moe", "apply_moe", "lp_route"]
+
+
+def init_moe(key, cfg) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    std = 0.02
+    p = {
+        "router": init_dense(ks[0], d, m.num_experts),
+        "w_gate": jax.random.normal(ks[1], (m.num_experts, d, m.expert_ff)) * std,
+        "w_up": jax.random.normal(ks[2], (m.num_experts, d, m.expert_ff)) * std,
+        "w_down": jax.random.normal(ks[3], (m.num_experts, m.expert_ff, d)) * std,
+    }
+    if m.num_shared > 0:
+        from repro.models.layers import init_mlp
+
+        p["shared"] = init_mlp(ks[4], d, m.num_shared * m.expert_ff)
+    return p
+
+
+def lp_route(
+    probs: jax.Array,  # [T, E] router probabilities
+    top_k: int,
+    capacity: float,  # per-expert capacity (same units as sum of x)
+    *,
+    iters: int = 16,
+    gamma: float = 0.1,
+) -> jax.Array:
+    """Balanced fractional assignment via the paper's regularized dual ascent.
+
+    LP:  max_x sum_te probs_te x_te - (gamma/2)||x||^2
+         s.t. sum_e x_te <= k (per token; simplex radius k),
+              sum_t x_te <= capacity (per expert; coupling constraints).
+
+    The coupling matrix is exactly a Def.-1 matching matrix with one family
+    and unit coefficients; A^T lam is a broadcast and A x a column sum, so the
+    dual-ascent iteration runs entirely on the [T, E] tile.  Returns the
+    fractional assignment x (callers take top-k of x).
+    """
+    T, E = probs.shape
+    probs = probs.astype(jnp.float32)
+    mask = jnp.ones_like(probs)
+    # analytic step size: sigma_max(A)^2 <= T (unit column sums over T tokens)
+    eta = gamma / jnp.asarray(T, jnp.float32)
+    b = jnp.asarray(capacity, jnp.float32)
+
+    def body(lam, _):
+        # x*(lam) = Pi_simplex_k( (probs - lam) / gamma ) ; cost c = -probs
+        z = (probs - lam[None, :]) / gamma
+        x = project_simplex(z, mask, radius=float(top_k))
+        grad = jnp.sum(x, axis=0) - b  # A x - b  (per-expert load)
+        lam_new = jnp.maximum(lam + eta * grad, 0.0)
+        return lam_new, None
+
+    lam0 = jnp.zeros((E,), jnp.float32)
+    lam, _ = jax.lax.scan(body, lam0, None, length=iters)
+    z = (probs - lam[None, :]) / gamma
+    return project_simplex(z, mask, radius=float(top_k))
+
+
+def apply_moe(p, cfg, x2d: jax.Array) -> jax.Array:
+    """x2d: [T, d] -> [T, d].
+
+    With `cfg.moe.groups > 0` the token set splits into that many groups and
+    dispatch (argsort, rank, scatter) is vmapped per group: when groups align
+    with the dp batch shard, dispatch runs shard-local with no collectives,
+    and only the [G, E, C_g, d] <-> expert einsum boundary moves data (the
+    canonical expert-parallel all-to-all).  groups=0 is the single global
+    dispatch (baseline; see EXPERIMENTS.md §Perf for the delta).
+    """
+    m = cfg.moe
+    T, d = x2d.shape
+    G = m.groups
+    if G > 1 and T % G == 0 and T // G >= m.top_k:
+        xg = x2d.reshape(G, T // G, d)
+        return jax.vmap(lambda xs: _moe_one_group(p, cfg, xs))(xg).reshape(T, d)
+    return _moe_one_group(p, cfg, x2d)
+
+
+def _moe_one_group(p, cfg, x2d: jax.Array) -> jax.Array:
+    m = cfg.moe
+    T, d = x2d.shape
+    E, k = m.num_experts, m.top_k
+    C = int(max(1, round(T * k / E * m.capacity_factor)))
+
+    logits = apply_dense(p["router"], x2d).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if m.router == "lp":
+        probs = lp_route(
+            probs, k, capacity=C, iters=m.lp_iters, gamma=m.lp_gamma
+        )
+    weights, ids = jax.lax.top_k(probs, k)  # [T, k]
+    weights = (weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9
+    )).astype(x2d.dtype)
+
+    # ---- sort-based dispatch ------------------------------------------------
+    flat_e = ids.reshape(-1)  # [T*k]
+    order = jnp.argsort(flat_e)  # stable
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    rank = jnp.arange(T * k) - seg_start[sorted_e]
+    keep = rank < C
+    token_of = order // k
+    dest = jnp.where(keep, sorted_e * C + rank, E * C)  # overflow -> scratch row
+    buf = jnp.zeros((E * C + 1, d), x2d.dtype).at[dest].set(x2d[token_of])
+    h = buf[: E * C].reshape(E, C, d)
+
+    # ---- batched expert FFN (EP: E sharded over the tp axis) ----------------
+    def ff(w):
+        return w.astype(x2d.dtype)
+
+    g = jnp.einsum("ecd,edf->ecf", h, ff(p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", h, ff(p["w_up"]))
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, ff(p["w_down"]))
+
+    # ---- combine -------------------------------------------------------------
+    y_flat = jnp.concatenate([y.reshape(E * C, d), jnp.zeros((1, d), y.dtype)])
+    contrib = y_flat[dest] * weights.reshape(-1)[order][:, None]
+    out = jnp.zeros((T, d), x2d.dtype).at[token_of].add(contrib)
+
+    if m.num_shared > 0:
+        from repro.models.layers import apply_mlp
+
+        out = out + apply_mlp(p["shared"], x2d)
+    return out

@@ -1,0 +1,215 @@
+"""Mamba2 SSD (state-space duality) block: chunked-scan prefill, O(1) decode.
+
+Chunked SSD (Dao & Gu 2024): within a chunk of length Q the recurrence
+
+    h_t = exp(a_t) h_{t-1} + dt_t B_t x_t,     y_t = C_t . h_t + D x_t
+
+is evaluated with quadratic-in-Q einsums (intra-chunk term via the decay
+matrix L[i,j] = exp(cum_i - cum_j), i >= j), while chunk-to-chunk states are
+carried by a linear `lax.scan` — overall O(S*Q) work and O(S) memory, the
+sub-quadratic path that qualifies the SSM/hybrid archs for the long_500k
+cell.  Decode is a single recurrent state update per token.
+
+Conventions: d_inner = expand*d_model; H = d_inner/P heads of dim P; B/C in
+G groups of state dim N shared across H/G heads; depthwise causal conv of
+width W over the concatenated (x, B, C) channels; gated RMSNorm output.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_dense, init_dense, rms_norm
+
+__all__ = [
+    "init_mamba",
+    "apply_mamba",
+    "apply_mamba_decode",
+    "init_mamba_cache",
+    "ssd_chunked",
+]
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    H = s.num_heads(cfg.d_model)
+    conv_dim = d_in + 2 * s.n_groups * s.state_dim
+    return s, d_in, H, conv_dim
+
+
+def init_mamba(key, cfg) -> dict:
+    s, d_in, H, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.state_dim + H  # z, x, B, C, dt
+    return {
+        "in_proj": init_dense(ks[0], cfg.d_model, proj_out),
+        "conv_w": jax.random.normal(ks[1], (s.conv_width, conv_dim)) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,)),
+        "A_log": jnp.zeros((H,)),  # A = -exp(A_log) = -1
+        "D": jnp.ones((H,)),
+        "dt_bias": jnp.full((H,), -2.0),  # softplus(-2) ~ 0.13
+        "norm": jnp.ones((d_in,)),
+        "out_proj": init_dense(ks[2], d_in, cfg.d_model),
+    }
+
+
+def _split_proj(cfg, proj):
+    s, d_in, H, _ = _dims(cfg)
+    gn = s.n_groups * s.state_dim
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in : d_in + d_in + 2 * gn]
+    dt = proj[..., d_in + d_in + 2 * gn :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over time. xbc: [B,S,C], w: [W,C]."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def segsum(a: jax.Array) -> jax.Array:
+    """a: [..., Q] -> L-matrix exponents: out[..., i, j] = sum_{j+1..i} a, i>=j."""
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    Q = a.shape[-1]
+    i = jnp.arange(Q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    xdt: jax.Array,  # [b,s,h,p]  dt-premultiplied inputs (dt_j B_j x_j form)
+    a: jax.Array,  # [b,s,h]    log-decay per step (dt * A, negative)
+    Bm: jax.Array,  # [b,s,g,n]
+    Cm: jax.Array,  # [b,s,g,n]
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # [b,h,p,n] initial state
+):
+    """Returns (y [b,s,h,p], h_final [b,h,p,n])."""
+    b, S, H, Pd = xdt.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    hg = H // g
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    # chunked views, scan over chunk index
+    xc = jnp.moveaxis(xdt.reshape(b, nc, Q, H, Pd), 1, 0)
+    ac = jnp.moveaxis(a.reshape(b, nc, Q, H), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(b, nc, Q, g, n), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(b, nc, Q, g, n), 1, 0)
+
+    def step(h, blk):
+        x_, a_, B_, C_ = blk  # [b,Q,H,P], [b,Q,H], [b,Q,g,n] x2
+        cum = jnp.cumsum(a_, axis=1)  # [b,Q,H]
+        L = jnp.exp(segsum(jnp.moveaxis(a_, -1, 1)))  # [b,H,Q,Q]
+        cb = jnp.einsum("bigm,bjgm->bgij", C_, B_)  # [b,g,Q,Q]
+        cb_h = jnp.repeat(cb, hg, axis=1)  # [b,H,Q,Q]
+        y_diag = jnp.einsum(
+            "bhij,bjhp->bihp", cb_h * L, x_, preferred_element_type=jnp.float32
+        )
+        # carried-state contribution: C_i exp(cum_i) h0
+        c_h = jnp.repeat(C_, hg, axis=2)  # [b,Q,H,n]
+        y_off = jnp.einsum(
+            "bihn,bhpn,bih->bihp", c_h, h, jnp.exp(cum),
+            preferred_element_type=jnp.float32,
+        )
+        # state update
+        total = cum[:, -1, :]  # [b,H]
+        decay_out = jnp.exp(total[:, None, :] - cum)  # [b,Q,H]
+        b_h = jnp.repeat(B_, hg, axis=2)  # [b,Q,H,n]
+        h_new = (
+            jnp.exp(total)[:, :, None, None] * h
+            + jnp.einsum("bjhn,bjhp,bjh->bhpn", b_h, x_, decay_out,
+                         preferred_element_type=jnp.float32)
+        )
+        return h_new, (y_diag + y_off).astype(xdt.dtype)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, H, Pd, n), jnp.float32)
+    # nested remat: without it, backward through the chunk scan saves every
+    # chunk's quadratic L/CB tensors ([b,H,Q,Q] x num_chunks = full-seq
+    # quadratic memory); rematerialising them per chunk keeps the residuals
+    # at O(state) per chunk (the SSD analogue of flash-attention backward).
+    h_fin, yc = jax.lax.scan(jax.checkpoint(step), h0, (xc, ac, Bc, Cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, S, H, Pd)
+    return y, h_fin
+
+
+def apply_mamba(p, cfg, x, h0=None):
+    """Full-sequence Mamba2 block. x: [B,S,d_model] -> ([B,S,d_model], state).
+
+    state = (h_final, conv_tail): h feeds decode continuation; conv_tail is
+    the last W-1 raw (pre-conv) xbc rows, i.e. the decode conv cache.
+    """
+    s, d_in, H, conv_dim = _dims(cfg)
+    B_, S, _ = x.shape
+    proj = apply_dense(p["in_proj"], x)
+    z, xbc, dt = _split_proj(cfg, proj)
+    conv_tail = xbc[:, -(s.conv_width - 1):, :]
+    xbc = _causal_conv(xbc, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    gn = s.n_groups * s.state_dim
+    xin = xbc[..., :d_in].reshape(B_, S, H, s.head_dim)
+    Bm = xbc[..., d_in : d_in + gn].reshape(B_, S, s.n_groups, s.state_dim)
+    Cm = xbc[..., d_in + gn :].reshape(B_, S, s.n_groups, s.state_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])  # [H]
+    a = dt * A[None, None, :]  # [B,S,H]
+    xdt = xin * dt[..., None].astype(xin.dtype)
+    y, h_fin = ssd_chunked(xdt, a, Bm, Cm, cfg.ssm.chunk, h0=h0)
+    y = y + xin * p["D"].astype(xin.dtype)[None, None, :, None]
+    y = y.reshape(B_, S, d_in)
+    y = rms_norm(y, p["norm"], cfg.rmsnorm_eps) * jax.nn.silu(z)
+    out = apply_dense(p["out_proj"], y)
+    return out, (h_fin, conv_tail)
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    s, d_in, H, conv_dim = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, H, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def apply_mamba_decode(p, cfg, x, cache):
+    """One-token recurrent step. x: [B,1,d_model] -> ([B,1,d_model], cache)."""
+    s, d_in, H, conv_dim = _dims(cfg)
+    B_ = x.shape[0]
+    proj = apply_dense(p["in_proj"], x)  # [B,1,*]
+    z, xbc, dt = _split_proj(cfg, proj)
+    # conv over (cached W-1 inputs | new input)
+    win = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bwc,wc->bc", win, w) + p["conv_b"].astype(x.dtype)
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]  # [B,1,C]
+    gn = s.n_groups * s.state_dim
+    xin = xbc1[..., :d_in].reshape(B_, H, s.head_dim)
+    Bm = xbc1[..., d_in : d_in + gn].reshape(B_, s.n_groups, s.state_dim)
+    Cm = xbc1[..., d_in + gn :].reshape(B_, s.n_groups, s.state_dim)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt1 * A[None, :])  # [B,H]
+    hg = H // s.n_groups
+    b_h = jnp.repeat(Bm, hg, axis=1)  # [B,H,n]
+    c_h = jnp.repeat(Cm, hg, axis=1)
+    u = jnp.einsum("bhp,bhn,bh->bhpn", xin.astype(jnp.float32), b_h.astype(jnp.float32), dt1)
+    h_new = cache["h"] * decay[:, :, None, None] + u
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, c_h.astype(jnp.float32)).astype(x.dtype)
+    y = y + xin * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B_, 1, d_in)
+    y = rms_norm(y, p["norm"], cfg.rmsnorm_eps) * jax.nn.silu(z)
+    out = apply_dense(p["out_proj"], y)
+    new_cache = {
+        "h": h_new,
+        "conv": win[:, 1:, :].astype(cache["conv"].dtype),
+    }
+    return out, new_cache

@@ -1,0 +1,11 @@
+"""Serving substrate: prefill/decode steps and a batched request engine."""
+from repro.serving.steps import lower_decode_step, lower_prefill, make_serve_fns
+from repro.serving.engine import ServeEngine, Request
+
+__all__ = [
+    "lower_decode_step",
+    "lower_prefill",
+    "make_serve_fns",
+    "ServeEngine",
+    "Request",
+]

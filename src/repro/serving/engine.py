@@ -1,0 +1,123 @@
+"""Batched request engine (continuous batching, CPU demo-grade).
+
+A fixed pool of decode slots; incoming requests are prefilled into a free
+slot and decoded step-by-step alongside the other active slots.  Greedy
+sampling; slots retire on EOS or max_new_tokens.  This is the serving-loop
+substrate for `examples/serve_lm.py`; per-slot prefill keeps the demo simple
+(production would batch prefill separately).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int = 16
+    eos_id: int = -1  # -1: never stop early
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model: Model,
+        params,
+        *,
+        slots: int = 4,
+        max_seq: int = 256,
+    ):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.queue: deque[Request] = deque()
+        self.active: list[Optional[Request]] = [None] * slots
+        self.pos = np.zeros(slots, dtype=np.int32)
+        self.cache = model.init_cache(slots, max_seq)
+        self._decode = jax.jit(model.decode_step, donate_argnums=(3,))
+        self._single_prefill = jax.jit(self._prefill_one)
+
+    def _prefill_one(self, params, tokens):
+        """Prefill one prompt [1, S] by teacher-forced decode steps."""
+        cache1 = self.model.init_cache(1, self.max_seq)
+
+        def body(carry, t):
+            cache, _ = carry
+            logits, cache = self.model.decode_step(
+                params, t[None, None], carry[1], cache
+            )
+            return (cache, carry[1] + 1), logits[0, -1]
+
+        (cache1, _), logits = jax.lax.scan(
+            body, (cache1, jnp.asarray(0, jnp.int32)), tokens
+        )
+        return cache1, logits[-1]
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                cache1, last_logits = self._single_prefill(
+                    self.params, jnp.asarray(req.prompt, jnp.int32)
+                )
+                # splice the slot-local cache into the batch cache
+                def put(batch_leaf, one_leaf):
+                    return batch_leaf.at[:, s : s + 1].set(one_leaf)
+
+                self.cache = jax.tree.map(put, self.cache, cache1)
+                nxt = int(jnp.argmax(last_logits))
+                req.out_tokens.append(nxt)
+                self.active[s] = req
+                self.pos[s] = len(req.prompt)
+
+    def step(self) -> int:
+        """One engine step: admit + one batched decode. Returns #active."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        tokens = np.zeros((self.slots, 1), dtype=np.int32)
+        for s, r in enumerate(self.active):
+            if r is not None and r.out_tokens:
+                tokens[s, 0] = r.out_tokens[-1]
+        pos = int(max(self.pos[s] for s, r in enumerate(self.active) if r))
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), jnp.asarray(pos, jnp.int32), self.cache
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        n_active = 0
+        for s, r in enumerate(self.active):
+            if r is None:
+                continue
+            r.out_tokens.append(int(nxt[s]))
+            self.pos[s] += 1
+            if (
+                len(r.out_tokens) >= r.max_new_tokens
+                or int(nxt[s]) == r.eos_id
+                or self.pos[s] >= self.max_seq - 1
+            ):
+                r.done = True
+                self.active[s] = None
+            else:
+                n_active += 1
+        return n_active
+
+    def run(self) -> None:
+        while self.queue or any(r is not None for r in self.active):
+            self.step()

@@ -1,0 +1,90 @@
+"""Sharded serve steps: prefill and single-token decode.
+
+decode_* / long_* shapes lower `serve_step` — one new token against a
+seq_len-deep cache — NOT train_step.  The cache is sequence-sharded over the
+tp axis (GQA kv-head counts generally don't divide a 16-way axis), so XLA
+emits the flash-decoding-style distributed softmax combine automatically.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShardingProfile
+from repro.models.model import Model
+from repro.training.sharding_rules import (
+    batch_pspecs,
+    cache_pspecs,
+    named,
+    param_pspecs,
+)
+
+__all__ = ["make_serve_fns", "lower_decode_step", "lower_prefill"]
+
+
+def _param_shardings(model: Model, mesh: Mesh, profile: ShardingProfile):
+    pshape = jax.eval_shape(model.init, jax.random.key(0))
+    return named(mesh, param_pspecs(pshape, mesh, profile))
+
+
+def make_serve_fns(model: Model, mesh: Mesh, profile: ShardingProfile):
+    """(prefill_fn, decode_fn) jit'd with explicit shardings."""
+    pshard = _param_shardings(model, mesh, profile)
+
+    prefill = jax.jit(model.prefill, in_shardings=(pshard, None))
+    decode = jax.jit(
+        model.decode_step,
+        in_shardings=(pshard, None, None, None),
+        donate_argnums=(3,),
+    )
+    return prefill, decode
+
+
+def lower_decode_step(
+    cfg: ModelConfig,
+    specs: dict,  # {"tokens", "pos", "cache"} ShapeDtypeStructs
+    mesh: Mesh,
+    profile: ShardingProfile,
+):
+    """Dry-run entry for decode_* / long_* cells."""
+    model = Model(cfg)
+    pshard = _param_shardings(model, mesh, profile)
+    cshard = named(mesh, cache_pspecs(specs["cache"], cfg, profile, mesh))
+    tshard = NamedSharding(
+        mesh,
+        P(("pod", "data") if "pod" in mesh.shape and specs["tokens"].shape[0] % (mesh.shape["pod"] * mesh.shape["data"]) == 0
+          else ("data",) if specs["tokens"].shape[0] % mesh.shape["data"] == 0 else None,
+          None),
+    )
+    params_shape = jax.eval_shape(model.init, jax.random.key(0))
+    return jax.jit(
+        model.decode_step,
+        in_shardings=(pshard, tshard, NamedSharding(mesh, P()), cshard),
+        out_shardings=(None, cshard),
+        donate_argnums=(3,),
+    ).lower(params_shape, specs["tokens"], specs["pos"], specs["cache"])
+
+
+def lower_prefill(
+    cfg: ModelConfig,
+    specs: dict,  # {"tokens"(, "embeds")} ShapeDtypeStructs
+    mesh: Mesh,
+    profile: ShardingProfile,
+):
+    """Dry-run entry for prefill_* cells."""
+    from repro.training.train_step import activation_sharding
+
+    model = Model(cfg)
+    seq = (specs.get("embeds") or specs["tokens"]).shape[1]
+    model.act_sharding = activation_sharding(cfg, mesh, profile, seq)
+    pshard = _param_shardings(model, mesh, profile)
+    bshard = named(mesh, batch_pspecs(specs, profile, mesh))
+    params_shape = jax.eval_shape(model.init, jax.random.key(0))
+    return jax.jit(
+        model.prefill,
+        in_shardings=(pshard, bshard),
+    ).lower(params_shape, specs)

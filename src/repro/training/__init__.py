@@ -1,0 +1,17 @@
+"""Training substrate: optimizer, sharded train step, fault-tolerant loop."""
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, lr_schedule
+from repro.training.sharding_rules import param_pspecs, batch_pspecs, maybe_shard
+from repro.training.train_step import TrainState, make_train_step, init_train_state
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "lr_schedule",
+    "param_pspecs",
+    "batch_pspecs",
+    "maybe_shard",
+    "TrainState",
+    "make_train_step",
+    "init_train_state",
+]

@@ -1,0 +1,119 @@
+"""Fault-tolerant training loop: checkpoint/resume, bounded retry, preemption.
+
+The loop composes the substrate pieces:
+  * resume: restores the latest checkpoint and *skips ahead* in the
+    deterministic data pipeline (batch k is a pure function of k);
+  * periodic + final checkpoints via the atomic async CheckpointManager;
+  * bounded retry around the step (transient-failure tolerance — on real
+    fleets this wraps DCN flakes and preempted hosts; semantics identical);
+  * SIGTERM -> synchronous save -> clean exit (preemption handling).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager, latest_step
+from repro.data.pipeline import SyntheticLMData
+from repro.models.model import Model
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import TrainState, init_train_state, make_train_step
+
+log = logging.getLogger("repro.train")
+
+__all__ = ["TrainLoopConfig", "train_loop"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 200
+    save_every: int = 50
+    keep: int = 3
+    max_retries: int = 2
+    log_every: int = 10
+
+
+def train_loop(
+    model: Model,
+    data: SyntheticLMData,
+    opt_cfg: AdamWConfig,
+    loop_cfg: TrainLoopConfig,
+    ckpt_dir: Optional[str] = None,
+    *,
+    mesh=None,
+    profile=None,
+    state: Optional[TrainState] = None,
+    step_fn: Optional[Callable] = None,
+    on_step: Optional[Callable[[int, dict], None]] = None,
+) -> TrainState:
+    if step_fn is None:
+        if mesh is not None:
+            step_fn, state_shardings, _ = make_train_step(
+                model, opt_cfg, mesh, profile
+            )
+        else:
+            def step_fn_(state, batch):
+                import jax.numpy as jnp
+                from repro.training.optimizer import adamw_update
+
+                loss, grads = jax.value_and_grad(model.loss)(state.params, batch)
+                params, opt, metrics = adamw_update(
+                    opt_cfg, grads, state.opt, state.params
+                )
+                return TrainState(params, opt, state.step + 1), dict(
+                    metrics, loss=loss
+                )
+
+            step_fn = jax.jit(step_fn_, donate_argnums=(0,))
+            state_shardings = None
+
+    mgr = (
+        CheckpointManager(ckpt_dir, keep=loop_cfg.keep, save_on_sigterm=True)
+        if ckpt_dir
+        else None
+    )
+    start = 0
+    if state is None:
+        state = init_train_state(model, jax.random.key(0))
+    if mgr is not None:
+        last = latest_step(ckpt_dir)
+        if last is not None:
+            template = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
+            )
+            state = mgr.restore(last, template, shardings=None)
+            state = jax.tree.map(jax.numpy.asarray, state)
+            start = last
+            log.info("resumed from step %d", last)
+        mgr.attach_state_provider(lambda: (int(state.step), state))
+
+    t0 = time.time()
+    for k in range(start, loop_cfg.total_steps):
+        batch = data(k)
+        for attempt in range(loop_cfg.max_retries + 1):
+            try:
+                state, metrics = step_fn(state, batch)
+                break
+            except Exception:  # bounded retry on transient failure
+                if attempt == loop_cfg.max_retries:
+                    if mgr:
+                        mgr.save(k, state, block=True)
+                    raise
+                log.exception("step %d failed (attempt %d); retrying", k, attempt)
+        if on_step is not None:
+            on_step(k, metrics)
+        if loop_cfg.log_every and (k + 1) % loop_cfg.log_every == 0:
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            log.info("step %d loss %.4f (%.2fs)", k + 1, loss, dt)
+        if mgr and (k + 1) % loop_cfg.save_every == 0:
+            mgr.save(k + 1, state)
+    if mgr:
+        mgr.save(loop_cfg.total_steps, state, block=True)
+        mgr.wait()
+    return state

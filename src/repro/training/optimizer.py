@@ -1,0 +1,95 @@
+"""AdamW with global-norm clipping and warmup+cosine schedule (pure JAX).
+
+Optimizer state inherits the parameter sharding (see sharding_rules): with the
+fsdp profile the fp32 masters and both moments are sharded over data x model —
+ZeRO-3-style memory scaling without a separate partitioner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update", "lr_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: dict
+    v: dict
+    count: jax.Array
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p)
+    return OptState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    # NB: jnp.sum over the original dims, NOT vdot — vdot ravels to 1D, which
+    # cannot represent a multi-axis sharding and forces XLA to all-gather the
+    # full parameter (77 GB buffers on the 72B configs).
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: OptState, params):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    count = state.count + 1
+    lr = lr_schedule(cfg, count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        step_ = lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p)
+        return p - step_, m, v
+
+    # params trees contain only dict/list containers, so a tuple marks one
+    # leaf-level (p, m, v) result
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    is_result = lambda t: isinstance(t, tuple)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out, is_leaf=is_result)
+    return (
+        pick(0),
+        OptState(m=pick(1), v=pick(2), count=count),
+        {"grad_norm": gnorm, "lr": lr},
+    )

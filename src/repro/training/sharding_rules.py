@@ -1,0 +1,173 @@
+"""Logical parameter/activation sharding rules (Megatron TP + optional FSDP).
+
+Rules are keyed on the *owning* weight name in the param tree path (the
+parent of the "w"/"b" leaf), classifying each 2D/3D weight as column-parallel
+(output dim on the tp axis) or row-parallel (input dim on the tp axis); FSDP
+additionally shards the complementary dim over the dp axes.  Stacked scan
+params ([L, ...]) keep the leading layer dim unsharded.
+
+Dims that do not divide the mesh axis size silently drop that axis
+(`maybe_shard`) — e.g. starcoder2's 36 heads on a 16-way tp axis fall back to
+sharding the flattened H*Dh projection dim, and mamba2's 50280-row vocab
+stays replicated.  This keeps every spec legal for pjit while preserving as
+much parallelism as the published dims allow.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.models.config import ModelConfig, ShardingProfile
+
+__all__ = ["maybe_shard", "param_pspecs", "batch_pspecs", "cache_pspecs", "named"]
+
+# column-parallel: output feature dim sharded on tp
+_COL = {
+    "wq", "wk", "wv", "w_gate", "w_up", "wq_a", "wq_b", "wkv_a", "wkv_b",
+    "in_proj", "router",
+}
+# row-parallel: input feature dim sharded on tp
+_ROW = {"wo", "w_down", "out_proj"}
+
+
+def _axis_size(mesh: Mesh, axes: Union[str, tuple]) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def maybe_shard(dim: int, axes, mesh: Mesh):
+    """axes if dim divides their product, else None (replicated dim)."""
+    if axes is None:
+        return None
+    size = _axis_size(mesh, axes)
+    return axes if dim % size == 0 else None
+
+
+def _owner(path) -> str:
+    """Owning weight name: parent key of a 'w'/'b' leaf, else the leaf key."""
+    keys = [k.key for k in path if isinstance(k, DictKey)]
+    if not keys:
+        return ""
+    if keys[-1] in ("w", "b") and len(keys) >= 2:
+        return keys[-2]
+    return keys[-1]
+
+
+def _in_stack(path) -> bool:
+    for k in path:
+        if isinstance(k, DictKey) and k.key in ("blocks", "enc_blocks", "dec_blocks"):
+            return True
+    return False
+
+
+def param_pspecs(
+    params_shape,
+    mesh: Mesh,
+    profile: ShardingProfile,
+) -> dict:
+    """PartitionSpec pytree for a param tree (pass eval_shape output)."""
+    tp = profile.tp_axis
+    dp = tuple(profile.dp_axes) if profile.fsdp else None
+
+    def rule(path, leaf):
+        name = _owner(path)
+        shape = leaf.shape
+        off = 1 if _in_stack(path) else 0
+        nd = len(shape) - off
+        lead = (None,) * off
+        if name == "embed":  # [V, d]
+            return P(
+                maybe_shard(shape[0], tp, mesh),
+                maybe_shard(shape[1], dp, mesh) if dp else None,
+            )
+        if name == "lm_head":  # [d, V]
+            return P(
+                maybe_shard(shape[0], dp, mesh) if dp else None,
+                maybe_shard(shape[1], tp, mesh),
+            )
+        if nd == 3 and name in ("w_gate", "w_up"):  # experts [E, d, f]
+            return P(*lead,
+                     maybe_shard(shape[off], tp, mesh),
+                     maybe_shard(shape[off + 1], dp, mesh) if dp else None,
+                     None)
+        if nd == 3 and name == "w_down":  # experts [E, f, d]
+            return P(*lead,
+                     maybe_shard(shape[off], tp, mesh),
+                     maybe_shard(shape[off + 1], dp, mesh) if dp else None,
+                     None)
+        if nd == 2 and name in _COL:
+            return P(*lead,
+                     maybe_shard(shape[off], dp, mesh) if dp else None,
+                     maybe_shard(shape[off + 1], tp, mesh))
+        if nd == 2 and name in _ROW:
+            return P(*lead,
+                     maybe_shard(shape[off], tp, mesh),
+                     maybe_shard(shape[off + 1], dp, mesh) if dp else None)
+        if nd == 2 and name == "conv_w":  # [W, C] depthwise conv
+            return P(*lead, None, maybe_shard(shape[off + 1], tp, mesh))
+        # norms, biases, scalars: replicated (beyond the stack dim)
+        return P(*lead, *((None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def batch_pspecs(batch_shape, profile: ShardingProfile, mesh: Mesh) -> dict:
+    """Shard every batch input on its leading (batch) dim over the dp axes."""
+    dp = tuple(profile.dp_axes)
+
+    def rule(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        return P(maybe_shard(leaf.shape[0], dp, mesh), *((None,) * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def cache_pspecs(cache_shape, cfg: ModelConfig, profile: ShardingProfile, mesh: Mesh):
+    """KV/state cache sharding for serving.
+
+    Layout [L, B, S, K, Dh] (attention) / [L, B, ...] (ssm states): batch over
+    dp; the cache *sequence* dim over tp (GQA kv-head counts rarely divide a
+    16-way tp axis, and seq-sharding makes decode attention a distributed
+    flash-decoding combine, which XLA emits automatically from the softmax).
+    """
+    tp = profile.tp_axis
+    dp = tuple(profile.dp_axes)
+
+    def rule(path, leaf):
+        keys = [k.key for k in path if isinstance(k, DictKey)]
+        name = keys[-1] if keys else ""
+        sh = leaf.shape
+        if name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v",
+                    "attn_k", "attn_v", "prefix_k", "prefix_v"):
+            # [L, B, S, K, Dh]
+            return P(None, maybe_shard(sh[1], dp, mesh),
+                     maybe_shard(sh[2], tp, mesh), None, None)
+        if name in ("latent", "prefix_latent"):  # [L, B, S, r]
+            return P(None, maybe_shard(sh[1], dp, mesh),
+                     maybe_shard(sh[2], tp, mesh), None)
+        if name.endswith("_scale"):  # int8 cache scales [L, B, S, K]
+            return P(None, maybe_shard(sh[1], dp, mesh),
+                     maybe_shard(sh[2], tp, mesh), None)
+        if name == "h":  # ssm state [L, B, H, P, N]
+            return P(None, maybe_shard(sh[1], dp, mesh),
+                     maybe_shard(sh[2], tp, mesh), None, None)
+        if name == "conv":  # [L, B, W-1, conv_dim]
+            return P(None, maybe_shard(sh[1], dp, mesh), None,
+                     maybe_shard(sh[3], tp, mesh))
+        return P(*((None,) * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def named(mesh: Mesh, tree):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

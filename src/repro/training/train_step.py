@@ -1,0 +1,150 @@
+"""Sharded train step: loss -> grad -> clip -> AdamW, with microbatching.
+
+`make_train_step` builds the jit'd step with explicit in/out shardings from
+the profile's rules; XLA GSPMD then propagates TP/FSDP through the model
+(Megatron-style collectives fall out of the param shardings).  Gradient
+accumulation scans over microbatches so the 256-sequence global batches fit
+per-device memory with large models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShardingProfile
+from repro.models.model import Model
+from repro.training.optimizer import AdamWConfig, OptState, adamw_init, adamw_update
+from repro.training.sharding_rules import batch_pspecs, named, param_pspecs
+
+__all__ = ["TrainState", "init_train_state", "make_train_step"]
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: OptState
+    step: jax.Array
+
+
+def init_train_state(model: Model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(
+        params=params, opt=adamw_init(params), step=jnp.zeros((), jnp.int32)
+    )
+
+
+def state_pspecs(model: Model, mesh: Mesh, profile: ShardingProfile) -> TrainState:
+    pshape = jax.eval_shape(model.init, jax.random.key(0))
+    pspec = param_pspecs(pshape, mesh, profile)
+    return TrainState(
+        params=pspec,
+        opt=OptState(m=pspec, v=pspec, count=P()),
+        step=P(),
+    )
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig,
+    mesh: Mesh,
+    profile: ShardingProfile,
+    *,
+    microbatches: int = 1,
+    donate: bool = True,
+):
+    """Returns (jit'd step fn, state_shardings, batch_sharding_fn)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def step_fn(state: TrainState, batch) -> tuple[TrainState, dict]:
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                loss, grads = jax.value_and_grad(loss_fn)(state.params, mb)
+                acc_loss, acc_g = carry
+                return (
+                    acc_loss + loss / microbatches,
+                    jax.tree.map(lambda a, g: a + g / microbatches, acc_g, grads),
+                ), None
+
+            zeros = jax.tree.map(jnp.zeros_like, state.params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros((), jnp.float32), zeros), micro
+            )
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        params, opt, metrics = adamw_update(opt_cfg, grads, state.opt, state.params)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(params=params, opt=opt, step=state.step + 1), metrics
+
+    sspec = state_pspecs(model, mesh, profile)
+    state_shardings = named(mesh, sspec)
+
+    def batch_shardings(batch_shape):
+        return named(mesh, batch_pspecs(batch_shape, profile, mesh))
+
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(state_shardings, None),
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,) if donate else (),
+    )
+    return jitted, state_shardings, batch_shardings
+
+
+def activation_sharding(
+    cfg: ModelConfig, mesh: Mesh, profile: ShardingProfile, seq: int
+):
+    """Sequence-parallel residual-stream sharding (batch over dp, seq over tp
+    when divisible) — caps the per-layer saved activations in scan."""
+    from repro.training.sharding_rules import maybe_shard
+
+    return NamedSharding(
+        mesh,
+        P(profile.dp_axes, maybe_shard(seq, profile.tp_axis, mesh), None),
+    )
+
+
+def lower_train_step(
+    cfg: ModelConfig,
+    batch_specs: dict,
+    mesh: Mesh,
+    profile: ShardingProfile,
+    opt_cfg: Optional[AdamWConfig] = None,
+    *,
+    microbatches: int = 1,
+):
+    """Dry-run entry: .lower() the train step on ShapeDtypeStructs only."""
+    model = Model(cfg)
+    seq = (batch_specs.get("embeds") or batch_specs["tokens"]).shape[1] if cfg.encdec else batch_specs["labels"].shape[1]
+    model.act_sharding = activation_sharding(cfg, mesh, profile, seq)
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def step_fn(state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(state.params, batch)
+        params, opt, metrics = adamw_update(opt_cfg, grads, state.opt, state.params)
+        return TrainState(params=params, opt=opt, step=state.step + 1), dict(
+            metrics, loss=loss
+        )
+
+    sspec = state_pspecs(model, mesh, profile)
+    state_shardings = named(mesh, sspec)
+    bshard = named(mesh, batch_pspecs(batch_specs, profile, mesh))
+    state_shape = jax.eval_shape(
+        partial(init_train_state, model), jax.random.key(0)
+    )
+    return jax.jit(
+        step_fn,
+        in_shardings=(state_shardings, bshard),
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,),
+    ).lower(state_shape, batch_specs)

@@ -1,0 +1,112 @@
+"""HLO parsing + roofline math + analytic FLOPs-model validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_stats import (
+    collective_stats,
+    loop_multipliers,
+    parse_shape_bytes,
+)
+from repro.analysis.roofline import V5E, roofline_from_stats
+
+SAMPLE = """
+HloModule jit_f
+
+%region_body.10 (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,16]{1,0} all-reduce(%x), replica_groups={}, to_apply=%add
+  ROOT %t = (s32[], f32[8,16]) tuple(%ar, %ar)
+}
+
+%region_cond.11 (arg: (s32[], f32[8,16])) -> pred[] {
+  %pc = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%pc), index=0
+  %c = s32[] constant(48)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main.20 (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %ag = f32[64,16]{1,0} all-gather(%a), dimensions={0}
+  %w = (s32[], f32[8,16]) while(%init), condition=%region_cond.11, body=%region_body.10
+  ROOT %r = f32[8,16]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parse_shape_bytes():
+    assert parse_shape_bytes("f32[8,16]") == 512
+    assert parse_shape_bytes("bf16[2,3,4]") == 48
+    assert parse_shape_bytes("(f32[4], s32[2])") == 24
+    assert parse_shape_bytes("pred[]") == 1
+
+
+def test_loop_multipliers():
+    m = loop_multipliers(SAMPLE)
+    assert m["region_body.10"] == 48
+    assert m["main.20"] == 1
+
+
+def test_collective_stats_static_vs_loop_aware():
+    st = collective_stats(SAMPLE)
+    la = collective_stats(SAMPLE, loop_aware=True)
+    assert st["counts"]["all-reduce"] == 1
+    assert la["counts"]["all-reduce"] == 48
+    assert la["bytes"]["all-reduce"] == 48 * 512
+    assert st["counts"]["all-gather"] == la["counts"]["all-gather"] == 1
+    # all-gather payload = operand bytes (the shard entering the network)
+    assert la["bytes"]["all-gather"] == 512
+
+
+def test_roofline_terms():
+    t = roofline_from_stats(
+        flops_per_device=197e12, bytes_per_device=819e9,
+        coll_bytes_per_device=25e9, chips=256, model_flops=197e12 * 256 / 2,
+    )
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(0.5)
+    assert t.dominant in ("compute", "memory")
+    assert t.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_flops_model_validates_against_hlo():
+    """Body-once transform: extras + 4x(one layer fwd) ~ measured HLO flops.
+
+    Run on the REDUCED config with a small shape so compile stays fast; the
+    same relation justifies the analytic totals at full scale.
+    """
+    from repro.analysis.flops_model import cell_cost
+    from repro.configs import ShapeSpec, get_reduced_config
+    from repro.models.model import Model
+    from repro.training.optimizer import AdamWConfig, adamw_update
+    from repro.training.train_step import TrainState, init_train_state
+
+    cfg = get_reduced_config("qwen3-8b")
+    shape = ShapeSpec("tiny_train", "train", 64, 4)
+    cost = cell_cost(cfg, shape)
+
+    model = Model(cfg)
+    opt_cfg = AdamWConfig()
+
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(state.params, batch)
+        p, o, _ = adamw_update(opt_cfg, grads, state.opt, state.params)
+        return TrainState(p, o, state.step + 1)
+
+    state = jax.eval_shape(lambda: init_train_state(model, jax.random.key(0)))
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((4, 64), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((4, 64), jnp.int32),
+    }
+    measured = jax.jit(step).lower(state, batch).compile().cost_analysis()["flops"]
+    # body-once: fwd body (1x) + bwd body (remat fwd + 2x bwd = 3x) + extras
+    predicted = 4 * cost.layer_fwd_flops + cost.extra_flops
+    assert 0.4 < measured / predicted < 2.5, (measured, predicted)
+    # and the full analytic total uses trip counts
+    assert cost.flops == pytest.approx(
+        4 * cost.layer_fwd_flops * cfg.num_layers + cost.extra_flops, rel=0.01
+    )

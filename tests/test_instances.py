@@ -1,0 +1,114 @@
+"""Generator + packing invariants (paper Appendix A, §4.1/§4.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.instances import (
+    MatchingInstanceSpec,
+    bucketize,
+    generate_matching_instance,
+    pack_single_slab,
+    unpack_primal,
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    I=st.integers(5, 300),
+    J=st.integers(2, 40),
+    deg=st.floats(1.0, 8.0),
+    m=st.integers(1, 3),
+    seed=st.integers(0, 10_000),
+)
+def test_generator_invariants(I, J, deg, m, seed):
+    spec = MatchingInstanceSpec(
+        num_sources=I, num_destinations=J, avg_degree=deg, num_families=m, seed=seed
+    )
+    inst = generate_matching_instance(spec)
+    assert inst.nnz > 0
+    assert (inst.src >= 0).all() and (inst.src < I).all()
+    assert (inst.dst >= 0).all() and (inst.dst < J).all()
+    # sorted by (src, dst), unique edges
+    eid = inst.src * J + inst.dst
+    assert (np.diff(eid) > 0).all()
+    assert (inst.values >= 0).all() and (inst.values <= spec.c_max + 1e-9).all()
+    assert inst.coeff.shape == (m, inst.nnz)
+    assert (inst.coeff >= 0).all()
+    assert (inst.rhs > 0).all()
+    # cost is negated value (minimisation convention)
+    np.testing.assert_allclose(inst.cost, -inst.values)
+
+
+def test_rhs_makes_some_constraints_bind():
+    spec = MatchingInstanceSpec(num_sources=500, num_destinations=20, avg_degree=5.0, seed=1)
+    inst = generate_matching_instance(spec)
+    # greedy load with rho in [0.5, 1] must leave b below the max greedy load
+    # for at least some resources (otherwise nothing would ever bind)
+    assert inst.rhs.min() < inst.coeff[0].max() * spec.num_sources
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), mult=st.sampled_from([1, 4, 8]))
+def test_pack_roundtrip(seed, mult):
+    spec = MatchingInstanceSpec(num_sources=80, num_destinations=9, avg_degree=3.0, seed=seed)
+    inst = generate_matching_instance(spec)
+    packed = bucketize(inst, shard_multiple=mult)
+    # shapes padded to shard multiple
+    for b in packed.buckets:
+        assert b.rows % mult == 0
+        assert b.idx.shape == (b.rows, b.length)
+        assert b.coeff.shape == (spec.num_families, b.rows, b.length)
+    assert packed.nnz == inst.nnz
+    # roundtrip: pack values, unpack, compare to edge order
+    slabs = [b.cost for b in packed.buckets]
+    back = unpack_primal(packed, slabs)
+    np.testing.assert_allclose(back, inst.cost, rtol=1e-6)
+
+
+def test_bucket_padding_bound():
+    """Geometric bucketing wastes at most 2x per bucket (paper §4.2)."""
+    spec = MatchingInstanceSpec(num_sources=400, num_destinations=16, avg_degree=6.0, seed=2)
+    inst = generate_matching_instance(spec)
+    packed = bucketize(inst)
+    deg = inst.degrees()
+    for b in packed.buckets:
+        n_real = int((np.asarray(b.mask).sum(axis=1) > 0).sum())
+        if n_real == 0:
+            continue
+        real = np.asarray(b.mask).sum()
+        slots = n_real * b.length
+        assert slots <= 2 * real + b.length, (b.length, real, slots)
+
+
+def test_single_slab_equivalence():
+    """batching=False baseline encodes the same instance (paper Fig. 2)."""
+    spec = MatchingInstanceSpec(num_sources=60, num_destinations=8, avg_degree=4.0, seed=3)
+    inst = generate_matching_instance(spec)
+    a = bucketize(inst)
+    b = pack_single_slab(inst)
+    assert len(b.buckets) == 1
+    assert a.nnz == b.nnz == inst.nnz
+    assert b.buckets[0].length >= max(inst.degrees().max(), 1)
+
+
+def test_row_norms_match_dense():
+    spec = MatchingInstanceSpec(num_sources=40, num_destinations=6, avg_degree=3.0, num_families=2, seed=4)
+    inst = generate_matching_instance(spec)
+    packed = bucketize(inst)
+    A, b, c = inst.to_dense()
+    np.testing.assert_allclose(
+        packed.row_norms_sq(), (A ** 2).sum(axis=1), rtol=1e-5
+    )
+
+
+def test_to_dense_structure():
+    """Def. 1: diagonal blocks — A[k*J+j, i*J+j'] = 0 unless j == j'."""
+    spec = MatchingInstanceSpec(num_sources=12, num_destinations=5, avg_degree=2.5, num_families=2, seed=5)
+    inst = generate_matching_instance(spec)
+    A, _, _ = inst.to_dense()
+    J, I, m = 5, 12, 2
+    for k in range(m):
+        for i in range(I):
+            blk = A[k * J:(k + 1) * J, i * J:(i + 1) * J]
+            off_diag = blk - np.diag(np.diag(blk))
+            assert np.abs(off_diag).max() == 0

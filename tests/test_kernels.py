@@ -1,0 +1,112 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.simplex_proj import bitonic_sort_desc, inclusive_scan
+
+LENGTHS = [1, 2, 4, 8, 32, 128, 512, 2048]
+ROWS = [1, 5, 16, 37]
+
+
+@pytest.mark.parametrize("L", [2, 8, 64, 256, 1024])
+def test_bitonic_sort_exact(L):
+    x = jax.random.normal(jax.random.key(L), (7, L))
+    got = bitonic_sort_desc(x)
+    want = jnp.sort(x, axis=-1)[:, ::-1]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("L", [2, 16, 128, 1024])
+def test_inclusive_scan(L):
+    x = jax.random.normal(jax.random.key(L), (4, L))
+    np.testing.assert_allclose(
+        inclusive_scan(x), jnp.cumsum(x, axis=-1), rtol=1e-4, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("L", LENGTHS)
+@pytest.mark.parametrize("n", ROWS)
+@pytest.mark.parametrize("inequality", [True, False])
+def test_simplex_kernel_sweep(L, n, inequality):
+    rng = np.random.default_rng(L * 1000 + n)
+    v = jnp.asarray(rng.normal(size=(n, L)).astype(np.float32) * 2)
+    mask = jnp.asarray((rng.random((n, L)) < 0.7).astype(np.float32))
+    got = kops.fused_project_simplex(
+        v, mask, inequality=inequality, interpret=True
+    )
+    want = kref.simplex_ref(v, mask, inequality=inequality)
+    np.testing.assert_allclose(got, want, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_simplex_kernel_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.normal(size=(16, 64)), dtype)
+    mask = jnp.ones((16, 64), dtype)
+    got = kops.fused_project_simplex(v, mask, interpret=True)
+    want = kref.simplex_ref(v.astype(jnp.float32), mask.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), atol=2e-2
+    )
+    assert got.dtype == dtype
+
+
+def test_simplex_kernel_radius():
+    rng = np.random.default_rng(5)
+    v = jnp.asarray(rng.normal(size=(9, 32)).astype(np.float32) * 4)
+    mask = jnp.ones((9, 32), jnp.float32)
+    got = kops.fused_project_simplex(v, mask, radius=2.5, interpret=True)
+    want = kref.simplex_ref(v, mask, radius=2.5)
+    np.testing.assert_allclose(got, want, atol=3e-5)
+
+
+def test_fallback_beyond_max_length():
+    """Widths > 8192 take the multi-launch reference path (paper §4.3)."""
+    rng = np.random.default_rng(1)
+    v = jnp.asarray(rng.normal(size=(2, 16384)).astype(np.float32))
+    mask = jnp.ones_like(v)
+    got = kops.fused_project_simplex(v, mask, interpret=True)
+    want = kref.simplex_ref(v, mask)
+    np.testing.assert_allclose(got, want, atol=3e-5)
+
+
+@pytest.mark.parametrize("L", [4, 64, 512])
+@pytest.mark.parametrize("m", [1, 3])
+def test_dual_primal_kernel_sweep(L, m):
+    J = 64
+    n = 29
+    rng = np.random.default_rng(L + m)
+    idx = jnp.asarray(rng.integers(0, J, size=(n, L)), jnp.int32)
+    coeff = jnp.asarray(rng.random((m, n, L)).astype(np.float32))
+    cost = jnp.asarray(rng.normal(size=(n, L)).astype(np.float32))
+    mask = jnp.asarray((rng.random((n, L)) < 0.8).astype(np.float32))
+    lam = jnp.asarray(rng.random(m * J).astype(np.float32))
+    for gamma in [0.01, 1.0, 100.0]:
+        got = kops.fused_dual_primal(
+            idx, coeff, cost, mask, lam, jnp.float32(gamma),
+            num_destinations=J, interpret=True,
+        )
+        want = kref.dual_primal_ref(idx, coeff, cost, mask, lam, gamma, J)
+        np.testing.assert_allclose(got, want, atol=3e-5, err_msg=f"gamma={gamma}")
+
+
+def test_dual_primal_in_objective():
+    """MatchingObjective(fused_kernel=True) matches the reference objective."""
+    from repro.core.objective import MatchingObjective
+    from repro.instances import (
+        MatchingInstanceSpec, bucketize, generate_matching_instance,
+    )
+
+    spec = MatchingInstanceSpec(num_sources=60, num_destinations=12, avg_degree=4.0, seed=7)
+    packed = bucketize(generate_matching_instance(spec))
+    lam = jnp.asarray(np.random.default_rng(0).random(12).astype(np.float32))
+    ref_ev = MatchingObjective(packed).calculate(lam, 0.5)
+    k_ev = MatchingObjective(
+        packed, fused_kernel=True, kernel_interpret=True
+    ).calculate(lam, 0.5)
+    np.testing.assert_allclose(float(ref_ev.g), float(k_ev.g), rtol=1e-5)
+    np.testing.assert_allclose(ref_ev.grad, k_ev.grad, atol=3e-5)

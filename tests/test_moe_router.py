@@ -1,0 +1,101 @@
+"""MoE layer + LP router: dispatch correctness and balance properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced_config
+from repro.models.moe import apply_moe, init_moe, lp_route
+
+
+def test_moe_dense_equivalence():
+    """With capacity >= T*k (no drops), sorted dispatch == naive per-token loop."""
+    cfg = get_reduced_config("kimi-k2-1t-a32b")
+    m = dataclasses.replace(cfg.moe, capacity_factor=8.0, num_shared=0)
+    cfg = dataclasses.replace(cfg, moe=m)
+    p = init_moe(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(24, cfg.d_model)).astype(np.float32))
+    out = apply_moe(p, cfg, x)
+
+    # naive reference
+    logits = x @ p["router"]["w"].astype(x.dtype)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    w, ids = jax.lax.top_k(probs, m.top_k)
+    w = w / w.sum(-1, keepdims=True)
+    ref = np.zeros_like(np.asarray(x))
+    for t in range(x.shape[0]):
+        for j in range(m.top_k):
+            e = int(ids[t, j])
+            g = jax.nn.silu(x[t] @ p["w_gate"][e].astype(x.dtype))
+            u = x[t] @ p["w_up"][e].astype(x.dtype)
+            y = (g * u) @ p["w_down"][e].astype(x.dtype)
+            ref[t] += float(w[t, j]) * np.asarray(y)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=2e-4)
+
+
+def test_moe_capacity_drops():
+    """Over-capacity assignments are dropped, not mis-routed."""
+    cfg = get_reduced_config("deepseek-v2-236b")
+    m = dataclasses.replace(cfg.moe, capacity_factor=0.1, num_shared=0)
+    cfg = dataclasses.replace(cfg, moe=m)
+    p = init_moe(jax.random.key(1), cfg)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(64, cfg.d_model)), jnp.float32)
+    out = apply_moe(p, cfg, x)
+    assert jnp.all(jnp.isfinite(out))
+    # with tiny capacity most tokens get zero contribution
+    zero_rows = float((jnp.abs(out).sum(-1) < 1e-9).mean())
+    assert zero_rows > 0.3
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), T=st.sampled_from([64, 256]), E=st.sampled_from([4, 8]))
+def test_lp_route_properties(seed, T, E):
+    rng = np.random.default_rng(seed)
+    k = 2
+    probs = jax.nn.softmax(jnp.asarray(rng.normal(size=(T, E)) * 2), -1)
+    cap = T * k / E * 1.1
+    x = lp_route(probs, k, capacity=cap, iters=64, gamma=0.05)
+    x = np.asarray(x)
+    assert (x >= -1e-5).all()
+    assert (x.sum(1) <= k + 1e-3).all()  # per-token simplex radius k
+    # per-expert capacity approximately respected (finite-iteration dual
+    # ascent: small residual violation decays with iters)
+    assert x.sum(0).max() <= cap * 1.25
+
+
+def test_lp_route_balances_hot_experts():
+    rng = np.random.default_rng(2)
+    T, E, k = 1024, 8, 2
+    hot = np.zeros(E); hot[0] = 3.0  # one very hot expert
+    probs = jax.nn.softmax(jnp.asarray(rng.normal(size=(T, E)) + hot[None]), -1)
+    C = T * k / E * 1.25
+    _, id_top = jax.lax.top_k(probs, k)
+    x = lp_route(probs, k, capacity=C, iters=64, gamma=0.05)
+    _, id_lp = jax.lax.top_k(x, k)
+    load = lambda ids: np.bincount(np.asarray(ids).reshape(-1), minlength=E).max()
+    # fractional x respects capacity; hardening via top-k re-concentrates a
+    # little, so compare against the unbalanced router and a loose cap bound
+    assert load(id_lp) < 0.6 * load(id_top)
+    assert load(id_lp) <= C * 1.5
+
+
+def test_lp_router_in_model_trains():
+    cfg = get_reduced_config("deepseek-v2-236b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, router="lp", lp_iters=8)
+    )
+    from repro.models.model import Model
+
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)), jnp.int32)
+    loss, grads = jax.jit(jax.value_and_grad(model.loss))(
+        params, {"tokens": toks, "labels": toks}
+    )
+    assert jnp.isfinite(loss)
+    assert all(jnp.all(jnp.isfinite(g)) for g in jax.tree.leaves(grads))

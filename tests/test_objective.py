@@ -1,0 +1,86 @@
+"""MatchingObjective vs dense-matrix formulas (eq. 2-4) on small instances."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MatchingObjective, project_simplex
+from repro.instances import (
+    MatchingInstanceSpec,
+    bucketize,
+    generate_matching_instance,
+    unpack_primal,
+)
+
+
+@pytest.fixture(scope="module")
+def small():
+    spec = MatchingInstanceSpec(
+        num_sources=25, num_destinations=7, avg_degree=3.0, num_families=2, seed=21
+    )
+    inst = generate_matching_instance(spec)
+    return inst, bucketize(inst)
+
+
+def _dense_x_star(inst, lam, gamma):
+    """Blockwise closed form (eq. 3) computed densely per source."""
+    spec = inst.spec
+    J, m = spec.num_destinations, spec.num_families
+    A, b, c = inst.to_dense()
+    cols = inst.src * J + inst.dst
+    z = -(A[:, cols].T @ lam + c[cols]) / gamma
+    # per-source simplex projection
+    x = np.zeros_like(z)
+    for i in np.unique(inst.src):
+        rows = np.flatnonzero(inst.src == i)
+        zi = z[rows][None, :].astype(np.float32)
+        xi = project_simplex(jnp.asarray(zi), jnp.ones_like(jnp.asarray(zi)))
+        x[rows] = np.asarray(xi)[0]
+    return x, A[:, cols], b, c[cols]
+
+
+@pytest.mark.parametrize("gamma", [0.05, 1.0, 50.0])
+def test_calculate_matches_dense(small, gamma):
+    inst, packed = small
+    m, J = inst.spec.num_families, inst.spec.num_destinations
+    lam = np.random.default_rng(0).random(m * J).astype(np.float32)
+    ev = MatchingObjective(packed).calculate(jnp.asarray(lam), gamma)
+    x_dense, A, b, c = _dense_x_star(inst, lam, gamma)
+    x_ours = unpack_primal(packed, ev.x_slabs)
+    np.testing.assert_allclose(x_ours, x_dense, atol=2e-5)
+    grad_dense = A @ x_dense - b
+    np.testing.assert_allclose(np.asarray(ev.grad), grad_dense, atol=1e-4)
+    g_dense = c @ x_dense + gamma / 2 * (x_dense ** 2).sum() + lam @ grad_dense
+    np.testing.assert_allclose(float(ev.g), g_dense, rtol=1e-5)
+
+
+def test_apply_A_and_AT_adjoint(small):
+    """<A x, y> == <x, A^T y> over random x, y."""
+    inst, packed = small
+    obj = MatchingObjective(packed)
+    rng = np.random.default_rng(1)
+    x_slabs = tuple(
+        jnp.asarray(rng.normal(size=b.cost.shape).astype(np.float32)) * b.mask
+        for b in packed.buckets
+    )
+    y = jnp.asarray(rng.normal(size=obj.dual_dim).astype(np.float32))
+    lhs = float(jnp.vdot(obj.apply_A(x_slabs), y))
+    aty = obj.apply_AT(y)
+    rhs = float(sum(jnp.vdot(a, x) for a, x in zip(aty, x_slabs)))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+
+def test_power_iteration_matches_dense_sigma(small):
+    inst, packed = small
+    A, _, _ = inst.to_dense()
+    cols = inst.src * inst.spec.num_destinations + inst.dst
+    sig2_dense = np.linalg.svd(A[:, cols], compute_uv=False)[0] ** 2
+    sig2 = float(MatchingObjective(packed).power_iteration(jax.random.key(0), 100))
+    np.testing.assert_allclose(sig2, sig2_dense, rtol=1e-2)
+
+
+def test_max_violation(small):
+    inst, packed = small
+    obj = MatchingObjective(packed)
+    ev = obj.calculate(jnp.zeros(obj.dual_dim), 1.0)
+    assert float(obj.max_violation(ev.x_slabs)) >= 0.0

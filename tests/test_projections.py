@@ -1,0 +1,111 @@
+"""Property tests for the ProjectionMap operators (paper §4.2/§4.3 semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.projections import (
+    project_box,
+    project_box_cut,
+    project_simplex,
+)
+
+ATOL = 1e-5
+
+
+def _rand(rng, n, L, scale=3.0):
+    v = rng.normal(size=(n, L)).astype(np.float32) * scale
+    mask = (rng.random((n, L)) < 0.8).astype(np.float32)
+    mask[:, 0] = 1.0  # at least one real entry per row
+    return jnp.asarray(v), jnp.asarray(mask)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 7),
+    L=st.integers(1, 33),
+    seed=st.integers(0, 2**31 - 1),
+    z=st.floats(0.1, 5.0),
+)
+def test_simplex_feasibility(n, L, seed, z):
+    rng = np.random.default_rng(seed)
+    v, mask = _rand(rng, n, L)
+    w = project_simplex(v, mask, z)
+    w = np.asarray(w)
+    assert (w >= -ATOL).all()
+    assert (w.sum(-1) <= z + 1e-4 * max(1, z)).all()
+    assert (np.abs(w * (1 - np.asarray(mask))) == 0).all(), "pad leaked"
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 5), L=st.integers(1, 17), seed=st.integers(0, 2**31 - 1))
+def test_simplex_idempotent(n, L, seed):
+    rng = np.random.default_rng(seed)
+    v, mask = _rand(rng, n, L)
+    w1 = project_simplex(v, mask, 1.0)
+    w2 = project_simplex(w1, mask, 1.0)
+    np.testing.assert_allclose(w1, w2, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 4), L=st.integers(2, 16), seed=st.integers(0, 2**31 - 1))
+def test_simplex_nonexpansive(n, L, seed):
+    rng = np.random.default_rng(seed)
+    v1, mask = _rand(rng, n, L)
+    v2 = v1 + jnp.asarray(rng.normal(size=v1.shape).astype(np.float32)) * mask
+    w1 = project_simplex(v1, mask, 1.0)
+    w2 = project_simplex(v2, mask, 1.0)
+    d_in = np.linalg.norm(np.asarray((v1 - v2) * mask))
+    d_out = np.linalg.norm(np.asarray(w1 - w2))
+    assert d_out <= d_in + 1e-4
+
+
+def test_simplex_matches_exact_qp():
+    """KKT check vs a brute-force water-filling solution."""
+    rng = np.random.default_rng(3)
+    v = rng.normal(size=(50, 8)).astype(np.float32)
+    mask = np.ones_like(v)
+    w = np.asarray(project_simplex(jnp.asarray(v), jnp.asarray(mask), 1.0))
+    for i in range(v.shape[0]):
+        # exact: minimize ||w - v||^2 s.t. w>=0, sum<=1 by scanning thresholds
+        vv = np.sort(v[i])[::-1]
+        best = np.maximum(v[i], 0)
+        if best.sum() > 1:
+            css = np.cumsum(vv)
+            rho = max(
+                j + 1 for j in range(len(vv)) if vv[j] * (j + 1) > css[j] - 1.0
+            )
+            theta = (css[rho - 1] - 1.0) / rho
+            best = np.maximum(v[i] - theta, 0)
+        np.testing.assert_allclose(w[i], best, atol=2e-5)
+
+
+def test_equality_variant_sums_to_radius():
+    rng = np.random.default_rng(0)
+    v, mask = _rand(rng, 20, 12)
+    w = np.asarray(project_simplex(v, mask, 1.0, inequality=False))
+    np.testing.assert_allclose(w.sum(-1), 1.0, atol=1e-4)
+
+
+def test_box_projection():
+    rng = np.random.default_rng(1)
+    v, mask = _rand(rng, 10, 6)
+    w = np.asarray(project_box(v, mask, 0.0, 1.0))
+    assert (w >= 0).all() and (w <= 1).all()
+    inside = (np.asarray(v) >= 0) & (np.asarray(v) <= 1) & (np.asarray(mask) > 0)
+    np.testing.assert_allclose(w[inside], np.asarray(v)[inside])
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), z=st.floats(0.5, 4.0))
+def test_box_cut(seed, z):
+    rng = np.random.default_rng(seed)
+    v, mask = _rand(rng, 8, 10, scale=2.0)
+    w = np.asarray(project_box_cut(v, mask, 0.0, 1.0, z))
+    assert (w >= -ATOL).all() and (w <= 1 + ATOL).all()
+    assert (w.sum(-1) <= z + 1e-3).all()
+    # when box projection already feasible it is returned exactly
+    wb = np.clip(np.asarray(v), 0, 1) * np.asarray(mask)
+    feas = wb.sum(-1) <= z
+    np.testing.assert_allclose(w[feas], wb[feas], atol=1e-5)

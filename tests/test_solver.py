@@ -1,0 +1,130 @@
+"""Solver correctness: vs scipy.linprog ground truth + algorithmic properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy.optimize import linprog
+
+from repro.core import (
+    Maximizer,
+    MaximizerConfig,
+    MatchingObjective,
+    normalize_rows,
+)
+from repro.instances import (
+    MatchingInstanceSpec,
+    bucketize,
+    generate_matching_instance,
+    unpack_primal,
+)
+
+
+def _lp_ground_truth(inst):
+    """HiGHS solution of the unregularized LP restricted to eligible pairs."""
+    spec = inst.spec
+    I, J = spec.num_sources, spec.num_destinations
+    A, b, c = inst.to_dense()
+    cols = inst.src * J + inst.dst
+    S = np.zeros((I, inst.nnz))
+    S[inst.src, np.arange(inst.nnz)] = 1.0
+    r = linprog(
+        c[cols],
+        A_ub=np.vstack([A[:, cols], S]),
+        b_ub=np.concatenate([b, np.ones(I)]),
+        bounds=(0, None),
+        method="highs",
+    )
+    assert r.status == 0
+    return r
+
+
+@pytest.mark.parametrize("m", [1, 2])
+def test_solver_matches_linprog(m):
+    spec = MatchingInstanceSpec(
+        num_sources=50, num_destinations=8, avg_degree=3.0, num_families=m, seed=11
+    )
+    inst = generate_matching_instance(spec)
+    packed = bucketize(inst)
+    scaled, d = normalize_rows(packed)
+    res = Maximizer(
+        MatchingObjective(scaled), MaximizerConfig(iters_per_stage=400)
+    ).solve()
+    truth = _lp_ground_truth(inst)
+    x = unpack_primal(packed, res.x_slabs)
+    ours = float(np.dot(inst.cost, x))
+    rel = abs(ours - truth.fun) / abs(truth.fun)
+    assert rel < 1e-3, (ours, truth.fun)
+    # feasibility in the ORIGINAL (unscaled) problem
+    A, b, _ = inst.to_dense()
+    cols = inst.src * spec.num_destinations + inst.dst
+    viol = np.maximum(A[:, cols] @ x - b, 0).max()
+    assert viol < 1e-3 * max(1.0, np.abs(b).max())
+
+
+def test_continuation_beats_fixed_small_gamma():
+    """Paper Fig. 5: gamma decay converges faster than fixed small gamma."""
+    spec = MatchingInstanceSpec(num_sources=120, num_destinations=10, avg_degree=4.0, seed=12)
+    packed, _ = normalize_rows(bucketize(generate_matching_instance(spec)))
+    obj = MatchingObjective(packed)
+    total = 240
+    cont = Maximizer(
+        obj, MaximizerConfig(gammas=(1.0, 0.1, 0.01), iters_per_stage=total // 3)
+    ).solve()
+    fixed = Maximizer(
+        obj, MaximizerConfig(gammas=(0.01,), iters_per_stage=total)
+    ).solve()
+    # evaluate both final duals at the target gamma
+    g_cont = float(obj.calculate(cont.lam, 0.01).g)
+    g_fixed = float(obj.calculate(fixed.lam, 0.01).g)
+    assert g_cont >= g_fixed - 1e-3 * abs(g_fixed)
+
+
+def test_jacobi_preconditioning_tightens_spectrum():
+    """Lemma B.1: row normalization drives sigma_max(A')^2 toward ~1."""
+    spec = MatchingInstanceSpec(
+        num_sources=150, num_destinations=12, avg_degree=4.0, scale_sigma=1.5, seed=13
+    )
+    packed = bucketize(generate_matching_instance(spec))
+    scaled, _ = normalize_rows(packed)
+    key = jax.random.key(0)
+    s_raw = float(MatchingObjective(packed).power_iteration(key, 40))
+    s_scaled = float(MatchingObjective(scaled).power_iteration(key, 40))
+    # normalized spectrum is much tighter and O(1)
+    assert s_scaled < s_raw
+    assert s_scaled < 10.0
+
+
+def test_warm_start_helps():
+    spec = MatchingInstanceSpec(num_sources=80, num_destinations=8, avg_degree=3.0, seed=14)
+    packed, _ = normalize_rows(bucketize(generate_matching_instance(spec)))
+    obj = MatchingObjective(packed)
+    cfg = MaximizerConfig(gammas=(0.01,), iters_per_stage=50)
+    cold = Maximizer(obj, cfg).solve()
+    warm = Maximizer(obj, cfg).solve(lam0=cold.lam)
+    assert float(warm.stats[0].grad_norm[-1]) <= float(cold.stats[0].grad_norm[0])
+
+
+def test_dual_gradient_is_exact():
+    """eq. 4 gradient == autodiff gradient of g (Danskin's theorem)."""
+    spec = MatchingInstanceSpec(num_sources=30, num_destinations=6, avg_degree=3.0, seed=15)
+    packed, _ = normalize_rows(bucketize(generate_matching_instance(spec)))
+    obj = MatchingObjective(packed)
+    lam = jnp.asarray(np.random.default_rng(0).random(6).astype(np.float32))
+
+    def g_of(lam_):
+        return obj.calculate(lam_, 0.5).g
+
+    auto = jax.grad(g_of)(lam)
+    analytic = obj.calculate(lam, 0.5).grad
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(analytic), atol=1e-4)
+
+
+def test_adaptive_restart_no_worse():
+    spec = MatchingInstanceSpec(num_sources=100, num_destinations=10, avg_degree=4.0, seed=16)
+    packed, _ = normalize_rows(bucketize(generate_matching_instance(spec)))
+    obj = MatchingObjective(packed)
+    base = MaximizerConfig(gammas=(0.1,), iters_per_stage=150, adaptive_restart=False)
+    rst = MaximizerConfig(gammas=(0.1,), iters_per_stage=150, adaptive_restart=True)
+    g0 = float(Maximizer(obj, base).solve().g)
+    g1 = float(Maximizer(obj, rst).solve().g)
+    assert g1 >= g0 - 1e-4 * abs(g0)

@@ -1,0 +1,75 @@
+"""Stability control (paper contribution 2): drift bound holds empirically."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Maximizer,
+    MaximizerConfig,
+    MatchingObjective,
+    RecurringSolver,
+    drift_bound,
+    primal_drift,
+)
+from repro.instances import (
+    MatchingInstanceSpec,
+    bucketize,
+    generate_matching_instance,
+)
+
+
+def _perturbed_pair(scale=0.02, seed=31):
+    spec = MatchingInstanceSpec(
+        num_sources=200, num_destinations=12, avg_degree=4.0, seed=seed
+    )
+    a = generate_matching_instance(spec)
+    b = dataclasses.replace(a)
+    rng = np.random.default_rng(seed + 1)
+    noise = 1.0 + scale * rng.standard_normal(a.nnz)
+    b.values = a.values * noise
+    b.coeff = a.coeff * noise
+    return a, b
+
+
+@pytest.mark.parametrize("gamma", [0.05, 0.5])
+def test_drift_bound_holds(gamma):
+    """||x*(lam1;c1) - x*(lam2;c2)|| <= (sigma||dlam|| + ||dc||)/gamma."""
+    a, b = _perturbed_pair()
+    pa, pb = bucketize(a), bucketize(b)
+    cfg = MaximizerConfig(gammas=(gamma,), iters_per_stage=400)
+    ra = Maximizer(MatchingObjective(pa), cfg).solve()
+    rb = Maximizer(MatchingObjective(pb), cfg).solve(lam0=ra.lam)
+    drift = float(primal_drift(ra.x_slabs, rb.x_slabs))
+    dc = float(np.sqrt(sum(
+        np.sum((np.asarray(x.cost) - np.asarray(y.cost)) ** 2)
+        for x, y in zip(pa.buckets, pb.buckets)
+    )))
+    # sigma_max of the raw instances (not normalized here)
+    sig = float(np.sqrt(max(ra.sigma_sq, rb.sigma_sq)))
+    dlam = float(np.linalg.norm(np.asarray(ra.lam) - np.asarray(rb.lam)))
+    # the A^T(dlam) term also carries the dA perturbation; grant 10% slack
+    bound = drift_bound(gamma, dc_norm=dc * 1.5, dlam_norm=dlam, sigma_max=sig)
+    assert drift <= bound * 1.1, (drift, bound)
+
+
+def test_larger_gamma_less_drift():
+    a, b = _perturbed_pair()
+    pa, pb = bucketize(a), bucketize(b)
+    drifts = {}
+    for gamma in (0.05, 1.0):
+        cfg = MaximizerConfig(gammas=(gamma,), iters_per_stage=300)
+        ra = Maximizer(MatchingObjective(pa), cfg).solve()
+        rb = Maximizer(MatchingObjective(pb), cfg).solve(lam0=ra.lam)
+        drifts[gamma] = float(primal_drift(ra.x_slabs, rb.x_slabs))
+    assert drifts[1.0] <= drifts[0.05] + 1e-6, drifts
+
+
+def test_recurring_solver_reports_drift():
+    a, b = _perturbed_pair()
+    rs = RecurringSolver(MaximizerConfig(iters_per_stage=100))
+    _, rep0 = rs.solve(bucketize(a))
+    assert rep0 == {}
+    _, rep1 = rs.solve(bucketize(b))
+    assert rep1["drift_l2"] >= 0
+    assert rep1["gamma_floor"] == 0.01

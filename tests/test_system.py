@@ -1,0 +1,87 @@
+"""End-to-end system behaviour: the paper's full pipeline + the LM substrate."""
+import numpy as np
+import pytest
+from scipy.optimize import linprog
+
+from repro.core import (
+    Maximizer,
+    MaximizerConfig,
+    MatchingObjective,
+    normalize_rows,
+)
+from repro.instances import (
+    MatchingInstanceSpec,
+    bucketize,
+    generate_matching_instance,
+    unpack_primal,
+)
+
+
+def test_end_to_end_solve_quality():
+    """generate -> pack -> normalize -> continuation solve -> verify vs HiGHS."""
+    spec = MatchingInstanceSpec(
+        num_sources=120, num_destinations=10, avg_degree=4.0, num_families=2, seed=42
+    )
+    inst = generate_matching_instance(spec)
+    packed = bucketize(inst)
+    scaled, _ = normalize_rows(packed)
+    res = Maximizer(
+        MatchingObjective(scaled), MaximizerConfig(iters_per_stage=400)
+    ).solve()
+    x = unpack_primal(packed, res.x_slabs)
+
+    A, b, c = inst.to_dense()
+    J = spec.num_destinations
+    cols = inst.src * J + inst.dst
+    S = np.zeros((spec.num_sources, inst.nnz))
+    S[inst.src, np.arange(inst.nnz)] = 1.0
+    truth = linprog(
+        c[cols], A_ub=np.vstack([A[:, cols], S]),
+        b_ub=np.concatenate([b, np.ones(spec.num_sources)]),
+        bounds=(0, None), method="highs",
+    )
+    rel = abs(float(np.dot(inst.cost, x)) - truth.fun) / abs(truth.fun)
+    assert rel < 2e-3
+    # simple constraints hold exactly (projection): per-source mass <= 1
+    mass = np.zeros(spec.num_sources)
+    np.add.at(mass, inst.src, x)
+    assert mass.max() <= 1.0 + 1e-5
+    assert x.min() >= -1e-7
+
+
+def test_end_to_end_fused_kernel_solve():
+    """Same pipeline with the fused Pallas dual-primal kernel in the loop."""
+    spec = MatchingInstanceSpec(num_sources=80, num_destinations=8, avg_degree=3.0, seed=43)
+    packed, _ = normalize_rows(bucketize(generate_matching_instance(spec)))
+    cfg = MaximizerConfig(iters_per_stage=150)
+    g_ref = float(Maximizer(MatchingObjective(packed), cfg).solve().g)
+    g_kern = float(
+        Maximizer(
+            MatchingObjective(packed, fused_kernel=True, kernel_interpret=True),
+            cfg,
+        ).solve().g
+    )
+    assert abs(g_ref - g_kern) / abs(g_ref) < 1e-4
+
+
+def test_end_to_end_train_and_serve():
+    """Train a tiny LM with the fault-tolerant loop, then serve it."""
+    from repro.configs import get_reduced_config
+    from repro.data.pipeline import SyntheticLMData
+    from repro.models.model import Model
+    from repro.serving.engine import Request, ServeEngine
+    from repro.training.loop import TrainLoopConfig, train_loop
+    from repro.training.optimizer import AdamWConfig
+
+    cfg = get_reduced_config("gemma-7b")
+    model = Model(cfg)
+    data = SyntheticLMData(cfg, batch=4, seq=32, seed=5)
+    state = train_loop(
+        model, data, AdamWConfig(lr=2e-3, warmup_steps=3, total_steps=15),
+        TrainLoopConfig(total_steps=15, save_every=100, log_every=0),
+    )
+    engine = ServeEngine(model, state.params, slots=2, max_seq=48)
+    req = Request(rid=0, prompt=np.arange(8, dtype=np.int32), max_new_tokens=4)
+    engine.submit(req)
+    engine.run()
+    assert len(req.out_tokens) == 4

@@ -1,0 +1,104 @@
+"""Training substrate: optimizer semantics, microbatch equivalence, loss goes down."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.data.pipeline import SyntheticLMData
+from repro.models.model import Model
+from repro.training.optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    lr_schedule,
+)
+from repro.training.train_step import TrainState, init_train_state
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(5e-4, rel=1e-3)
+    assert lrs[2] == pytest.approx(1e-3, rel=1e-3)
+    assert lrs[3] < lrs[2]
+    assert lrs[4] == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_grad_clip():
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.full((4,), 100.0)}
+    cfg = AdamWConfig(clip_norm=1.0, lr=1.0, weight_decay=0.0, warmup_steps=0)
+    _, _, metrics = adamw_update(cfg, grads, adamw_init(params), params)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_global_norm_no_ravel():
+    """global_norm must not use vdot/ravel (sharding-destroying; see DESIGN)."""
+    import inspect
+
+    src = inspect.getsource(global_norm)
+    code = "\n".join(
+        l.split("#")[0] for l in src.splitlines() if not l.strip().startswith("#")
+    )
+    assert "vdot(" not in code and "ravel(" not in code
+
+
+def test_adamw_matches_reference():
+    """One AdamW step vs a hand-rolled numpy reference."""
+    rng = np.random.default_rng(0)
+    p = {"a": jnp.asarray(rng.normal(size=(3, 2)).astype(np.float32))}
+    g = {"a": jnp.asarray(rng.normal(size=(3, 2)).astype(np.float32))}
+    cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+                      clip_norm=1e9, warmup_steps=0, total_steps=1, min_lr_ratio=1.0)
+    p2, st, _ = adamw_update(cfg, g, adamw_init(p), p)
+    gn = np.asarray(g["a"])
+    m = 0.1 * gn
+    v = 0.05 * gn ** 2
+    mh, vh = m / 0.1, v / 0.05
+    want = np.asarray(p["a"]) - 1e-2 * (mh / (np.sqrt(vh) + 1e-8) + 0.1 * np.asarray(p["a"]))
+    np.testing.assert_allclose(np.asarray(p2["a"]), want, atol=1e-6)
+
+
+def test_loss_decreases():
+    cfg = get_reduced_config("qwen3-8b")
+    model = Model(cfg)
+    data = SyntheticLMData(cfg, batch=8, seq=32, seed=0)
+    state = init_train_state(model, jax.random.key(0))
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=40)
+
+    @jax.jit
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(state.params, batch)
+        p, o, met = adamw_update(opt_cfg, grads, state.opt, state.params)
+        return TrainState(p, o, state.step + 1), loss
+
+    losses = []
+    for k in range(40):
+        state, loss = step(state, data(k))
+        losses.append(float(loss))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses[:3] + losses[-3:]
+
+
+def test_microbatch_equivalence():
+    """1 macro step == mean of microbatch grads (accumulation correctness)."""
+    cfg = get_reduced_config("gemma-7b")
+    model = Model(cfg)
+    data = SyntheticLMData(cfg, batch=8, seq=16, seed=1)
+    batch = jax.tree.map(jnp.asarray, data(0))
+    params = model.init(jax.random.key(0))
+    g_full = jax.grad(model.loss)(params, batch)
+    micro = jax.tree.map(
+        lambda x: x.reshape((4, 2) + x.shape[1:]), batch
+    )
+    g_acc = jax.tree.map(jnp.zeros_like, params)
+    for i in range(4):
+        mb = jax.tree.map(lambda x: x[i], micro)
+        g = jax.grad(model.loss)(params, mb)
+        g_acc = jax.tree.map(lambda a, b: a + b / 4, g_acc, g)
+    # token-weighted vs uniform microbatch weighting agree here because every
+    # microbatch has the same number of valid labels
+    for a, b in zip(jax.tree.leaves(g_full), jax.tree.leaves(g_acc)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3)
