@@ -19,6 +19,7 @@ SUITES = [
     "table4_quality",
     "fig4_preconditioning",
     "fig5_continuation",
+    "service_cadence",
     "roofline_report",
 ]
 

@@ -7,10 +7,17 @@ Operator-centric programming model (paper Table 1 / §5):
   Maximizer         -> `Maximizer` (single device, maximizer.py) and
                        `DistributedMaximizer` (column-sharded, sharding.py)
 
-Plus: gamma-stability control (stability.py) and the unstructured PDHG
-baseline the paper compares against (pdhg.py).
+Plus: gamma-stability control (stability.py), the unstructured PDHG
+baseline the paper compares against (pdhg.py), and convergence-based early
+stopping in the Maximizer (tol_grad/tol_viol) used by the recurring-solve
+service (repro.service).
 """
-from repro.core.objective import MatchingObjective, DualEval, normalize_rows
+from repro.core.objective import (
+    MatchingObjective,
+    DualEval,
+    normalize_rows,
+    normalize_rows_traced,
+)
 from repro.core.projections import (
     ProjectionMap,
     UnitSimplexProjection,
@@ -40,6 +47,7 @@ __all__ = [
     "MatchingObjective",
     "DualEval",
     "normalize_rows",
+    "normalize_rows_traced",
     "ProjectionMap",
     "UnitSimplexProjection",
     "BoxProjection",

@@ -36,10 +36,26 @@ __all__ = [
     "SolveResult",
     "Maximizer",
     "PAPER_GAMMA_SCHEDULE",
+    "step_size",
 ]
+
+# `_stage_scan` / `_stage_scan_early` are the shared stage primitives: the
+# distributed layer (core/sharding) and the recurring-solve service
+# (repro/service) both build their own drivers around them.
 
 # Paper §7.2: six-stage geometric schedule.
 PAPER_GAMMA_SCHEDULE: tuple[float, ...] = (1e3, 1e2, 10.0, 1.0, 1e-1, 1e-2)
+
+
+def step_size(
+    cfg: "MaximizerConfig", sigma_sq: jax.Array, gamma: float
+) -> jax.Array:
+    """Analytic AGD step eta = step_scale * gamma / sigma_max(A)^2, clipped
+    to the paper's range.  Single source of truth — Maximizer and the
+    recurring-solve service engine must agree for warm/batched solves to be
+    equivalent to one-shot solves."""
+    eta = cfg.step_scale * gamma / jnp.maximum(sigma_sq, 1e-20)
+    return jnp.clip(eta, cfg.min_step, cfg.max_step)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,10 +70,34 @@ class MaximizerConfig:
     power_iters: int = 30
     record_every: int = 1
     seed: int = 0
+    # Convergence-based early stopping (recurring-solve service): a stage exits
+    # once ||grad g|| <= tol_grad * max(1, |g|) and max(0, Ax-b) <= tol_viol,
+    # checked every `check_every` iterations inside a lax.while_loop of scanned
+    # chunks.  None disables the corresponding criterion; both None keeps the
+    # original fixed-budget single-scan stage (bitwise-identical trajectories).
+    tol_grad: Optional[float] = None
+    tol_viol: Optional[float] = None
+    check_every: int = 25
 
     @property
     def total_iters(self) -> int:
         return self.iters_per_stage * len(self.gammas)
+
+    @property
+    def early_stop(self) -> bool:
+        return self.tol_grad is not None or self.tol_viol is not None
+
+    @property
+    def stage_iter_budget(self) -> int:
+        """Worst-case iterations per stage (chunking rounds the budget up)."""
+        if not self.early_stop:
+            return self.iters_per_stage
+        chunk = max(1, min(self.check_every, self.iters_per_stage))
+        return -(-self.iters_per_stage // chunk) * chunk
+
+    @property
+    def total_iter_budget(self) -> int:
+        return self.stage_iter_budget * len(self.gammas)
 
 
 class StageStats(NamedTuple):
@@ -73,6 +113,13 @@ class SolveResult(NamedTuple):
     stats: tuple[StageStats, ...]  # one per continuation stage
     sigma_sq: jax.Array  # power-iteration estimate of sigma_max(A)^2
     steps: tuple[float, ...]  # per-stage step sizes actually used
+    # per-stage iterations actually executed (< iters_per_stage when the
+    # early-stop criterion fires); None when early stopping is disabled
+    iters_used: Optional[tuple[int, ...]] = None
+
+    @property
+    def total_iters_used(self) -> Optional[int]:
+        return None if self.iters_used is None else int(sum(self.iters_used))
 
 
 class _Carry(NamedTuple):
@@ -83,23 +130,15 @@ class _Carry(NamedTuple):
     comm: object  # opaque per-shard communication state (e.g. error feedback)
 
 
-def _stage_scan(
-    calculate: Callable,  # (lam, gamma, comm_state) -> (DualEval, comm_state)
-    lam0: jax.Array,
+def _agd_body(
+    calculate: Callable,
     gamma: jax.Array,
     eta: jax.Array,
-    iters: int,
     *,
     acceleration: bool,
     adaptive_restart: bool,
-    comm0: object = None,
-) -> tuple[jax.Array, StageStats, object]:
-    """One continuation stage of accelerated projected dual ascent.
-
-    `calculate` threads an opaque communication state through the loop — the
-    distributed layer uses it for gradient-compression error feedback; the
-    single-shard path passes None straight through.
-    """
+) -> Callable:
+    """Scan body of one accelerated projected dual-ascent iteration."""
 
     def body(carry: _Carry, _):
         beta = (carry.tk - 1.0) / (carry.tk + 2.0) if acceleration else 0.0
@@ -119,15 +158,123 @@ def _stage_scan(
         )
         return new, (ev.g, gn, viol)
 
-    init = _Carry(
+    return body
+
+
+def _init_carry(lam0: jax.Array, comm0: object) -> _Carry:
+    return _Carry(
         lam_prev=lam0,
         lam=lam0,
         tk=jnp.asarray(1.0, lam0.dtype),
         g_prev=jnp.asarray(-jnp.inf, lam0.dtype),
         comm=comm0,
     )
+
+
+def _stage_scan(
+    calculate: Callable,  # (lam, gamma, comm_state) -> (DualEval, comm_state)
+    lam0: jax.Array,
+    gamma: jax.Array,
+    eta: jax.Array,
+    iters: int,
+    *,
+    acceleration: bool,
+    adaptive_restart: bool,
+    comm0: object = None,
+) -> tuple[jax.Array, StageStats, object]:
+    """One continuation stage of accelerated projected dual ascent.
+
+    `calculate` threads an opaque communication state through the loop — the
+    distributed layer uses it for gradient-compression error feedback; the
+    single-shard path passes None straight through.
+    """
+    body = _agd_body(
+        calculate, gamma, eta,
+        acceleration=acceleration, adaptive_restart=adaptive_restart,
+    )
+    init = _init_carry(lam0, comm0)
     final, (gs, gns, viols) = jax.lax.scan(body, init, None, length=iters)
     return final.lam, StageStats(g=gs, grad_norm=gns, max_violation=viols), final.comm
+
+
+def _stage_scan_early(
+    calculate: Callable,
+    lam0: jax.Array,
+    gamma: jax.Array,
+    eta: jax.Array,
+    iters: int,
+    *,
+    acceleration: bool,
+    adaptive_restart: bool,
+    tol_grad: Optional[float],
+    tol_viol: Optional[float],
+    check_every: int,
+    comm0: object = None,
+) -> tuple[jax.Array, StageStats, object, jax.Array]:
+    """Early-stopping variant of `_stage_scan` (recurring-solve service).
+
+    Runs the same AGD body in chunks of `check_every` iterations inside a
+    `lax.while_loop`; after each chunk the convergence criterion
+    ``||grad|| <= tol_grad * max(1, |g|)  and  max(0, Ax-b) <= tol_viol``
+    is evaluated and the loop exits once met.  Warm-started solves therefore
+    pay only as many iterations as they need instead of the full fixed budget.
+
+    Returns `(lam, stats, comm, iters_used)`.  Stats traces are preallocated at
+    the padded budget; entries past `iters_used` are backfilled with the last
+    computed value, so `stats.g[-1]` etc. stay meaningful.  Under `vmap` the
+    batch runs lockstep until every element has converged.
+    """
+    body = _agd_body(
+        calculate, gamma, eta,
+        acceleration=acceleration, adaptive_restart=adaptive_restart,
+    )
+    chunk = max(1, min(int(check_every), int(iters)))
+    n_chunks = -(-int(iters) // chunk)  # ceil
+    total = n_chunks * chunk
+    dt = lam0.dtype
+    bufs0 = (
+        jnp.zeros((total,), dt),  # g
+        jnp.zeros((total,), dt),  # grad_norm
+        jnp.zeros((total,), dt),  # max_violation
+    )
+    state0 = (
+        _init_carry(lam0, comm0),
+        jnp.asarray(0, jnp.int32),  # chunks completed
+        jnp.asarray(False),  # converged
+        bufs0,
+    )
+
+    def cond(state):
+        _, k, done, _ = state
+        return jnp.logical_and(k < n_chunks, jnp.logical_not(done))
+
+    def step(state):
+        carry, k, _, (bg, bgn, bv) = state
+        carry, (gs, gns, viols) = jax.lax.scan(body, carry, None, length=chunk)
+        off = k * chunk
+        bg = jax.lax.dynamic_update_slice(bg, gs, (off,))
+        bgn = jax.lax.dynamic_update_slice(bgn, gns, (off,))
+        bv = jax.lax.dynamic_update_slice(bv, viols, (off,))
+        done = jnp.asarray(True)
+        if tol_grad is not None:
+            scale = jnp.maximum(1.0, jnp.abs(gs[-1]))
+            done = jnp.logical_and(done, gns[-1] <= tol_grad * scale)
+        if tol_viol is not None:
+            done = jnp.logical_and(done, viols[-1] <= tol_viol)
+        return carry, k + 1, done, (bg, bgn, bv)
+
+    final, k, _, (bg, bgn, bv) = jax.lax.while_loop(cond, step, state0)
+    iters_used = (k * chunk).astype(jnp.int32)
+    last = jnp.maximum(iters_used - 1, 0)
+    pos = jnp.arange(total)
+
+    def backfill(buf):
+        return jnp.where(pos < iters_used, buf, buf[last])
+
+    stats = StageStats(
+        g=backfill(bg), grad_norm=backfill(bgn), max_violation=backfill(bv)
+    )
+    return final.lam, stats, final.comm, iters_used
 
 
 class Maximizer:
@@ -150,20 +297,32 @@ class Maximizer:
         def calc(lam, gamma, comm):
             return objective.calculate(lam, gamma), comm
 
-        self._stage_fn = jax.jit(
-            partial(
-                _stage_scan,
-                calc,
-                iters=config.iters_per_stage,
-                acceleration=config.acceleration,
-                adaptive_restart=config.adaptive_restart,
+        if config.early_stop:
+            self._stage_fn = jax.jit(
+                partial(
+                    _stage_scan_early,
+                    calc,
+                    iters=config.iters_per_stage,
+                    acceleration=config.acceleration,
+                    adaptive_restart=config.adaptive_restart,
+                    tol_grad=config.tol_grad,
+                    tol_viol=config.tol_viol,
+                    check_every=config.check_every,
+                )
             )
-        )
+        else:
+            self._stage_fn = jax.jit(
+                partial(
+                    _stage_scan,
+                    calc,
+                    iters=config.iters_per_stage,
+                    acceleration=config.acceleration,
+                    adaptive_restart=config.adaptive_restart,
+                )
+            )
 
     def step_size(self, sigma_sq: jax.Array, gamma: float) -> jax.Array:
-        cfg = self.config
-        eta = cfg.step_scale * gamma / jnp.maximum(sigma_sq, 1e-20)
-        return jnp.clip(eta, cfg.min_step, cfg.max_step)
+        return step_size(self.config, sigma_sq, gamma)
 
     def solve(self, lam0: Optional[jax.Array] = None) -> SolveResult:
         cfg = self.config
@@ -176,11 +335,18 @@ class Maximizer:
         )
         stats: list[StageStats] = []
         steps: list[float] = []
+        iters_used: list[int] = []
         for gamma in cfg.gammas:
             eta = self.step_size(sigma_sq, gamma)
-            lam, st, _ = self._stage_fn(
-                lam, jnp.asarray(gamma, lam.dtype), eta.astype(lam.dtype)
-            )
+            if cfg.early_stop:
+                lam, st, _, used = self._stage_fn(
+                    lam, jnp.asarray(gamma, lam.dtype), eta.astype(lam.dtype)
+                )
+                iters_used.append(int(used))
+            else:
+                lam, st, _ = self._stage_fn(
+                    lam, jnp.asarray(gamma, lam.dtype), eta.astype(lam.dtype)
+                )
             stats.append(st)
             steps.append(float(eta))
         final = jax.jit(obj.calculate)(lam, jnp.asarray(cfg.gammas[-1], lam.dtype))
@@ -191,4 +357,5 @@ class Maximizer:
             stats=tuple(stats),
             sigma_sq=sigma_sq,
             steps=tuple(steps),
+            iters_used=tuple(iters_used) if cfg.early_stop else None,
         )

@@ -30,7 +30,12 @@ import numpy as np
 from repro.core.projections import ProjectionMap, UnitSimplexProjection
 from repro.instances.buckets import Bucket, BucketedInstance
 
-__all__ = ["DualEval", "MatchingObjective", "normalize_rows"]
+__all__ = [
+    "DualEval",
+    "MatchingObjective",
+    "normalize_rows",
+    "normalize_rows_traced",
+]
 
 
 class DualEval(NamedTuple):
@@ -180,6 +185,53 @@ class MatchingObjective:
 
         _, norms = jax.lax.scan(body, u0, None, length=iters)
         return norms[-1]  # ~ sigma_max^2
+
+
+def normalize_rows_traced(
+    inst: BucketedInstance, eps: float = 1e-30
+) -> tuple[BucketedInstance, jax.Array]:
+    """Jacobi row normalization as a traced (device-side) transform.
+
+    Same math as `normalize_rows` (A' = D A, b' = D b, D_r = 1/||A_r||_2)
+    but expressed in jnp so it can run *inside* a compiled solve.  The
+    recurring-solve service needs this: delta ingestion mutates the raw
+    slabs in place, and re-running the host-side O(nnz) normalization every
+    cadence would defeat the O(delta) update path.  One extra segment-sum +
+    gather per solve is amortised over hundreds of AGD iterations.
+
+    The costs `c` and the feasible set are untouched, so the primal solution
+    is that of the original problem; returned duals live in the scaled space
+    (lam_original = D lam'), which is consistent cadence-over-cadence as long
+    as every solve applies the same transform.
+    """
+    m, J = inst.num_families, inst.num_destinations
+    norms_sq = jnp.zeros((m, J), jnp.float32)
+    for b in inst.buckets:
+        contrib = (b.coeff**2) * b.mask[None]  # [m, n, L]
+        flat_idx = jnp.broadcast_to(b.idx[None], contrib.shape).reshape(m, -1)
+        norms_sq = norms_sq + jax.vmap(
+            lambda data, seg: jnp.zeros((J,), data.dtype).at[seg].add(data)
+        )(contrib.reshape(m, -1), flat_idx)
+    norms = jnp.sqrt(norms_sq)
+    d2 = jnp.where(norms > eps, 1.0 / jnp.maximum(norms, eps), 1.0)  # [m, J]
+    buckets = tuple(
+        Bucket(
+            idx=b.idx,
+            coeff=b.coeff * jnp.take(d2, b.idx, axis=1),
+            cost=b.cost,
+            mask=b.mask,
+            length=b.length,
+        )
+        for b in inst.buckets
+    )
+    scaled = BucketedInstance(
+        buckets=buckets,
+        rhs=jnp.asarray(inst.rhs) * d2.reshape(-1),
+        num_sources=inst.num_sources,
+        num_destinations=inst.num_destinations,
+        num_families=inst.num_families,
+    )
+    return scaled, d2.reshape(-1)
 
 
 def normalize_rows(

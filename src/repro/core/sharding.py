@@ -41,6 +41,7 @@ from repro.core.maximizer import (
     SolveResult,
     StageStats,
     _stage_scan,
+    step_size,
 )
 from repro.core.objective import DualEval, MatchingObjective
 from repro.core.projections import ProjectionMap, UnitSimplexProjection
@@ -177,6 +178,12 @@ class DistributedMaximizer:
         dist: DistConfig = DistConfig(),
         projection: Optional[ProjectionMap] = None,
     ):
+        if config.early_stop:
+            raise NotImplementedError(
+                "DistributedMaximizer runs fixed-budget stages; early stopping "
+                "(tol_grad/tol_viol) needs a psum'd convergence predicate — "
+                "see ROADMAP.  Use tol_grad=None, tol_viol=None here."
+            )
         self.mesh = mesh
         self.config = config
         self.dist = dist
@@ -280,11 +287,7 @@ class DistributedMaximizer:
             sigma_sq = self._power_fn(u0, self.inst)
             stats, steps = [], []
             for gamma in cfg.gammas:
-                eta = jnp.clip(
-                    cfg.step_scale * gamma / jnp.maximum(sigma_sq, 1e-20),
-                    cfg.min_step,
-                    cfg.max_step,
-                )
+                eta = step_size(cfg, sigma_sq, gamma)
                 lam, st, _ = self._stage_fn(
                     lam, jnp.float32(gamma), eta.astype(jnp.float32), self.inst
                 )

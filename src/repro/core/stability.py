@@ -62,18 +62,33 @@ class RecurringSolver:
 
     def solve(self, inst: BucketedInstance) -> tuple[SolveResult, dict]:
         obj = MatchingObjective(inst)
-        res = Maximizer(obj, self.config).solve(lam0=self.lam_prev)
+        lam0 = self.lam_prev
+        cold_start_reason = None
+        if lam0 is not None and lam0.shape != (obj.dual_dim,):
+            # Shape drift: a resized instance (different destination/family
+            # count) makes yesterday's duals meaningless, and passing them
+            # into the jitted stage function would crash at trace time.
+            # Fall back to a cold start and say so.
+            lam0 = None
+            self.x_prev = None
+            cold_start_reason = "dual_dim_drift"
+        res = Maximizer(obj, self.config).solve(lam0=lam0)
         report = {}
-        if self.x_prev is not None:
+        if cold_start_reason is not None:
+            report["cold_start_reason"] = cold_start_reason
+        slabs_comparable = self.x_prev is not None and [
+            x.shape for x in self.x_prev
+        ] == [x.shape for x in res.x_slabs]
+        if slabs_comparable:
             drift = float(primal_drift(res.x_slabs, self.x_prev))
             x_norm = float(
                 jnp.sqrt(sum(jnp.vdot(x, x) for x in res.x_slabs))
             )
-            report = {
-                "drift_l2": drift,
-                "drift_rel": drift / max(x_norm, 1e-12),
-                "gamma_floor": self.config.gammas[-1],
-            }
+            report.update(
+                drift_l2=drift,
+                drift_rel=drift / max(x_norm, 1e-12),
+                gamma_floor=self.config.gammas[-1],
+            )
         self.lam_prev = res.lam
         self.x_prev = res.x_slabs
         return res, report

@@ -15,7 +15,14 @@ from repro.instances.buckets import (
     BucketedInstance,
     bucketize,
     pack_single_slab,
+    pack_source_ids,
     unpack_primal,
+)
+from repro.instances.deltas import (
+    InstanceDelta,
+    DeltaReport,
+    DeltaIngestor,
+    apply_delta_to_edge_list,
 )
 
 __all__ = [
@@ -26,5 +33,10 @@ __all__ = [
     "BucketedInstance",
     "bucketize",
     "pack_single_slab",
+    "pack_source_ids",
     "unpack_primal",
+    "InstanceDelta",
+    "DeltaReport",
+    "DeltaIngestor",
+    "apply_delta_to_edge_list",
 ]

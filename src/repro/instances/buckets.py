@@ -35,6 +35,7 @@ __all__ = [
     "BucketedInstance",
     "bucketize",
     "pack_single_slab",
+    "pack_source_ids",
     "unpack_primal",
 ]
 
@@ -208,6 +209,19 @@ def pack_single_slab(
     return bucketize(
         inst, shard_multiple=shard_multiple, min_length=width, dtype=dtype
     )
+
+
+def pack_source_ids(packed: BucketedInstance) -> list[np.ndarray]:
+    """Per-bucket source id of each slab row (-1 for padded rows).
+
+    Only available for instances produced by `bucketize` in this process; the
+    delta-ingest layer (`repro.instances.deltas`) uses it to seed its
+    row-occupancy maps.
+    """
+    info = _PACK_INFO.get(id(packed))
+    if info is None:
+        raise KeyError("pack_source_ids: packing info not found for this instance")
+    return [a.copy() for a in info.source_ids]
 
 
 def unpack_primal(

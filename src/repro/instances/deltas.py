@@ -1,0 +1,667 @@
+"""Delta ingestion for recurring solves: O(delta) updates on bucketed-ELL slabs.
+
+The paper's workload is "solved repeatedly on recurring cadences over slowly
+evolving inputs": day-over-day the eligibility graph gains/loses a small set of
+edges and costs/budgets shift, while the vast majority of nonzeros are
+unchanged.  Re-running `bucketize` (O(nnz) host work) and re-compiling the
+stage functions (new slab shapes => jit cache miss) every cadence throws that
+structure away.
+
+`DeltaIngestor` instead keeps the packed `BucketedInstance` as the mutable
+source of truth and applies an `InstanceDelta` *in place* on the slabs:
+
+  * cost / coefficient updates overwrite the edge's slot;
+  * deletions swap the row's last active slot into the hole (active slots of a
+    row stay contiguous in ``[0, degree)``, the invariant `bucketize`
+    establishes);
+  * insertions fill the row's padding headroom (slab width L >= degree);
+  * a source whose new degree outgrows its slab width is *moved* to a
+    wider bucket's free (padded) row — row headroom can be reserved at build
+    time via ``row_headroom``;
+  * RHS updates replace the budget vector.
+
+Every in-place path preserves slab shapes exactly, so downstream jitted stage
+functions keyed on shapes are reused with zero recompilation.  Only when a
+bucket runs out of headroom (or a degree exceeds the widest bucket) does the
+ingestor fall back to a full re-bucketize — reported, so the serving layer can
+account for the recompile.
+
+Padding stays exact-zero everywhere (mask 0, coeff 0), so gradients are
+unaffected — the same guarantee `bucketize` documents.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.instances.buckets import (
+    Bucket,
+    BucketedInstance,
+    bucketize,
+    pack_source_ids,
+)
+from repro.instances.generator import EdgeListInstance, MatchingInstanceSpec
+
+__all__ = [
+    "InstanceDelta",
+    "DeltaReport",
+    "DeltaIngestor",
+    "apply_delta_to_edge_list",
+]
+
+
+def _as_1d(a, dtype) -> np.ndarray:
+    out = np.asarray([] if a is None else a, dtype=dtype)
+    return out.reshape(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceDelta:
+    """A batch of edits to a matching LP between two cadences.
+
+    Edge edits are addressed by (source, destination) pairs; ``values`` follow
+    the generator convention (positive matched value, the solver minimises
+    ``cost = -value``).  ``insert_coeff``/``update_coeff`` have shape
+    ``[m, k]`` (one row per coupling family).  ``rhs`` replaces the full
+    ``[m * J]`` budget vector when given.
+    """
+
+    insert_src: np.ndarray = None
+    insert_dst: np.ndarray = None
+    insert_values: np.ndarray = None
+    insert_coeff: np.ndarray = None  # [m, k_ins]
+    delete_src: np.ndarray = None
+    delete_dst: np.ndarray = None
+    update_src: np.ndarray = None
+    update_dst: np.ndarray = None
+    update_values: Optional[np.ndarray] = None  # None: keep values
+    update_coeff: Optional[np.ndarray] = None  # [m, k_upd]; None: keep coeff
+    rhs: Optional[np.ndarray] = None  # [m * J] replacement
+
+    def __post_init__(self):
+        s = object.__setattr__
+        s(self, "insert_src", _as_1d(self.insert_src, np.int64))
+        s(self, "insert_dst", _as_1d(self.insert_dst, np.int64))
+        s(self, "insert_values", _as_1d(self.insert_values, np.float64))
+        coeff = self.insert_coeff
+        if coeff is None:
+            coeff = np.zeros((0, self.insert_src.size), np.float64)
+        s(self, "insert_coeff", np.atleast_2d(np.asarray(coeff, np.float64)))
+        s(self, "delete_src", _as_1d(self.delete_src, np.int64))
+        s(self, "delete_dst", _as_1d(self.delete_dst, np.int64))
+        s(self, "update_src", _as_1d(self.update_src, np.int64))
+        s(self, "update_dst", _as_1d(self.update_dst, np.int64))
+        if self.update_values is not None:
+            s(self, "update_values", _as_1d(self.update_values, np.float64))
+        if self.update_coeff is not None:
+            s(self, "update_coeff",
+              np.atleast_2d(np.asarray(self.update_coeff, np.float64)))
+        if self.rhs is not None:
+            s(self, "rhs", _as_1d(self.rhs, np.float64))
+        if self.insert_src.size != self.insert_dst.size:
+            raise ValueError("insert_src/insert_dst size mismatch")
+        if self.insert_src.size != self.insert_values.size:
+            raise ValueError("insert_values size mismatch")
+        if self.insert_src.size and self.insert_coeff.shape[1] != self.insert_src.size:
+            raise ValueError("insert_coeff must be [m, k_ins]")
+        if self.delete_src.size != self.delete_dst.size:
+            raise ValueError("delete_src/delete_dst size mismatch")
+        if self.update_src.size != self.update_dst.size:
+            raise ValueError("update_src/update_dst size mismatch")
+        if self.update_values is not None and self.update_values.size != self.update_src.size:
+            raise ValueError("update_values size mismatch")
+        if self.update_coeff is not None and self.update_coeff.shape[1] != self.update_src.size:
+            raise ValueError("update_coeff must be [m, k_upd]")
+
+    @property
+    def num_edits(self) -> int:
+        return int(
+            self.insert_src.size + self.delete_src.size + self.update_src.size
+        )
+
+    @property
+    def is_empty(self) -> bool:
+        return self.num_edits == 0 and self.rhs is None
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaReport:
+    """What a `DeltaIngestor.apply` call did."""
+
+    in_place: bool  # True: slabs mutated, shapes untouched
+    rebucketized: bool  # True: fell back to a full re-pack
+    shapes_changed: bool  # only possible when rebucketized
+    n_insert: int
+    n_delete: int
+    n_update: int
+    rhs_updated: bool
+    moved_rows: int  # sources relocated to a wider bucket
+    fallback_reason: Optional[str] = None
+
+
+class DeltaIngestor:
+    """Owns the mutable packed instance of one tenant and applies deltas.
+
+    The packed slabs (numpy, host-side) are the source of truth; the original
+    edge list is only reconstructed on demand (``to_edge_list``) or when an
+    overflow forces the re-bucketize fallback.  ``row_headroom`` reserves that
+    many extra all-padding rows per bucket at build time so that new sources
+    and bucket promotions can be absorbed in place.
+    """
+
+    def __init__(
+        self,
+        inst: EdgeListInstance,
+        *,
+        shard_multiple: int = 1,
+        min_length: int = 1,
+        row_headroom: int = 0,
+        dtype=np.float32,
+    ):
+        self.spec: MatchingInstanceSpec = inst.spec
+        self.shard_multiple = int(shard_multiple)
+        self.min_length = int(min_length)
+        self.row_headroom = int(row_headroom)
+        self.dtype = dtype
+        self._rhs64 = np.asarray(inst.rhs, np.float64).copy()
+        # ||Delta c||^2 accumulated since the last drain — feeds the paper's
+        # gamma drift bound (core.stability.drift_bound) in SLA reports.
+        self._pending_dc_sq = 0.0
+        self._build(inst)
+
+    # -- construction -------------------------------------------------------
+
+    def _build(self, inst: EdgeListInstance) -> None:
+        packed = bucketize(
+            inst,
+            shard_multiple=self.shard_multiple,
+            min_length=self.min_length,
+            dtype=self.dtype,
+        )
+        source_ids = pack_source_ids(packed)
+        I = self.spec.num_sources
+        buckets = []
+        sids = []
+        extra = self.row_headroom
+        if extra:
+            extra = -(-extra // self.shard_multiple) * self.shard_multiple
+        for b, sid in zip(packed.buckets, source_ids):
+            idx = np.array(b.idx)  # own, writable copies
+            coeff = np.array(b.coeff)
+            cost = np.array(b.cost)
+            mask = np.array(b.mask)
+            if extra:
+                idx = np.pad(idx, ((0, extra), (0, 0)))
+                coeff = np.pad(coeff, ((0, 0), (0, extra), (0, 0)))
+                cost = np.pad(cost, ((0, extra), (0, 0)))
+                mask = np.pad(mask, ((0, extra), (0, 0)))
+                sid = np.concatenate([sid, np.full(extra, -1, np.int64)])
+            buckets.append(
+                Bucket(idx=idx, coeff=coeff, cost=cost, mask=mask, length=b.length)
+            )
+            sids.append(np.asarray(sid, np.int64))
+        self.packed = BucketedInstance(
+            buckets=tuple(buckets),
+            rhs=self._rhs64.astype(self.dtype),
+            num_sources=packed.num_sources,
+            num_destinations=packed.num_destinations,
+            num_families=packed.num_families,
+        )
+        self._source_ids = sids
+        self._lengths = [b.length for b in buckets]
+        self.deg = np.bincount(inst.src, minlength=I).astype(np.int64)
+        self.bucket_of = np.full(I, -1, np.int64)
+        self.row_of = np.full(I, -1, np.int64)
+        self._free_rows: list[list[int]] = []
+        for t, sid in enumerate(sids):
+            occupied = sid >= 0
+            self.bucket_of[sid[occupied]] = t
+            self.row_of[sid[occupied]] = np.flatnonzero(occupied)
+            self._free_rows.append(list(np.flatnonzero(~occupied)[::-1]))
+
+    # -- views ---------------------------------------------------------------
+
+    def instance(self) -> BucketedInstance:
+        """The current packed instance (live view; do not mutate externally)."""
+        return self.packed
+
+    @property
+    def nnz(self) -> int:
+        return int(self.deg.sum())
+
+    def headroom(self) -> list[int]:
+        """Free (all-padding) rows per bucket."""
+        return [len(fr) for fr in self._free_rows]
+
+    def drain_cost_drift(self) -> float:
+        """||Delta c||_2 accumulated since the last drain (then reset)."""
+        out = float(np.sqrt(self._pending_dc_sq))
+        self._pending_dc_sq = 0.0
+        return out
+
+    def unpack_primal(
+        self, x_slabs: Sequence[np.ndarray]
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Primal slab values keyed by edge: `(keys, x)`, keys sorted.
+
+        ``keys[e] = src * J + dst``.  Unlike slab-position comparisons, this
+        keying survives row relocations and re-bucketizes, so cadence-over-
+        cadence drift can always be metered edge-by-edge.
+        """
+        J = self.spec.num_destinations
+        keys, vals = [], []
+        for t, b in enumerate(self.packed.buckets):
+            sid = self._source_ids[t]
+            rows = np.flatnonzero(sid >= 0)
+            if rows.size == 0:
+                continue
+            d = self.deg[sid[rows]]
+            live = d > 0
+            rows, d = rows[live], d[live]
+            if rows.size == 0:
+                continue
+            r = np.repeat(rows, d)
+            o = np.concatenate([np.arange(k) for k in d])
+            keys.append(np.repeat(sid[rows], d) * J + b.idx[r, o].astype(np.int64))
+            vals.append(np.asarray(x_slabs[t])[r, o].astype(np.float64))
+        k = np.concatenate(keys) if keys else np.zeros(0, np.int64)
+        v = np.concatenate(vals) if vals else np.zeros(0)
+        order = np.argsort(k)
+        return k[order], v[order]
+
+    def to_edge_list(self) -> EdgeListInstance:
+        """Reconstruct the current state as a sorted edge list (O(nnz))."""
+        srcs, dsts, vals, coeffs = [], [], [], []
+        m = self.packed.num_families
+        for t, b in enumerate(self.packed.buckets):
+            sid = self._source_ids[t]
+            rows = np.flatnonzero(sid >= 0)
+            if rows.size == 0:
+                continue
+            d = self.deg[sid[rows]]
+            live = d > 0
+            rows, d = rows[live], d[live]
+            if rows.size == 0:
+                continue
+            r = np.repeat(rows, d)
+            o = np.concatenate([np.arange(k) for k in d])
+            srcs.append(np.repeat(sid[rows], d))
+            dsts.append(b.idx[r, o].astype(np.int64))
+            vals.append(-b.cost[r, o].astype(np.float64))
+            coeffs.append(b.coeff[:, r, o].astype(np.float64))
+        src = np.concatenate(srcs) if srcs else np.zeros(0, np.int64)
+        dst = np.concatenate(dsts) if dsts else np.zeros(0, np.int64)
+        values = np.concatenate(vals) if vals else np.zeros(0)
+        coeff = (
+            np.concatenate(coeffs, axis=1) if coeffs else np.zeros((m, 0))
+        )
+        order = np.lexsort((dst, src))
+        return EdgeListInstance(
+            spec=self.spec,
+            src=src[order],
+            dst=dst[order],
+            values=values[order],
+            coeff=coeff[:, order],
+            rhs=self._rhs64.copy(),
+        )
+
+    # -- the delta path ------------------------------------------------------
+
+    def apply(self, delta: InstanceDelta) -> DeltaReport:
+        """Apply one delta; in place when headroom allows, else re-bucketize.
+
+        Validation is complete before the first mutation (`_validate` +
+        `_precheck` + move planning), so a rejected delta raises without
+        touching the slabs, the occupancy maps, or the drift accounting —
+        the caller can correct and retry.
+        """
+        self._validate(delta)
+        self._precheck(delta)
+        plan_or_reason = self._plan_moves(delta)
+        if isinstance(plan_or_reason, str):
+            return self._fallback(delta, plan_or_reason)
+        moves, to_free = plan_or_reason
+
+        # 1. deletions (rows stay owned even at transient degree 0, so a
+        #    delete-all-then-reinsert delta keeps the source's row)
+        for s, d in zip(delta.delete_src, delta.delete_dst):
+            self._delete_edge(int(s), int(d))
+        # 2. release rows of sources whose *final* degree is 0 (planner-known),
+        #    making them available to the relocation pass
+        for s in to_free:
+            self._release_row(s)
+        # 3. row relocations / allocations for grown sources
+        for s, t_new in moves:
+            self._move_row(s, t_new)
+        # 4. insertions into (now sufficient) row headroom
+        for j, (s, d) in enumerate(zip(delta.insert_src, delta.insert_dst)):
+            self._insert_edge(
+                int(s), int(d),
+                float(delta.insert_values[j]), delta.insert_coeff[:, j],
+            )
+        # 5. cost/coefficient updates
+        for j, (s, d) in enumerate(zip(delta.update_src, delta.update_dst)):
+            val = None if delta.update_values is None else float(delta.update_values[j])
+            co = None if delta.update_coeff is None else delta.update_coeff[:, j]
+            self._update_edge(int(s), int(d), val, co)
+        # 6. budgets
+        if delta.rhs is not None:
+            self._rhs64[:] = delta.rhs
+            self.packed.rhs = self._rhs64.astype(self.dtype)
+        return DeltaReport(
+            in_place=True,
+            rebucketized=False,
+            shapes_changed=False,
+            n_insert=int(delta.insert_src.size),
+            n_delete=int(delta.delete_src.size),
+            n_update=int(delta.update_src.size),
+            rhs_updated=delta.rhs is not None,
+            moved_rows=len(moves),
+        )
+
+    def _validate(self, delta: InstanceDelta) -> None:
+        I, J, m = (
+            self.spec.num_sources,
+            self.spec.num_destinations,
+            self.spec.num_families,
+        )
+        for name in ("insert", "delete", "update"):
+            src = getattr(delta, f"{name}_src")
+            dst = getattr(delta, f"{name}_dst")
+            if src.size and (src.min() < 0 or src.max() >= I):
+                raise ValueError(f"{name}_src out of range [0, {I})")
+            if dst.size and (dst.min() < 0 or dst.max() >= J):
+                raise ValueError(f"{name}_dst out of range [0, {J})")
+        if delta.insert_src.size and delta.insert_coeff.shape[0] != m:
+            raise ValueError(f"insert_coeff must have {m} families")
+        if delta.update_coeff is not None and delta.update_coeff.shape[0] != m:
+            raise ValueError(f"update_coeff must have {m} families")
+        if delta.rhs is not None and delta.rhs.size != m * J:
+            raise ValueError(f"rhs must have {m * J} entries")
+
+    def _edge_exists(self, s: int, d: int) -> bool:
+        t = int(self.bucket_of[s])
+        if t < 0:
+            return False
+        b = self.packed.buckets[t]
+        dd = int(self.deg[s])
+        return dd > 0 and bool(np.any(b.idx[int(self.row_of[s]), :dd] == d))
+
+    def _precheck(self, delta: InstanceDelta) -> None:
+        """Reject bad edits BEFORE any mutation, keeping `apply` atomic.
+
+        Semantics mirror the apply order (deletes, inserts, updates): an
+        insert may re-create an edge deleted by the same delta, and an
+        update may target an edge inserted by the same delta.
+        """
+        J = self.spec.num_destinations
+        deleted: set = set()
+        for s, d in zip(delta.delete_src, delta.delete_dst):
+            key = int(s) * J + int(d)
+            if key in deleted:
+                raise KeyError(f"delete: duplicate edge ({s}, {d}) in delta")
+            if not self._edge_exists(int(s), int(d)):
+                raise KeyError(f"delete: edge ({s}, {d}) not present")
+            deleted.add(key)
+        inserted: set = set()
+        for s, d in zip(delta.insert_src, delta.insert_dst):
+            key = int(s) * J + int(d)
+            if key in inserted:
+                raise KeyError(f"insert: duplicate edge ({s}, {d}) in delta")
+            if key not in deleted and self._edge_exists(int(s), int(d)):
+                raise KeyError(f"insert: edge ({s}, {d}) already present")
+            inserted.add(key)
+        updated: set = set()
+        for s, d in zip(delta.update_src, delta.update_dst):
+            key = int(s) * J + int(d)
+            if key in updated:
+                # duplicates would make drift accounting order-dependent
+                # (and diverge between the in-place and fallback paths)
+                raise KeyError(f"update: duplicate edge ({s}, {d}) in delta")
+            alive = key in inserted or (
+                key not in deleted and self._edge_exists(int(s), int(d))
+            )
+            if not alive:
+                raise KeyError(f"update: edge ({s}, {d}) not present")
+            updated.add(key)
+
+    def _plan_moves(self, delta: InstanceDelta):
+        """Per-source final degrees -> list of (source, target_bucket) moves.
+
+        Returns a fallback-reason string when the delta cannot be absorbed in
+        place (degree beyond the widest bucket, or not enough free rows).
+        """
+        net: dict[int, int] = {}
+        for s in delta.insert_src:
+            net[int(s)] = net.get(int(s), 0) + 1
+        for s in delta.delete_src:
+            net[int(s)] = net.get(int(s), 0) - 1
+        lengths = self._lengths
+        moves: list[tuple[int, int]] = []
+        to_free: list[int] = []
+        free = [len(fr) for fr in self._free_rows]
+        for s, dd in net.items():
+            d_new = int(self.deg[s]) + dd
+            if d_new < 0:
+                raise ValueError(f"source {s}: more deletions than edges")
+            if d_new == 0:
+                t = int(self.bucket_of[s])
+                if t >= 0:
+                    free[t] += 1  # released before the relocation pass
+                    to_free.append(s)
+                continue
+            if d_new > lengths[-1]:
+                return (
+                    f"source {s} degree {d_new} exceeds widest bucket "
+                    f"L={lengths[-1]}"
+                )
+            t_cur = int(self.bucket_of[s])
+            if t_cur >= 0 and d_new <= lengths[t_cur]:
+                continue  # fits where it is
+            t_new = int(np.searchsorted(lengths, d_new))
+            moves.append((s, t_new))
+        # Greedy feasibility, widest target first: rows vacated by a move are
+        # in narrower buckets and so can host later (narrower-target) moves.
+        moves.sort(key=lambda st: -st[1])
+        for s, t_new in moves:
+            if free[t_new] == 0:
+                return f"bucket L={lengths[t_new]} has no free rows"
+            free[t_new] -= 1
+            t_cur = int(self.bucket_of[s])
+            if t_cur >= 0:
+                free[t_cur] += 1
+        return moves, to_free
+
+    def _fallback(self, delta: InstanceDelta, reason: str) -> DeltaReport:
+        old_shapes = [(b.rows, b.length) for b in self.packed.buckets]
+        cur = self.to_edge_list()
+        # cost-drift bookkeeping (edge lists are (src, dst)-sorted, so the
+        # (src*J + dst) key is sorted and searchsorted locates exact hits)
+        J = self.spec.num_destinations
+        key = cur.src * J + cur.dst
+        dc_sq = float(np.sum(delta.insert_values**2))
+        if delta.delete_src.size:
+            pos = np.searchsorted(key, delta.delete_src * J + delta.delete_dst)
+            pos = np.clip(pos, 0, key.size - 1)
+            hit = key[pos] == delta.delete_src * J + delta.delete_dst
+            dc_sq += float(np.sum(cur.values[pos[hit]] ** 2))
+        if delta.update_src.size and delta.update_values is not None:
+            pos = np.searchsorted(key, delta.update_src * J + delta.update_dst)
+            pos = np.clip(pos, 0, key.size - 1)
+            hit = key[pos] == delta.update_src * J + delta.update_dst
+            dc_sq += float(
+                np.sum((cur.values[pos[hit]] - delta.update_values[hit]) ** 2)
+            )
+        self._pending_dc_sq += dc_sq
+        mutated = apply_delta_to_edge_list(cur, delta)
+        self._rhs64 = np.asarray(mutated.rhs, np.float64).copy()
+        self._build(mutated)
+        new_shapes = [(b.rows, b.length) for b in self.packed.buckets]
+        return DeltaReport(
+            in_place=False,
+            rebucketized=True,
+            shapes_changed=old_shapes != new_shapes,
+            n_insert=int(delta.insert_src.size),
+            n_delete=int(delta.delete_src.size),
+            n_update=int(delta.update_src.size),
+            rhs_updated=delta.rhs is not None,
+            moved_rows=0,
+            fallback_reason=reason,
+        )
+
+    # -- slab surgery --------------------------------------------------------
+
+    def _slot_of(self, s: int, d: int) -> tuple[int, int, int]:
+        t = int(self.bucket_of[s])
+        if t < 0:
+            raise KeyError(f"source {s} has no edges")
+        r = int(self.row_of[s])
+        b = self.packed.buckets[t]
+        dd = int(self.deg[s])
+        hits = np.flatnonzero(b.idx[r, :dd] == d)
+        if hits.size == 0:
+            raise KeyError(f"edge ({s}, {d}) not present")
+        return t, r, int(hits[0])
+
+    def _delete_edge(self, s: int, d: int) -> None:
+        t, r, j = self._slot_of(s, d)
+        b = self.packed.buckets[t]
+        self._pending_dc_sq += float(b.cost[r, j]) ** 2
+        last = int(self.deg[s]) - 1
+        for arr in (b.idx, b.cost, b.mask):
+            arr[r, j] = arr[r, last]
+            arr[r, last] = 0
+        b.coeff[:, r, j] = b.coeff[:, r, last]
+        b.coeff[:, r, last] = 0
+        self.deg[s] = last
+
+    def _release_row(self, s: int) -> None:
+        if self.deg[s] != 0:
+            raise RuntimeError(f"releasing row of source {s} with edges left")
+        t, r = int(self.bucket_of[s]), int(self.row_of[s])
+        self._source_ids[t][r] = -1
+        self._free_rows[t].append(r)
+        self.bucket_of[s] = -1
+        self.row_of[s] = -1
+
+    def _insert_edge(self, s: int, d: int, value: float, coeff: np.ndarray) -> None:
+        t = int(self.bucket_of[s])
+        dd = int(self.deg[s])
+        b = self.packed.buckets[t]
+        if dd and np.any(b.idx[int(self.row_of[s]), :dd] == d):
+            raise KeyError(f"edge ({s}, {d}) already present")
+        r = int(self.row_of[s])
+        b.idx[r, dd] = d
+        b.cost[r, dd] = -value
+        b.mask[r, dd] = 1.0
+        b.coeff[:, r, dd] = coeff
+        self.deg[s] = dd + 1
+        self._pending_dc_sq += value**2
+
+    def _update_edge(
+        self, s: int, d: int, value: Optional[float], coeff: Optional[np.ndarray]
+    ) -> None:
+        t, r, j = self._slot_of(s, d)
+        b = self.packed.buckets[t]
+        if value is not None:
+            self._pending_dc_sq += (float(b.cost[r, j]) + value) ** 2
+            b.cost[r, j] = -value
+        if coeff is not None:
+            b.coeff[:, r, j] = coeff
+
+    def _move_row(self, s: int, t_new: int) -> None:
+        """Relocate source s to a free row of bucket t_new (or claim one)."""
+        if not self._free_rows[t_new]:
+            raise RuntimeError("move planned without a free row (planner bug)")
+        r_new = self._free_rows[t_new].pop()
+        t_old = int(self.bucket_of[s])
+        if t_old >= 0:
+            r_old = int(self.row_of[s])
+            bo, bn = self.packed.buckets[t_old], self.packed.buckets[t_new]
+            d = int(self.deg[s])
+            for src_arr, dst_arr in (
+                (bo.idx, bn.idx), (bo.cost, bn.cost), (bo.mask, bn.mask),
+            ):
+                dst_arr[r_new, :d] = src_arr[r_old, :d]
+                src_arr[r_old, :d] = 0
+            bn.coeff[:, r_new, :d] = bo.coeff[:, r_old, :d]
+            bo.coeff[:, r_old, :d] = 0
+            self._source_ids[t_old][r_old] = -1
+            self._free_rows[t_old].append(r_old)
+        self._source_ids[t_new][r_new] = s
+        self.bucket_of[s] = t_new
+        self.row_of[s] = r_new
+
+
+# ---------------------------------------------------------------------------
+
+
+def apply_delta_to_edge_list(
+    inst: EdgeListInstance, delta: InstanceDelta
+) -> EdgeListInstance:
+    """Reference (O(nnz)) application of a delta on the edge-list form.
+
+    This is the slow path the ingestor falls back to, and the oracle the
+    equivalence tests compare the in-place slab surgery against.  Edit order
+    matches the in-place path: deletions, then insertions, then updates (so an
+    update may target an edge inserted by the same delta).
+    """
+    J = inst.spec.num_destinations
+
+    def locate(key_sorted, perm, src, dst, what):
+        k = np.asarray(src) * J + np.asarray(dst)
+        pos = np.searchsorted(key_sorted, k)
+        ok = (pos < key_sorted.size) & (
+            key_sorted[np.minimum(pos, key_sorted.size - 1)] == k
+        )
+        if not np.all(ok):
+            missing = np.flatnonzero(~ok)[0]
+            raise KeyError(
+                f"{what}: edge ({src[missing]}, {dst[missing]}) not present"
+            )
+        return perm[pos]
+
+    values = inst.values.copy()
+    coeff = inst.coeff.copy()
+    src, dst = inst.src.copy(), inst.dst.copy()
+
+    if delta.delete_src.size:
+        key = src * J + dst
+        perm = np.argsort(key)
+        e = locate(key[perm], perm, delta.delete_src, delta.delete_dst, "delete")
+        keep = np.ones(src.size, bool)
+        keep[e] = False
+        src, dst, values, coeff = src[keep], dst[keep], values[keep], coeff[:, keep]
+
+    if delta.insert_src.size:
+        new_key = delta.insert_src * J + delta.insert_dst
+        if np.intersect1d(new_key, src * J + dst).size:
+            raise KeyError("insert: edge already present")
+        if np.unique(new_key).size != new_key.size:
+            raise KeyError("insert: duplicate edges in delta")
+        src = np.concatenate([src, delta.insert_src])
+        dst = np.concatenate([dst, delta.insert_dst])
+        values = np.concatenate([values, delta.insert_values])
+        coeff = np.concatenate([coeff, delta.insert_coeff], axis=1)
+
+    if delta.update_src.size:
+        key = src * J + dst
+        perm = np.argsort(key)
+        e = locate(key[perm], perm, delta.update_src, delta.update_dst, "update")
+        if delta.update_values is not None:
+            values[e] = delta.update_values
+        if delta.update_coeff is not None:
+            coeff[:, e] = delta.update_coeff
+
+    order = np.lexsort((dst, src))
+    rhs = inst.rhs.copy() if delta.rhs is None else np.asarray(delta.rhs, np.float64)
+    return EdgeListInstance(
+        spec=inst.spec,
+        src=src[order],
+        dst=dst[order],
+        values=values[order],
+        coeff=coeff[:, order],
+        rhs=rhs,
+    )

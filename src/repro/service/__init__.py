@@ -1,0 +1,74 @@
+"""Recurring-solve service: the serving layer for production cadences.
+
+The paper's premise is that matching LPs are "solved repeatedly on recurring
+cadences over slowly evolving inputs".  This package turns the one-shot
+`Maximizer.solve()` into that serving loop:
+
+    Scheduler.run_cadence({tenant: delta})
+        |
+        |-- SolveSession.ingest(delta)          session.py
+        |       DeltaIngestor applies edge inserts/deletes and cost/rhs
+        |       updates IN PLACE on the bucketed-ELL slabs (O(delta), shapes
+        |       preserved; re-bucketize only on headroom overflow)
+        |                                        instances/deltas.py
+        |-- group tenants by (shape signature, warm/cold)
+        |       shape-identical tenants share one compiled executable
+        |                                        pool.py / engine.py
+        |-- solve
+        |       groups  -> ONE vmapped batched continuation solve
+        |       singles -> per-tenant solve, same shape-keyed compile cache
+        |       warm starts resume from yesterday's duals on a shortened
+        |       continuation tail; convergence-based early stopping
+        |       (core.maximizer) exits stages once
+        |       ||grad|| <= tol_grad * max(1, |g|) and viol <= tol_viol
+        |
+        '-- per-tenant drift-SLA report
+                empirical primal drift vs previous cadence, the analytic
+                gamma bound (core.stability.drift_bound), iterations used
+                vs budget, cold-start reasons (e.g. dual-dim drift guard)
+
+Architecture invariants:
+
+  * The packed instance is a *traced argument* of the compiled solvers, never
+    a closed-over constant — in-place slab updates are always visible, and
+    the jit cache keys executables on bucket shapes, so a tenant whose deltas
+    stay within padding headroom never recompiles.
+  * Shape identity is the batching currency: `ServiceConfig.row_headroom`
+    buys shape stability; the scheduler monetises it by vmapping
+    shape-identical tenants together.
+  * Everything here is single-process and synchronous; distributed execution
+    composes underneath via `core.sharding` (the operator-centric boundary),
+    and async ingestion / cross-cadence checkpointing are ROADMAP items.
+
+Drift-SLA knobs (`ServiceConfig`): `drift_sla_rel` sets the relative
+run-to-run primal drift SLA checked each cadence; `cold.gammas[-1]` (the
+continuation floor) is the stability/fidelity trade-off the paper exposes;
+`warm_gammas` controls how much of the schedule warm starts replay.
+"""
+from repro.service.engine import (
+    RawSolve,
+    compiled_solver,
+    compiled_batch_solver,
+    to_solve_result,
+    to_solve_results,
+    compile_cache_report,
+)
+from repro.service.pool import BatchedSolvePool, shape_signature, stack_instances
+from repro.service.scheduler import CadenceReport, Scheduler
+from repro.service.session import ServiceConfig, SolveSession
+
+__all__ = [
+    "RawSolve",
+    "compiled_solver",
+    "compiled_batch_solver",
+    "to_solve_result",
+    "to_solve_results",
+    "compile_cache_report",
+    "BatchedSolvePool",
+    "shape_signature",
+    "stack_instances",
+    "CadenceReport",
+    "Scheduler",
+    "ServiceConfig",
+    "SolveSession",
+]

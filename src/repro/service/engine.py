@@ -1,0 +1,193 @@
+"""Shared solve engine for the recurring-solve service.
+
+`Maximizer` closes over its instance, so the packed slabs are baked into the
+jaxpr as compile-time constants: every new day's instance retraces, and
+in-place slab mutations (repro.instances.deltas) would be silently ignored by
+the stale compiled constant.  The service therefore re-expresses the full
+continuation solve as a *pure function of the instance pytree*:
+
+    raw = _raw_solve(instance, lam0, cfg)
+
+and compiles it once per `MaximizerConfig`.  Because `BucketedInstance` is a
+registered pytree whose leaves enter as traced arguments, XLA's jit cache then
+keys executables on the bucket shapes — tenants (and cadences) that share slab
+shapes share one executable, which is exactly the reuse the delta-ingest layer
+preserves shapes for.  `jax.vmap` over a leading tenant axis turns the same
+function into the batched multi-tenant pool kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.maximizer import (
+    MaximizerConfig,
+    SolveResult,
+    StageStats,
+    _stage_scan,
+    _stage_scan_early,
+    step_size,
+)
+from repro.core.objective import MatchingObjective, normalize_rows_traced
+from repro.instances.buckets import BucketedInstance
+
+__all__ = [
+    "RawSolve",
+    "compiled_solver",
+    "compiled_batch_solver",
+    "to_solve_result",
+    "to_solve_results",
+    "compile_cache_report",
+]
+
+
+class RawSolve(NamedTuple):
+    """Device-side output of one continuation solve (vmap-friendly pytree)."""
+
+    lam: jax.Array  # [dual_dim]
+    x_slabs: tuple[jax.Array, ...]
+    g: jax.Array  # final dual objective (scalar)
+    stats: tuple[StageStats, ...]  # one per stage, traces of length budget
+    sigma_sq: jax.Array
+    etas: jax.Array  # [num_stages] step sizes
+    iters: jax.Array  # [num_stages] iterations executed (int32)
+
+
+def _raw_solve(
+    inst: BucketedInstance,
+    lam0: jax.Array,
+    cfg: MaximizerConfig,
+    normalize: bool,
+) -> RawSolve:
+    """Full continuation solve as a pure traced function of the instance."""
+    if normalize:
+        # Jacobi preconditioning applied device-side each solve, so the
+        # delta-mutated raw slabs never need a host-side re-normalization
+        inst, _ = normalize_rows_traced(inst)
+    obj = MatchingObjective(inst)
+
+    def calc(lam, gamma, comm):
+        return obj.calculate(lam, gamma), comm
+
+    sigma_sq = obj.power_iteration(jax.random.key(cfg.seed), iters=cfg.power_iters)
+    lam = lam0
+    stats: list[StageStats] = []
+    etas: list[jax.Array] = []
+    iters: list[jax.Array] = []
+    for gamma in cfg.gammas:
+        eta = step_size(cfg, sigma_sq, gamma).astype(lam.dtype)
+        gamma_t = jnp.asarray(gamma, lam.dtype)
+        if cfg.early_stop:
+            lam, st, _, used = _stage_scan_early(
+                calc, lam, gamma_t, eta, cfg.iters_per_stage,
+                acceleration=cfg.acceleration,
+                adaptive_restart=cfg.adaptive_restart,
+                tol_grad=cfg.tol_grad,
+                tol_viol=cfg.tol_viol,
+                check_every=cfg.check_every,
+            )
+        else:
+            lam, st, _ = _stage_scan(
+                calc, lam, gamma_t, eta, cfg.iters_per_stage,
+                acceleration=cfg.acceleration,
+                adaptive_restart=cfg.adaptive_restart,
+            )
+            used = jnp.asarray(cfg.iters_per_stage, jnp.int32)
+        stats.append(st)
+        etas.append(eta)
+        iters.append(used)
+    final = obj.calculate(lam, jnp.asarray(cfg.gammas[-1], lam.dtype))
+    return RawSolve(
+        lam=lam,
+        x_slabs=final.x_slabs,
+        g=final.g,
+        stats=tuple(stats),
+        sigma_sq=sigma_sq,
+        etas=jnp.stack(etas),
+        iters=jnp.stack(iters),
+    )
+
+
+# One compiled entry point per (MaximizerConfig, normalize) pair (the config
+# is a hashable frozen dataclass); within each, XLA's jit cache keys
+# executables on the instance's bucket shapes.  Shared process-wide across
+# sessions, schedulers and pools.
+_SINGLE: dict[tuple, object] = {}
+_BATCH: dict[tuple, object] = {}
+
+
+def compiled_solver(cfg: MaximizerConfig, normalize: bool = False):
+    """Jitted `(instance, lam0) -> RawSolve` for one tenant."""
+    key = (cfg, normalize)
+    fn = _SINGLE.get(key)
+    if fn is None:
+        fn = jax.jit(lambda inst, lam0: _raw_solve(inst, lam0, cfg, normalize))
+        _SINGLE[key] = fn
+    return fn
+
+
+def compiled_batch_solver(cfg: MaximizerConfig, normalize: bool = False):
+    """Jitted, vmapped `(stacked_instance, lam0s[B, :]) -> RawSolve` pool kernel.
+
+    All per-stage work runs lockstep across the tenant batch; with early
+    stopping enabled the batch exits a stage once *every* tenant has converged.
+    """
+    key = (cfg, normalize)
+    fn = _BATCH.get(key)
+    if fn is None:
+        fn = jax.jit(
+            jax.vmap(lambda inst, lam0: _raw_solve(inst, lam0, cfg, normalize))
+        )
+        _BATCH[key] = fn
+    return fn
+
+
+def to_solve_result(raw: RawSolve) -> SolveResult:
+    """Host-side `SolveResult` view of a (single-tenant) RawSolve."""
+    return SolveResult(
+        lam=raw.lam,
+        x_slabs=raw.x_slabs,
+        g=raw.g,
+        stats=raw.stats,
+        sigma_sq=raw.sigma_sq,
+        steps=tuple(float(e) for e in raw.etas),
+        iters_used=tuple(int(i) for i in raw.iters),
+    )
+
+
+def to_solve_results(raw: RawSolve) -> list[SolveResult]:
+    """Split a batched RawSolve (leading tenant axis) into per-tenant results."""
+    batch = int(raw.lam.shape[0])
+    out = []
+    for b in range(batch):
+        take = lambda a: a[b]
+        out.append(
+            SolveResult(
+                lam=raw.lam[b],
+                x_slabs=tuple(x[b] for x in raw.x_slabs),
+                g=raw.g[b],
+                stats=tuple(jax.tree.map(take, st) for st in raw.stats),
+                sigma_sq=raw.sigma_sq[b],
+                steps=tuple(float(e) for e in raw.etas[b]),
+                iters_used=tuple(int(i) for i in raw.iters[b]),
+            )
+        )
+    return out
+
+
+def compile_cache_report() -> dict[str, int]:
+    """Number of compiled executables per entry point (shape-keyed reuse)."""
+    report = {}
+    for name, cache in (("single", _SINGLE), ("batch", _BATCH)):
+        for (cfg, normalize), fn in cache.items():
+            key = (
+                f"{name}:gammas={cfg.gammas},iters={cfg.iters_per_stage},"
+                f"tol=({cfg.tol_grad},{cfg.tol_viol}),norm={normalize}"
+            )
+            try:
+                report[key] = fn._cache_size()
+            except AttributeError:  # jax version without _cache_size
+                report[key] = -1
+    return report

@@ -1,0 +1,115 @@
+"""Multi-tenant cadence scheduler: ingest, group, batch, solve, report.
+
+One `Scheduler` owns all tenant `SolveSession`s and drives a cadence:
+
+  1. apply each tenant's `InstanceDelta` (O(delta) in-place when headroom
+     allows — see `repro.instances.deltas`);
+  2. partition tenants by `(shape_signature, warm/cold)` — shape-identical
+     tenants in the same start mode can share one compiled executable;
+  3. groups of >= `batch_min` tenants are solved by ONE vmapped call through
+     `BatchedSolvePool`; the rest solve individually (still sharing the
+     shape-keyed compile cache);
+  4. every tenant's session absorbs its result and emits its drift-SLA report.
+
+The scheduler is deliberately synchronous and deterministic — async ingestion
+and cross-cadence checkpointing are ROADMAP follow-ons.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.instances.deltas import DeltaReport, InstanceDelta
+from repro.instances.generator import EdgeListInstance
+from repro.service.engine import compiled_batch_solver, compile_cache_report, to_solve_results
+from repro.service.pool import shape_signature, stack_instances
+from repro.service.session import ServiceConfig, SolveSession
+
+__all__ = ["CadenceReport", "Scheduler"]
+
+
+@dataclasses.dataclass
+class CadenceReport:
+    """Outcome of one `Scheduler.run_cadence` call."""
+
+    reports: dict[str, dict[str, Any]]  # per-tenant solve reports
+    ingest: dict[str, DeltaReport]  # per-tenant delta reports
+    batched_groups: list[list[str]]  # tenant groups solved in one vmapped call
+    solo_tenants: list[str]
+    compile_cache: dict[str, int]
+
+    @property
+    def batched_fraction(self) -> float:
+        n = len(self.reports)
+        return sum(len(g) for g in self.batched_groups) / max(n, 1)
+
+
+class Scheduler:
+    def __init__(self, config: Optional[ServiceConfig] = None, *, batch_min: int = 2):
+        self.config = config or ServiceConfig()
+        self.batch_min = max(2, int(batch_min))
+        self.sessions: dict[str, SolveSession] = {}
+
+    def add_tenant(self, name: str, inst: EdgeListInstance) -> SolveSession:
+        if name in self.sessions:
+            raise ValueError(f"tenant {name!r} already registered")
+        s = SolveSession(name, inst, self.config)
+        self.sessions[name] = s
+        return s
+
+    def run_cadence(
+        self,
+        deltas: Optional[dict[str, InstanceDelta]] = None,
+        *,
+        force_cold: bool = False,
+    ) -> CadenceReport:
+        """Ingest deltas and solve every tenant once."""
+        ingest: dict[str, DeltaReport] = {}
+        for name, delta in (deltas or {}).items():
+            ingest[name] = self.sessions[name].ingest(delta)
+
+        # group tenants that can share one vmapped executable
+        groups: dict[tuple, list[str]] = {}
+        starts: dict[str, tuple] = {}
+        for name, s in self.sessions.items():
+            cold, reason, lam0 = s._start_state(force_cold)
+            starts[name] = (cold, reason, lam0)
+            key = (shape_signature(s.instance()), cold)
+            groups.setdefault(key, []).append(name)
+
+        reports: dict[str, dict[str, Any]] = {}
+        batched_groups: list[list[str]] = []
+        solo: list[str] = []
+        for (_, cold), names in groups.items():
+            if len(names) >= self.batch_min:
+                batched_groups.append(list(names))
+                cfg = self.config.cold if cold else self.config.warm
+                stacked = stack_instances(
+                    [self.sessions[n].instance() for n in names]
+                )
+                lam0s = jnp.stack([starts[n][2] for n in names])
+                raw = compiled_batch_solver(cfg, self.config.normalize)(
+                    stacked, lam0s
+                )
+                for name, res in zip(names, to_solve_results(raw)):
+                    reports[name] = self.sessions[name].absorb(
+                        res,
+                        cold=cold,
+                        cold_reason=starts[name][1],
+                        batched=True,
+                    )
+            else:
+                solo.extend(names)
+        for name in solo:
+            _, report = self.sessions[name].solve(force_cold=force_cold)
+            reports[name] = report
+
+        return CadenceReport(
+            reports=reports,
+            ingest=ingest,
+            batched_groups=batched_groups,
+            solo_tenants=solo,
+            compile_cache=compile_cache_report(),
+        )

@@ -1,0 +1,225 @@
+"""Per-tenant solve session: delta ingestion + warm-started cadence solves.
+
+A `SolveSession` owns everything one tenant needs across cadences:
+
+  * its `DeltaIngestor` (the mutable packed instance + headroom bookkeeping);
+  * the previous duals / primal slabs for warm starts and drift metering;
+  * access to the shared shape-keyed compiled solvers (`service.engine`).
+
+The cadence loop the paper targets ("solved repeatedly on recurring cadences
+over slowly evolving inputs") becomes:
+
+    session.ingest(delta)          # O(delta) slab surgery, shapes preserved
+    result, report = session.solve()  # warm start + shortened continuation
+
+Warm starts skip the large-gamma continuation stages (yesterday's duals are
+already near the small-gamma optimum) and rely on convergence-based early
+stopping to exit once the iterate re-converges, so a quiet day costs a small
+fraction of the cold iteration budget.  Guards fall back to a cold start when
+the dual dimension drifts (resized instance) or when explicitly forced, and
+the report says so (`cold_reason`).
+
+Drift-SLA: each solve reports the empirical primal drift vs the previous
+cadence together with the analytic bound `(sigma ||dlam|| + ||dc||) / gamma`
+(core.stability), and flags `sla_ok` against the configured relative-drift
+SLA — the run-to-run stability control the paper's ridge term exists for.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.maximizer import MaximizerConfig, SolveResult
+from repro.core.stability import drift_bound
+from repro.instances.deltas import DeltaIngestor, DeltaReport, InstanceDelta
+from repro.instances.generator import EdgeListInstance
+from repro.service.engine import compiled_solver, to_solve_result
+
+__all__ = ["ServiceConfig", "SolveSession"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Knobs of the recurring-solve service (shared by all tenants)."""
+
+    # Cold starts run the full continuation schedule; early stopping is on by
+    # default so even cold solves exit stages once converged.
+    cold: MaximizerConfig = dataclasses.field(
+        default_factory=lambda: MaximizerConfig(
+            tol_grad=1e-4, tol_viol=1e-4, check_every=25
+        )
+    )
+    # Warm starts resume from yesterday's duals on a shortened continuation
+    # tail (the large-gamma stages exist to *reach* the small-gamma basin,
+    # which a warm iterate is already in).
+    warm_gammas: tuple[float, ...] = (1e-1, 1e-2)
+    warm_iters_per_stage: Optional[int] = None  # None: same as cold
+    # Relative primal-drift SLA (||x_t - x_{t-1}|| / ||x_t||); None disables.
+    drift_sla_rel: Optional[float] = None
+    # Jacobi row normalization applied device-side inside every compiled
+    # solve (normalize_rows_traced) — the paper's preconditioning without a
+    # host-side O(nnz) repack per cadence.
+    normalize: bool = True
+    # Packing knobs forwarded to each tenant's DeltaIngestor.
+    row_headroom: int = 8
+    min_length: int = 1
+    shard_multiple: int = 1
+
+    @property
+    def warm(self) -> MaximizerConfig:
+        iters = (
+            self.cold.iters_per_stage
+            if self.warm_iters_per_stage is None
+            else self.warm_iters_per_stage
+        )
+        return dataclasses.replace(
+            self.cold, gammas=self.warm_gammas, iters_per_stage=iters
+        )
+
+
+class SolveSession:
+    """State and cadence driver of one tenant."""
+
+    def __init__(
+        self, tenant: str, inst: EdgeListInstance, config: ServiceConfig
+    ):
+        self.tenant = tenant
+        self.config = config
+        self.ingestor = DeltaIngestor(
+            inst,
+            shard_multiple=config.shard_multiple,
+            min_length=config.min_length,
+            row_headroom=config.row_headroom,
+        )
+        self.lam_prev: Optional[jax.Array] = None
+        # previous primal in edge space: (sorted edge keys, values) — robust
+        # to row relocations and re-bucketizes, unlike slab positions
+        self.prev_primal: Optional[tuple[np.ndarray, np.ndarray]] = None
+        self.cadence = 0
+        self.last_ingest: Optional[DeltaReport] = None
+        self.last_report: Optional[dict[str, Any]] = None
+
+    # -- cadence inputs ------------------------------------------------------
+
+    def instance(self):
+        return self.ingestor.instance()
+
+    def ingest(self, delta: InstanceDelta) -> DeltaReport:
+        rep = self.ingestor.apply(delta)
+        self.last_ingest = rep
+        return rep
+
+    # -- solve ---------------------------------------------------------------
+
+    def _start_state(
+        self, force_cold: bool
+    ) -> tuple[bool, Optional[str], jax.Array]:
+        """(cold?, reason, lam0) with the shape-drift guard applied."""
+        dual_dim = self.instance().dual_dim
+        if force_cold:
+            reason = "forced"
+        elif self.lam_prev is None:
+            reason = "first_solve"
+        elif self.lam_prev.shape != (dual_dim,):
+            # a resized instance makes yesterday's duals meaningless (and
+            # passing them into the jitted solver would be a shape error)
+            reason = "dual_dim_drift"
+        else:
+            return False, None, self.lam_prev
+        return True, reason, jnp.zeros((dual_dim,), jnp.float32)
+
+    def solve(self, *, force_cold: bool = False) -> tuple[SolveResult, dict]:
+        cold, reason, lam0 = self._start_state(force_cold)
+        cfg = self.config.cold if cold else self.config.warm
+        raw = compiled_solver(cfg, self.config.normalize)(self.instance(), lam0)
+        res = to_solve_result(raw)
+        report = self.absorb(res, cold=cold, cold_reason=reason, batched=False)
+        return res, report
+
+    def absorb(
+        self,
+        res: SolveResult,
+        *,
+        cold: bool,
+        cold_reason: Optional[str],
+        batched: bool,
+    ) -> dict[str, Any]:
+        """Fold a finished solve (own or pool-produced) into session state."""
+        cfg = self.config.cold if cold else self.config.warm
+        gamma_floor = cfg.gammas[-1]
+        dc_norm = self.ingestor.drain_cost_drift()
+        report: dict[str, Any] = {
+            "tenant": self.tenant,
+            "cadence": self.cadence,
+            "mode": "cold" if cold else "warm",
+            "cold_reason": cold_reason,
+            "batched": batched,
+            "iters_used": res.total_iters_used or cfg.total_iters,
+            "iter_budget": cfg.total_iter_budget,
+            "g": float(res.g),
+            "max_violation": float(res.stats[-1].max_violation[-1]),
+            "gamma_floor": gamma_floor,
+            "dc_norm": dc_norm,
+            "drift_l2": None,
+            "drift_rel": None,
+            "drift_bound": None,
+            "sla_rel": self.config.drift_sla_rel,
+            "sla_ok": None,
+        }
+        keys, x = self.ingestor.unpack_primal(res.x_slabs)
+        if self.prev_primal is not None:
+            drift = _edge_drift(self.prev_primal, (keys, x))
+            x_norm = float(np.linalg.norm(x))
+            dlam = (
+                float(jnp.linalg.norm(res.lam - self.lam_prev))
+                if self.lam_prev is not None
+                and self.lam_prev.shape == res.lam.shape
+                else 0.0
+            )
+            sigma = float(jnp.sqrt(res.sigma_sq))
+            report["drift_l2"] = drift
+            report["drift_rel"] = drift / max(x_norm, 1e-12)
+            report["drift_bound"] = drift_bound(
+                gamma_floor, dc_norm=dc_norm, dlam_norm=dlam, sigma_max=sigma
+            )
+            if self.config.drift_sla_rel is not None:
+                report["sla_ok"] = bool(
+                    report["drift_rel"] <= self.config.drift_sla_rel
+                )
+        self.lam_prev = res.lam
+        self.prev_primal = (keys, x)
+        self.cadence += 1
+        self.last_report = report
+        return report
+
+
+def _edge_drift(
+    prev: tuple[np.ndarray, np.ndarray], cur: tuple[np.ndarray, np.ndarray]
+) -> float:
+    """||x_t - x_{t-1}||_2 over the union of edges (missing edges count 0).
+
+    Both inputs are (sorted keys, values) from `DeltaIngestor.unpack_primal`;
+    inserted/deleted edges contribute their full allocation to the drift —
+    exactly the downstream churn a drift SLA is about.
+    """
+    pk, px = prev
+    ck, cx = cur
+    sq = 0.0
+    if pk.size:
+        pos = np.clip(np.searchsorted(pk, ck), 0, pk.size - 1)
+        hit = pk[pos] == ck
+        sq += float(np.sum((cx[hit] - px[pos[hit]]) ** 2))
+        sq += float(np.sum(cx[~hit] ** 2))  # edges new this cadence
+        if ck.size:
+            pos2 = np.clip(np.searchsorted(ck, pk), 0, ck.size - 1)
+            gone = ck[pos2] != pk
+        else:
+            gone = np.ones(pk.size, bool)
+        sq += float(np.sum(px[gone] ** 2))  # edges removed this cadence
+    else:
+        sq = float(np.sum(cx**2))
+    return float(np.sqrt(sq))

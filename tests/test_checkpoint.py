@@ -66,6 +66,7 @@ def test_shape_mismatch_rejected(tmp_path):
         mgr.restore(1, {"w": jax.ShapeDtypeStruct((3, 3), jnp.float32)})
 
 
+@pytest.mark.slow
 def test_restart_parity(tmp_path):
     """Train 12 steps straight == train 6, 'crash', resume 6 (same data skip)."""
     cfg = get_reduced_config("gemma-7b")
@@ -87,6 +88,7 @@ def test_restart_parity(tmp_path):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 
 
+@pytest.mark.slow
 def test_elastic_reshard_subprocess(tmp_path):
     """Save on 4 devices, restore on 8 (different sharding) — values identical."""
     from conftest import run_with_devices

@@ -1,0 +1,242 @@
+"""Delta ingestion: in-place slab surgery == re-bucketizing the mutated edges."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MatchingObjective
+from repro.instances import (
+    DeltaIngestor,
+    InstanceDelta,
+    MatchingInstanceSpec,
+    apply_delta_to_edge_list,
+    bucketize,
+    generate_matching_instance,
+)
+
+
+def _instance(seed=5, I=150, J=12, m=2):
+    spec = MatchingInstanceSpec(
+        num_sources=I, num_destinations=J, avg_degree=4.0,
+        num_families=m, seed=seed,
+    )
+    return generate_matching_instance(spec)
+
+
+def _random_delta(ref, rng, n_upd=15, n_del=6, n_ins=6, rhs=True):
+    m, J, I = ref.spec.num_families, ref.spec.num_destinations, ref.spec.num_sources
+    perm = rng.permutation(ref.nnz)
+    upd, dele = perm[:n_upd], perm[n_upd : n_upd + n_del]
+    existing = set((ref.src * J + ref.dst).tolist())
+    ins_s, ins_d = [], []
+    while len(ins_s) < n_ins:
+        s, d = int(rng.integers(I)), int(rng.integers(J))
+        if s * J + d not in existing:
+            existing.add(s * J + d)
+            ins_s.append(s)
+            ins_d.append(d)
+    return InstanceDelta(
+        insert_src=ins_s, insert_dst=ins_d,
+        insert_values=rng.uniform(0.1, 5.0, n_ins),
+        insert_coeff=rng.uniform(0.1, 2.0, (m, n_ins)),
+        delete_src=ref.src[dele], delete_dst=ref.dst[dele],
+        update_src=ref.src[upd], update_dst=ref.dst[upd],
+        update_values=rng.uniform(0.1, 5.0, n_upd),
+        update_coeff=rng.uniform(0.1, 2.0, (m, n_upd)),
+        rhs=np.asarray(ref.rhs) * rng.uniform(0.9, 1.1, ref.rhs.size)
+        if rhs
+        else None,
+    )
+
+
+def test_delta_equivalence_over_days():
+    """Ingested slabs == bucketize(edge list with the same deltas), objective-wise."""
+    rng = np.random.default_rng(0)
+    base = _instance()
+    ing = DeltaIngestor(base, row_headroom=4)
+    ref = base
+    lam = jnp.asarray(
+        rng.random(base.spec.num_families * base.spec.num_destinations).astype(
+            np.float32
+        )
+    )
+    saw_in_place = saw_fallback = False
+    for day in range(5):
+        delta = _random_delta(ref, rng)
+        rep = ing.apply(delta)
+        saw_in_place |= rep.in_place
+        saw_fallback |= rep.rebucketized
+        ref = apply_delta_to_edge_list(ref, delta)
+        # exact edge-list equality
+        cur = ing.to_edge_list()
+        np.testing.assert_array_equal(cur.src, ref.src)
+        np.testing.assert_array_equal(cur.dst, ref.dst)
+        np.testing.assert_allclose(cur.values, ref.values, rtol=1e-6)
+        np.testing.assert_allclose(cur.coeff, ref.coeff, rtol=1e-6)
+        np.testing.assert_allclose(cur.rhs, ref.rhs)
+        # objective equivalence vs a fresh pack of the mutated edge list
+        ev_a = MatchingObjective(ing.instance()).calculate(lam, 0.1)
+        ev_b = MatchingObjective(bucketize(ref)).calculate(lam, 0.1)
+        np.testing.assert_allclose(float(ev_a.g), float(ev_b.g), rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(ev_a.grad), np.asarray(ev_b.grad), atol=1e-4
+        )
+    assert saw_in_place  # the headroom actually absorbed some days
+
+
+def test_in_place_preserves_shapes():
+    rng = np.random.default_rng(1)
+    base = _instance(seed=7)
+    ing = DeltaIngestor(base, row_headroom=8)
+    shapes0 = [(b.rows, b.length) for b in ing.instance().buckets]
+    rep = ing.apply(_random_delta(base, rng, n_ins=2, n_del=2))
+    if rep.in_place:
+        assert [(b.rows, b.length) for b in ing.instance().buckets] == shapes0
+        assert not rep.shapes_changed
+
+
+def test_overflow_falls_back_to_rebucketize():
+    base = _instance(seed=9, m=1)
+    ing = DeltaIngestor(base)  # no headroom
+    J = base.spec.num_destinations
+    # give source 0 an edge to every destination: exceeds any current slab
+    have = set(base.dst[base.src == 0].tolist())
+    new_d = [d for d in range(J) if d not in have]
+    rep = ing.apply(
+        InstanceDelta(
+            insert_src=[0] * len(new_d), insert_dst=new_d,
+            insert_values=np.ones(len(new_d)),
+            insert_coeff=np.ones((1, len(new_d))),
+        )
+    )
+    assert rep.rebucketized and not rep.in_place
+    assert rep.fallback_reason
+    cur = ing.to_edge_list()
+    assert np.sum(cur.src == 0) == J  # all edges present after the fallback
+
+
+def test_delete_all_then_reinsert_same_source():
+    """Transient degree-0 must not lose the source's row mid-delta."""
+    base = _instance(seed=11, m=1)
+    s = int(base.src[0])
+    mask = base.src == s
+    dsts = base.dst[mask]
+    ing = DeltaIngestor(base, row_headroom=2)
+    rep = ing.apply(
+        InstanceDelta(
+            delete_src=[s] * dsts.size, delete_dst=dsts,
+            insert_src=[s], insert_dst=[int(dsts[0])],
+            insert_values=[2.5], insert_coeff=[[1.5]],
+        )
+    )
+    assert rep.in_place
+    cur = ing.to_edge_list()
+    sel = cur.src == s
+    assert np.sum(sel) == 1
+    assert cur.dst[sel][0] == dsts[0]
+    np.testing.assert_allclose(cur.values[sel], [2.5], rtol=1e-6)
+
+
+def test_source_removed_entirely_and_new_source_added():
+    base = _instance(seed=13, m=1)
+    s = int(base.src[0])
+    dsts = base.dst[base.src == s]
+    # a brand-new source: one with no edges
+    present = np.unique(base.src)
+    absent = np.setdiff1d(np.arange(base.spec.num_sources), present)
+    if absent.size == 0:
+        pytest.skip("generator left no empty sources at this seed")
+    t = int(absent[0])
+    ing = DeltaIngestor(base, row_headroom=2)
+    rep = ing.apply(
+        InstanceDelta(
+            delete_src=[s] * dsts.size, delete_dst=dsts,
+            insert_src=[t], insert_dst=[int(dsts[0])],
+            insert_values=[1.0], insert_coeff=[[1.0]],
+        )
+    )
+    cur = ing.to_edge_list()
+    assert np.sum(cur.src == s) == 0
+    assert np.sum(cur.src == t) == 1
+    assert rep.in_place  # freed row re-used for the new source
+
+
+def test_strictness_errors():
+    base = _instance(seed=15, m=1)
+    ing = DeltaIngestor(base, row_headroom=2)
+    s, d = int(base.src[0]), int(base.dst[0])
+    with pytest.raises(KeyError):
+        ing.apply(
+            InstanceDelta(
+                insert_src=[s], insert_dst=[d],
+                insert_values=[1.0], insert_coeff=[[1.0]],
+            )
+        )
+    J = base.spec.num_destinations
+    have = set(base.dst[base.src == s].tolist())
+    missing_d = next(x for x in range(J) if x not in have)
+    with pytest.raises(KeyError):
+        ing.apply(InstanceDelta(delete_src=[s], delete_dst=[missing_d]))
+    with pytest.raises(KeyError):
+        ing.apply(
+            InstanceDelta(
+                update_src=[s], update_dst=[missing_d], update_values=[1.0]
+            )
+        )
+
+
+def test_apply_is_atomic_on_invalid_delta():
+    """A rejected delta must leave slabs, maps and drift accounting untouched."""
+    base = _instance(seed=23, m=1)
+    ing = DeltaIngestor(base, row_headroom=2)
+    s1, d1 = int(base.src[0]), int(base.dst[0])
+    J = base.spec.num_destinations
+    have = set(base.dst[base.src == s1].tolist())
+    missing_d = next(x for x in range(J) if x not in have)
+    before = ing.to_edge_list()
+    with pytest.raises(KeyError):
+        # first delete is valid, second targets a missing edge
+        ing.apply(
+            InstanceDelta(
+                delete_src=[s1, s1], delete_dst=[d1, missing_d]
+            )
+        )
+    after = ing.to_edge_list()
+    np.testing.assert_array_equal(after.src, before.src)
+    np.testing.assert_array_equal(after.dst, before.dst)
+    np.testing.assert_allclose(after.values, before.values)
+    assert ing.drain_cost_drift() == 0.0
+    # the corrected delta now applies cleanly
+    rep = ing.apply(InstanceDelta(delete_src=[s1], delete_dst=[d1]))
+    assert rep.in_place
+    assert ing.nnz == before.nnz - 1
+
+
+def test_cost_drift_accounting():
+    base = _instance(seed=17, m=1)
+    ing = DeltaIngestor(base, row_headroom=2)
+    new_vals = base.values[:4] + np.array([1.0, -2.0, 0.5, 3.0])
+    ing.apply(
+        InstanceDelta(
+            update_src=base.src[:4], update_dst=base.dst[:4],
+            update_values=new_vals,
+        )
+    )
+    expect = float(np.linalg.norm(new_vals - base.values[:4]))
+    got = ing.drain_cost_drift()
+    np.testing.assert_allclose(got, expect, rtol=1e-5)
+    assert ing.drain_cost_drift() == 0.0  # drained
+
+
+def test_unpack_primal_edge_keys():
+    base = _instance(seed=19, m=1)
+    ing = DeltaIngestor(base, row_headroom=2)
+    # unpack a primal of all-ones masks: every edge must appear exactly once
+    ones = [np.asarray(b.mask) for b in ing.instance().buckets]
+    keys, x = ing.unpack_primal(ones)
+    J = base.spec.num_destinations
+    np.testing.assert_array_equal(
+        np.sort(keys), np.sort(base.src * J + base.dst)
+    )
+    np.testing.assert_allclose(x, 1.0)

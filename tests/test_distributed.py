@@ -6,6 +6,8 @@ import pytest
 
 from conftest import run_with_devices
 
+pytestmark = pytest.mark.slow
+
 PARITY = r"""
 import jax, jax.numpy as jnp, numpy as np, json
 from repro.instances import MatchingInstanceSpec, generate_matching_instance, bucketize

@@ -1,6 +1,8 @@
 """Generator + packing invariants (paper Appendix A, §4.1/§4.2)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.instances import (

@@ -31,6 +31,7 @@ def test_inclusive_scan(L):
 @pytest.mark.parametrize("L", LENGTHS)
 @pytest.mark.parametrize("n", ROWS)
 @pytest.mark.parametrize("inequality", [True, False])
+@pytest.mark.slow
 def test_simplex_kernel_sweep(L, n, inequality):
     rng = np.random.default_rng(L * 1000 + n)
     v = jnp.asarray(rng.normal(size=(n, L)).astype(np.float32) * 2)
@@ -76,6 +77,7 @@ def test_fallback_beyond_max_length():
 
 @pytest.mark.parametrize("L", [4, 64, 512])
 @pytest.mark.parametrize("m", [1, 3])
+@pytest.mark.slow
 def test_dual_primal_kernel_sweep(L, m):
     J = 64
     n = 29

@@ -30,6 +30,7 @@ def _batch(cfg, B=2, S=64, seed=0):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 def test_smoke_forward_and_step(arch):
     """Reduced config: one forward + one train step, shapes + no NaNs."""
     from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
@@ -55,6 +56,7 @@ def test_smoke_forward_and_step(arch):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 def test_smoke_prefill_decode(arch):
     cfg = get_reduced_config(arch)
     model = Model(cfg)
@@ -75,6 +77,7 @@ def test_smoke_prefill_decode(arch):
 
 
 @pytest.mark.parametrize("arch", ["qwen3-8b", "deepseek-v2-236b", "mamba2-1.3b", "zamba2-2.7b"])
+@pytest.mark.slow
 def test_decode_matches_forward(arch):
     """Teacher-forced decode logits == full-forward logits (cache correctness)."""
     cfg = get_reduced_config(arch)

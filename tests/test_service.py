@@ -1,0 +1,200 @@
+"""Recurring-solve service: early stop, warm starts, batching, shape guards."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Maximizer,
+    MaximizerConfig,
+    MatchingObjective,
+    RecurringSolver,
+    normalize_rows,
+)
+from repro.instances import (
+    DeltaIngestor,
+    InstanceDelta,
+    MatchingInstanceSpec,
+    bucketize,
+    generate_matching_instance,
+)
+from repro.service import (
+    BatchedSolvePool,
+    Scheduler,
+    ServiceConfig,
+    SolveSession,
+    compiled_solver,
+    shape_signature,
+    stack_instances,
+    to_solve_result,
+)
+
+SPEC = MatchingInstanceSpec(
+    num_sources=120, num_destinations=10, avg_degree=4.0, seed=21
+)
+BASE = generate_matching_instance(SPEC)
+
+COLD = MaximizerConfig(iters_per_stage=120, tol_grad=1e-4, tol_viol=1e-4)
+SERVICE = ServiceConfig(
+    cold=COLD, warm_gammas=(0.1, 0.01), drift_sla_rel=0.5, row_headroom=4
+)
+
+
+def _perturb_delta(edge_list, rng, frac=0.1):
+    n = max(1, int(frac * edge_list.nnz))
+    idx = rng.permutation(edge_list.nnz)[:n]
+    return InstanceDelta(
+        update_src=edge_list.src[idx],
+        update_dst=edge_list.dst[idx],
+        update_values=edge_list.values[idx] * rng.uniform(0.9, 1.1, n),
+    )
+
+
+# -- early stopping ----------------------------------------------------------
+
+
+def test_early_stop_matches_full_budget():
+    packed, _ = normalize_rows(bucketize(BASE))
+    obj = MatchingObjective(packed)
+    full = Maximizer(obj, MaximizerConfig(iters_per_stage=120)).solve()
+    es_cfg = MaximizerConfig(
+        iters_per_stage=120, tol_grad=1e-4, tol_viol=1e-4, check_every=20
+    )
+    es = Maximizer(obj, es_cfg).solve()
+    assert es.iters_used is not None
+    assert es.total_iters_used <= es_cfg.total_iter_budget
+    # stopped solve reaches the full-budget solution quality
+    np.testing.assert_allclose(float(es.g), float(full.g), rtol=1e-4)
+    assert float(es.stats[-1].max_violation[-1]) <= max(
+        2 * float(full.stats[-1].max_violation[-1]), 2e-4
+    )
+
+
+def test_early_stop_saves_iterations_when_warm():
+    packed, _ = normalize_rows(bucketize(BASE))
+    obj = MatchingObjective(packed)
+    cfg = MaximizerConfig(
+        gammas=(0.1, 0.01), iters_per_stage=200, tol_grad=1e-4, tol_viol=1e-4
+    )
+    cold = Maximizer(obj, MaximizerConfig(iters_per_stage=200)).solve()
+    warm = Maximizer(obj, cfg).solve(lam0=cold.lam)
+    assert warm.total_iters_used < cfg.total_iter_budget
+    np.testing.assert_allclose(float(warm.g), float(cold.g), rtol=1e-4)
+
+
+# -- sessions: warm starts + drift reports ------------------------------------
+
+
+def test_session_warm_start_fewer_iters_same_quality():
+    rng = np.random.default_rng(3)
+    sess = SolveSession("t0", BASE, SERVICE)
+    _, rep0 = sess.solve()
+    assert rep0["mode"] == "cold" and rep0["cold_reason"] == "first_solve"
+    sess.ingest(_perturb_delta(BASE, rng))
+    res1, rep1 = sess.solve()
+    assert rep1["mode"] == "warm"
+    assert rep1["drift_rel"] is not None and rep1["drift_bound"] is not None
+    assert rep1["sla_ok"] is not None
+    # reference: cold full-budget solve of the SAME mutated instance
+    z = np.zeros(sess.instance().dual_dim, np.float32)
+    ref = to_solve_result(
+        compiled_solver(MaximizerConfig(iters_per_stage=120), True)(
+            sess.instance(), z
+        )
+    )
+    rel = abs(rep1["g"] - float(ref.g)) / max(abs(float(ref.g)), 1e-9)
+    assert rel < 1e-3, (rep1["g"], float(ref.g))
+    assert rep1["iters_used"] < 6 * 120  # fewer than the cold budget
+
+
+def test_session_shape_drift_guard():
+    sess = SolveSession("t0", BASE, SERVICE)
+    sess.solve()
+    # corrupt the cached duals as if the instance had been resized
+    sess.lam_prev = jnp.zeros((sess.instance().dual_dim + 3,), jnp.float32)
+    _, rep = sess.solve()
+    assert rep["mode"] == "cold"
+    assert rep["cold_reason"] == "dual_dim_drift"
+
+
+def test_recurring_solver_shape_drift_guard():
+    cfg = MaximizerConfig(gammas=(0.1,), iters_per_stage=30)
+    rs = RecurringSolver(cfg)
+    rs.solve(bucketize(BASE))
+    other = generate_matching_instance(
+        dataclasses.replace(SPEC, num_destinations=14, seed=22)
+    )
+    res, rep = rs.solve(bucketize(other))  # must not crash on stale duals
+    assert rep["cold_start_reason"] == "dual_dim_drift"
+    assert res.lam.shape == (14,)
+
+
+# -- batched pool -------------------------------------------------------------
+
+
+def _tenant_instances(n=4):
+    rng = np.random.default_rng(7)
+    out = []
+    for _ in range(n):
+        ing = DeltaIngestor(BASE, row_headroom=4)
+        ing.apply(_perturb_delta(BASE, rng))
+        out.append(ing.instance())
+    return out
+
+
+def test_batched_pool_matches_sequential():
+    insts = _tenant_instances(4)
+    assert len({shape_signature(i) for i in insts}) == 1
+    pool = BatchedSolvePool(COLD, normalize=True)
+    batched = pool.solve(insts)
+    seq_fn = compiled_solver(COLD, True)
+    z = np.zeros(insts[0].dual_dim, np.float32)
+    for inst, b in zip(insts, batched):
+        s = to_solve_result(seq_fn(inst, z))
+        rel = abs(float(b.g) - float(s.g)) / max(abs(float(s.g)), 1e-9)
+        assert rel < 1e-3, (float(b.g), float(s.g))
+        np.testing.assert_allclose(
+            np.asarray(b.lam), np.asarray(s.lam), atol=5e-2
+        )
+
+
+def test_stack_instances_rejects_mismatched_shapes():
+    insts = _tenant_instances(2)
+    other = bucketize(
+        generate_matching_instance(dataclasses.replace(SPEC, seed=33))
+    )
+    if shape_signature(other) == shape_signature(insts[0]):
+        pytest.skip("seeds produced identical shapes")
+    with pytest.raises(ValueError):
+        stack_instances([insts[0], other])
+
+
+# -- scheduler ----------------------------------------------------------------
+
+
+def test_scheduler_batches_and_reports():
+    rng = np.random.default_rng(11)
+    sched = Scheduler(SERVICE)
+    for t in range(4):
+        sched.add_tenant(f"t{t}", BASE)
+    out0 = sched.run_cadence()
+    assert sorted(sum(out0.batched_groups, [])) == ["t0", "t1", "t2", "t3"]
+    assert all(r["mode"] == "cold" for r in out0.reports.values())
+    for cadence in (1, 2):
+        deltas = {
+            name: _perturb_delta(s.ingestor.to_edge_list(), rng)
+            for name, s in sched.sessions.items()
+        }
+        out = sched.run_cadence(deltas)
+        assert len(out.batched_groups) == 1  # shapes stayed identical
+        for r in out.reports.values():
+            assert r["mode"] == "warm"
+            assert r["batched"]
+            assert r["drift_rel"] is not None
+            assert r["iters_used"] <= SERVICE.warm.total_iter_budget
+    # warm cadences must use fewer iterations than the cold bootstrap budget
+    assert all(
+        r["iters_used"] < SERVICE.cold.total_iter_budget
+        for r in out.reports.values()
+    )

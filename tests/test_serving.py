@@ -78,6 +78,7 @@ def test_prefill_then_decode_matches_decode_only(small_model):
 
 
 @pytest.mark.parametrize("arch", ["qwen3-8b", "zamba2-2.7b"])
+@pytest.mark.slow
 def test_int8_cache_parity(arch):
     cfg = get_reduced_config(arch)
     cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")

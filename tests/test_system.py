@@ -64,6 +64,7 @@ def test_end_to_end_fused_kernel_solve():
     assert abs(g_ref - g_kern) / abs(g_ref) < 1e-4
 
 
+@pytest.mark.slow
 def test_end_to_end_train_and_serve():
     """Train a tiny LM with the fault-tolerant loop, then serve it."""
     from repro.configs import get_reduced_config

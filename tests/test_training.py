@@ -82,6 +82,7 @@ def test_loss_decreases():
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses[:3] + losses[-3:]
 
 
+@pytest.mark.slow
 def test_microbatch_equivalence():
     """1 macro step == mean of microbatch grads (accumulation correctness)."""
     cfg = get_reduced_config("gemma-7b")
