@@ -1,12 +1,18 @@
 """Recurring-solve service benchmarks: delta ingest, warm starts, batching.
 
-Three measurements the serving layer is built around:
+Five measurements the serving layer is built around:
 
   * ``ingest``  — O(delta) in-place slab surgery vs O(nnz) re-bucketize;
+  * ``scatter`` — device-resident scatter-plan replay vs full slab re-upload:
+                  per-cadence host→device BYTES must scale with |delta|
+                  (plan size), not nnz (slab size);
   * ``warm``    — warm-started shortened-schedule solve vs cold full budget
                   (wall time and iterations actually executed);
   * ``pool``    — one vmapped batched solve of B shape-identical tenants vs
-                  B sequential solves.
+                  B sequential solves;
+  * ``pipeline``— double-buffered multi-cadence run (host ingest of cadence
+                  t+1 overlapped with the device solve of cadence t) vs the
+                  same cadences run synchronously.
 
 Rows: ``service_<what>,us_per_call,derived``.
 """
@@ -27,7 +33,12 @@ from repro.instances import (
 )
 from repro.service import (
     BatchedSolvePool,
+    Scheduler,
+    ServiceConfig,
+    apply_scatter_plan,
     compiled_solver,
+    device_put_instance,
+    instance_nbytes,
     to_solve_result,
 )
 
@@ -63,6 +74,23 @@ def run() -> None:
         "service_ingest_rebucketize", dt_repack,
         f"nnz={inst.nnz};speedup={dt_repack / max(dt_ingest, 1e-9):.1f}x",
     )
+
+    # -- device-resident scatter: host→device bytes scale with |delta| -------
+    dev = device_put_instance(ing.instance())
+    full_bytes = instance_nbytes(dev)
+    for frac in (0.001, 0.01, 0.05):
+        d = _delta(inst, rng, frac)
+        plan = ing.apply(d).plan
+        assert plan is not None  # updates never overflow headroom
+        t_scatter = time_fn(lambda: apply_scatter_plan(dev, plan), iters=5)
+        emit(
+            f"service_device_scatter_f{frac:g}", t_scatter,
+            f"edits={d.num_edits};plan_bytes={plan.nbytes};"
+            f"full_bytes={full_bytes};"
+            f"byte_save={full_bytes / max(plan.nbytes, 1):.0f}x",
+        )
+    t_full = time_fn(lambda: device_put_instance(ing.instance()), iters=5)
+    emit("service_device_full_upload", t_full, f"bytes={full_bytes}")
 
     # -- warm vs cold solve ---------------------------------------------------
     small = MatchingInstanceSpec(
@@ -116,4 +144,47 @@ def run() -> None:
     emit(
         "service_pool_sequential", t_seq,
         f"tenants={B};batch_speedup={t_seq / max(t_pool, 1e-9):.2f}x",
+    )
+
+    # -- pipelined cadences: host ingest overlapped with device solve --------
+    C = 4
+    svc = ServiceConfig(cold=cold_cfg, warm_gammas=(0.1, 0.01), row_headroom=8)
+    cadence_deltas = [None] + [
+        {
+            f"t{b}": _delta(
+                sinst, np.random.default_rng(500 + 10 * c + b), frac=0.25
+            )
+            for b in range(B)
+        }
+        for c in range(1, C)
+    ]
+
+    def mk():
+        s = Scheduler(svc)
+        for b in range(B):
+            s.add_tenant(f"t{b}", sinst)
+        return s
+
+    warmup = mk()  # populate the shared compile caches before timing
+    for d in cadence_deltas:
+        warmup.run_cadence(d)
+
+    s_sync = mk()
+    t0 = time.perf_counter()
+    for d in cadence_deltas:
+        s_sync.run_cadence(d)
+    t_sync = (time.perf_counter() - t0) * 1e6
+
+    s_pipe = mk()
+    t0 = time.perf_counter()
+    outs = s_pipe.run_pipeline(cadence_deltas)
+    t_pipe = (time.perf_counter() - t0) * 1e6
+
+    steady_up = sum(o.upload_bytes for o in outs[1:]) / max(len(outs) - 1, 1)
+    emit("service_cadences_sync", t_sync, f"cadences={C};tenants={B}")
+    emit(
+        "service_cadences_pipelined", t_pipe,
+        f"cadences={C};tenants={B};"
+        f"overlap_speedup={t_sync / max(t_pipe, 1e-9):.2f}x;"
+        f"steady_upload_bytes_per_cadence={steady_up:.0f}",
     )

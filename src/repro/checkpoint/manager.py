@@ -12,12 +12,18 @@ Design (1000+-node ready, CPU-validated here):
     optional sharding pytree: arrays are rebuilt host-side then device_put to
     the current mesh — restoring onto a different device count/topology
     (elastic rescale N -> M) is just a different sharding argument;
-  * keep-K garbage collection + SIGTERM save hook (preemption safety).
+  * keep-K garbage collection + SIGTERM save hook (preemption safety);
+  * template-free restore (`restore_flat`) + JSON `meta` in the manifest, for
+    states whose shapes the restorer cannot know ahead of time — the
+    recurring-solve service checkpoints its tenants' packed slabs this way
+    (bucket shapes drift with the ingested deltas), then rebuilds sessions
+    from the flat arrays + meta (`service.Scheduler.load_state`).
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import signal
 import threading
@@ -27,6 +33,11 @@ import jax
 import numpy as np
 
 __all__ = ["CheckpointManager", "latest_step"]
+
+# How `_flatten` (tree_flatten_with_path + keystr) renders a FLAT dict's
+# string key: exactly one DictKey, no nested path components.  `restore_flat`
+# unwraps these so flat-dict states round-trip with their original keys.
+_FLAT_DICT_KEY = re.compile(r"^\['([^]\[']*)'\]$")
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -70,19 +81,28 @@ class CheckpointManager:
 
     # -- save -----------------------------------------------------------------
 
-    def save(self, step: int, state, *, block: bool = False) -> None:
-        """Snapshot (device->host now) and write (async unless block=True)."""
+    def save(
+        self, step: int, state, *, block: bool = False, meta: Optional[dict] = None
+    ) -> None:
+        """Snapshot (device->host now) and write (async unless block=True).
+
+        ``meta`` (JSON-able) is stored in the manifest and returned by
+        `read_meta` / `restore_flat` — construction parameters the restorer
+        needs but that aren't arrays (e.g. the service's tenant specs).
+        """
         self.wait()  # never two writers in flight (same-step collisions)
         host = _flatten(jax.device_get(state))
         if self.async_write and not block:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host), daemon=True
+                target=self._write, args=(step, host, meta), daemon=True
             )
             self._thread.start()
         else:
-            self._write(step, host)
+            self._write(step, host, meta)
 
-    def _write(self, step: int, host: dict[str, np.ndarray]) -> None:
+    def _write(
+        self, step: int, host: dict[str, np.ndarray], meta: Optional[dict] = None
+    ) -> None:
         final = os.path.join(self.directory, f"step_{step:08d}")
         tmp = final + f".{os.getpid()}-{threading.get_ident()}.tmp"
         if os.path.exists(tmp):
@@ -94,6 +114,8 @@ class CheckpointManager:
             "keys": sorted(host.keys()),
             "nbytes": int(sum(a.nbytes for a in host.values())),
         }
+        if meta is not None:
+            manifest["meta"] = meta
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
@@ -149,6 +171,32 @@ class CheckpointManager:
                 lambda x, s: jax.device_put(x, s), tree, shardings
             )
         return tree
+
+    def restore_flat(self, step: int) -> tuple[dict[str, np.ndarray], dict]:
+        """Template-free restore: (flat key -> array, manifest meta).
+
+        For states whose leaf shapes only the checkpoint knows (the service's
+        packed slabs drift with ingested deltas); the caller reconstructs its
+        objects from the arrays plus the JSON ``meta`` recorded at save time.
+        States saved as a flat `{str: array}` dict round-trip with their
+        original keys (the keystr wrapping `save` applies is undone here);
+        nested-pytree keys come back keystr-rendered unchanged.
+        """
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        arrays = {}
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            for k in data.files:
+                m = _FLAT_DICT_KEY.match(k)
+                arrays[m.group(1) if m else k] = data[k].copy()
+        return arrays, manifest.get("meta", {})
+
+    def read_meta(self, step: int) -> dict:
+        """The JSON ``meta`` recorded with `save` (empty dict when absent)."""
+        path = os.path.join(self.directory, f"step_{step:08d}", "manifest.json")
+        with open(path) as f:
+            return json.load(f).get("meta", {})
 
     # -- preemption -------------------------------------------------------------
 

@@ -21,6 +21,8 @@ from repro.instances.buckets import (
 from repro.instances.deltas import (
     InstanceDelta,
     DeltaReport,
+    BucketScatter,
+    ScatterPlan,
     DeltaIngestor,
     apply_delta_to_edge_list,
 )
@@ -37,6 +39,8 @@ __all__ = [
     "unpack_primal",
     "InstanceDelta",
     "DeltaReport",
+    "BucketScatter",
+    "ScatterPlan",
     "DeltaIngestor",
     "apply_delta_to_edge_list",
 ]

@@ -28,6 +28,33 @@ account for the recompile.
 
 Padding stays exact-zero everywhere (mask 0, coeff 0), so gradients are
 unaffected — the same guarantee `bucketize` documents.
+
+Invariants the service layer builds on:
+
+  * **Scatter-plan emission** — every in-place `apply` also returns a compact
+    `ScatterPlan` (`DeltaReport.plan`): the exact set of touched (bucket, row,
+    slot) cells plus their post-delta values, gathered from the mutated host
+    slabs.  Replaying the plan against any array copy of the pre-delta slabs
+    (host or device, `.at[].set`) reproduces the post-delta slabs
+    *bit-for-bit*, because the plan's payload IS the authoritative host value.
+    Plan size is O(delta), so the serving layer's per-cadence host→device
+    transfer is O(delta) instead of O(nnz).  The re-bucketize fallback emits
+    no plan (`plan=None`, shapes may have changed): consumers must re-upload.
+  * **Generation counter** — `generation` increments once per *successful*
+    `apply` (in-place or fallback) and each plan is stamped with the
+    generation it produces.  A consumer holding device slabs at generation g
+    may apply a plan iff `plan.generation == g + 1`; anything else means a
+    missed or out-of-order delta and requires a full re-upload.
+  * **Atomicity** — validation (`_validate` + `_precheck` + move planning)
+    completes before the first mutation, so a rejected delta raises without
+    touching the slabs, the occupancy maps, the drift accounting, or the
+    generation counter.  A rejected delta therefore never half-applies, on
+    host or (via the missing plan) on device.
+  * **Headroom-overflow fallback** — when a delta cannot be absorbed in place
+    (degree beyond the widest bucket, or a bucket out of free rows), `apply`
+    re-bucketizes the reconstructed edge list; `DeltaReport.rebucketized` and
+    `fallback_reason` say so, and `shapes_changed` tells the caller whether
+    compiled executables keyed on the old shapes are now stale.
 """
 from __future__ import annotations
 
@@ -47,6 +74,8 @@ from repro.instances.generator import EdgeListInstance, MatchingInstanceSpec
 __all__ = [
     "InstanceDelta",
     "DeltaReport",
+    "BucketScatter",
+    "ScatterPlan",
     "DeltaIngestor",
     "apply_delta_to_edge_list",
 ]
@@ -127,6 +156,64 @@ class InstanceDelta:
 
 
 @dataclasses.dataclass(frozen=True)
+class BucketScatter:
+    """Touched cells of one bucket's slabs, with their post-delta values.
+
+    ``rows``/``slots`` address cells of the [n, L] slabs; the parallel value
+    arrays carry what the host slabs hold at those cells *after* the delta.
+    Cells are unique and sorted (row-major), so `.at[rows, slots].set(...)`
+    is deterministic regardless of backend scatter order.
+    """
+
+    bucket: int
+    rows: np.ndarray  # [k] int32
+    slots: np.ndarray  # [k] int32
+    idx: np.ndarray  # [k] int32 destination ids
+    cost: np.ndarray  # [k] slab dtype
+    mask: np.ndarray  # [k] slab dtype
+    coeff: np.ndarray  # [m, k] slab dtype
+
+    @property
+    def num_cells(self) -> int:
+        return int(self.rows.size)
+
+    @property
+    def nbytes(self) -> int:
+        return int(
+            self.rows.nbytes + self.slots.nbytes + self.idx.nbytes
+            + self.cost.nbytes + self.mask.nbytes + self.coeff.nbytes
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ScatterPlan:
+    """Compact O(delta) description of one applied in-place delta.
+
+    Replaying ``ops`` (plus the optional ``rhs`` replacement) on a copy of the
+    pre-delta slabs — host numpy or device `.at[].set` — reproduces the
+    ingestor's post-delta slabs bit-for-bit.  ``generation`` is the ingestor
+    generation the plan produces: apply it only to state at generation
+    ``generation - 1``.
+    """
+
+    generation: int
+    ops: tuple[BucketScatter, ...]
+    rhs: Optional[np.ndarray] = None  # full [m * J] replacement, slab dtype
+
+    @property
+    def num_cells(self) -> int:
+        return sum(op.num_cells for op in self.ops)
+
+    @property
+    def nbytes(self) -> int:
+        """Host→device bytes a consumer must transfer to replay this plan."""
+        n = sum(op.nbytes for op in self.ops)
+        if self.rhs is not None:
+            n += int(self.rhs.nbytes)
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
 class DeltaReport:
     """What a `DeltaIngestor.apply` call did."""
 
@@ -139,6 +226,10 @@ class DeltaReport:
     rhs_updated: bool
     moved_rows: int  # sources relocated to a wider bucket
     fallback_reason: Optional[str] = None
+    # In-place applies carry the device-replayable scatter plan; the
+    # re-bucketize fallback emits None (consumers must re-upload the slabs).
+    plan: Optional[ScatterPlan] = None
+    generation: int = 0  # ingestor generation after this apply
 
 
 class DeltaIngestor:
@@ -169,6 +260,12 @@ class DeltaIngestor:
         # ||Delta c||^2 accumulated since the last drain — feeds the paper's
         # gamma drift bound (core.stability.drift_bound) in SLA reports.
         self._pending_dc_sq = 0.0
+        # Bumped once per successful apply(); plans are stamped with it so
+        # device-resident consumers can fence out-of-order application.
+        self.generation = 0
+        # During apply(): per-bucket set of touched (row, slot) cells, turned
+        # into the ScatterPlan once the mutation completes.  None outside.
+        self._touched: Optional[dict[int, set[tuple[int, int]]]] = None
         self._build(inst)
 
     # -- construction -------------------------------------------------------
@@ -241,17 +338,18 @@ class DeltaIngestor:
         self._pending_dc_sq = 0.0
         return out
 
-    def unpack_primal(
-        self, x_slabs: Sequence[np.ndarray]
-    ) -> tuple[np.ndarray, np.ndarray]:
-        """Primal slab values keyed by edge: `(keys, x)`, keys sorted.
+    def primal_unpacker(self):
+        """Freeze the CURRENT occupancy maps into an `x_slabs -> (keys, x)` fn.
 
-        ``keys[e] = src * J + dst``.  Unlike slab-position comparisons, this
-        keying survives row relocations and re-bucketizes, so cadence-over-
-        cadence drift can always be metered edge-by-edge.
+        The returned closure owns copies of the slot coordinates and edge
+        keys, so it stays correct for primal slabs solved against *this*
+        generation's layout even after later deltas mutate the maps (or a
+        fallback re-shapes the slabs).  Overlapped drivers capture it at
+        dispatch time and apply it after the fence (`Scheduler._dispatch`).
         """
         J = self.spec.num_destinations
-        keys, vals = [], []
+        per_bucket: list[tuple[int, np.ndarray, np.ndarray]] = []
+        keys = []
         for t, b in enumerate(self.packed.buckets):
             sid = self._source_ids[t]
             rows = np.flatnonzero(sid >= 0)
@@ -264,12 +362,34 @@ class DeltaIngestor:
                 continue
             r = np.repeat(rows, d)
             o = np.concatenate([np.arange(k) for k in d])
-            keys.append(np.repeat(sid[rows], d) * J + b.idx[r, o].astype(np.int64))
-            vals.append(np.asarray(x_slabs[t])[r, o].astype(np.float64))
+            per_bucket.append((t, r, o))
+            keys.append(
+                np.repeat(sid[rows], d) * J + b.idx[r, o].astype(np.int64)
+            )
         k = np.concatenate(keys) if keys else np.zeros(0, np.int64)
-        v = np.concatenate(vals) if vals else np.zeros(0)
         order = np.argsort(k)
-        return k[order], v[order]
+        k_sorted = k[order]
+
+        def unpack(x_slabs: Sequence[np.ndarray]) -> tuple[np.ndarray, np.ndarray]:
+            vals = [
+                np.asarray(x_slabs[t])[r, o].astype(np.float64)
+                for t, r, o in per_bucket
+            ]
+            v = np.concatenate(vals) if vals else np.zeros(0)
+            return k_sorted, v[order]
+
+        return unpack
+
+    def unpack_primal(
+        self, x_slabs: Sequence[np.ndarray]
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Primal slab values keyed by edge: `(keys, x)`, keys sorted.
+
+        ``keys[e] = src * J + dst``.  Unlike slab-position comparisons, this
+        keying survives row relocations and re-bucketizes, so cadence-over-
+        cadence drift can always be metered edge-by-edge.
+        """
+        return self.primal_unpacker()(x_slabs)
 
     def to_edge_list(self) -> EdgeListInstance:
         """Reconstruct the current state as a sorted edge list (O(nnz))."""
@@ -307,6 +427,94 @@ class DeltaIngestor:
             rhs=self._rhs64.copy(),
         )
 
+    # -- checkpointing -------------------------------------------------------
+
+    def state_dict(self) -> tuple[dict[str, np.ndarray], dict]:
+        """(arrays, meta) capturing the exact packed state for checkpointing.
+
+        `from_state` rebuilds an ingestor with identical slabs, occupancy maps,
+        free-row stacks and generation — no re-bucketize, so row placement
+        (and therefore all future scatter plans) matches the checkpointed
+        ingestor bit-for-bit.  ``arrays`` is flat str→ndarray (checkpoint
+        friendly); ``meta`` is JSON-able construction parameters.
+        """
+        arrays: dict[str, np.ndarray] = {
+            "rhs64": self._rhs64.copy(),
+            "deg": self.deg.copy(),
+            "bucket_of": self.bucket_of.copy(),
+            "row_of": self.row_of.copy(),
+            "generation": np.asarray(self.generation, np.int64),
+            "pending_dc_sq": np.asarray(self._pending_dc_sq, np.float64),
+        }
+        for t, b in enumerate(self.packed.buckets):
+            arrays[f"bucket{t}.idx"] = np.asarray(b.idx).copy()
+            arrays[f"bucket{t}.coeff"] = np.asarray(b.coeff).copy()
+            arrays[f"bucket{t}.cost"] = np.asarray(b.cost).copy()
+            arrays[f"bucket{t}.mask"] = np.asarray(b.mask).copy()
+            arrays[f"bucket{t}.source_ids"] = self._source_ids[t].copy()
+            # free rows are a stack (pop/append order matters for future row
+            # assignment), so persist the exact order, not just membership
+            arrays[f"bucket{t}.free_rows"] = np.asarray(
+                self._free_rows[t], np.int64
+            )
+        meta = {
+            "spec": dataclasses.asdict(self.spec),
+            "shard_multiple": self.shard_multiple,
+            "min_length": self.min_length,
+            "row_headroom": self.row_headroom,
+            "dtype": np.dtype(self.dtype).name,
+            "lengths": [int(L) for L in self._lengths],
+        }
+        return arrays, meta
+
+    @classmethod
+    def from_state(
+        cls, arrays: dict[str, np.ndarray], meta: dict
+    ) -> "DeltaIngestor":
+        """Rebuild an ingestor from `state_dict` output (exact restore)."""
+        self = cls.__new__(cls)
+        self.spec = MatchingInstanceSpec(**meta["spec"])
+        self.shard_multiple = int(meta["shard_multiple"])
+        self.min_length = int(meta["min_length"])
+        self.row_headroom = int(meta["row_headroom"])
+        self.dtype = np.dtype(meta["dtype"])
+        self._rhs64 = np.asarray(arrays["rhs64"], np.float64).copy()
+        self._pending_dc_sq = float(arrays["pending_dc_sq"])
+        self.generation = int(arrays["generation"])
+        self._touched = None
+        lengths = [int(L) for L in meta["lengths"]]
+        buckets, sids, free = [], [], []
+        for t, L in enumerate(lengths):
+            buckets.append(
+                Bucket(
+                    idx=np.asarray(arrays[f"bucket{t}.idx"]).copy(),
+                    coeff=np.asarray(arrays[f"bucket{t}.coeff"]).copy(),
+                    cost=np.asarray(arrays[f"bucket{t}.cost"]).copy(),
+                    mask=np.asarray(arrays[f"bucket{t}.mask"]).copy(),
+                    length=L,
+                )
+            )
+            sids.append(
+                np.asarray(arrays[f"bucket{t}.source_ids"], np.int64).copy()
+            )
+            free.append(
+                [int(r) for r in np.asarray(arrays[f"bucket{t}.free_rows"])]
+            )
+        self.packed = BucketedInstance(
+            buckets=tuple(buckets),
+            rhs=self._rhs64.astype(self.dtype),
+            num_sources=self.spec.num_sources,
+            num_destinations=self.spec.num_destinations,
+            num_families=self.spec.num_families,
+        )
+        self._source_ids = sids
+        self._lengths = lengths
+        self.deg = np.asarray(arrays["deg"], np.int64).copy()
+        self.bucket_of = np.asarray(arrays["bucket_of"], np.int64).copy()
+        self.row_of = np.asarray(arrays["row_of"], np.int64).copy()
+        self._free_rows = free
+        return self
+
     # -- the delta path ------------------------------------------------------
 
     def apply(self, delta: InstanceDelta) -> DeltaReport:
@@ -314,8 +522,10 @@ class DeltaIngestor:
 
         Validation is complete before the first mutation (`_validate` +
         `_precheck` + move planning), so a rejected delta raises without
-        touching the slabs, the occupancy maps, or the drift accounting —
-        the caller can correct and retry.
+        touching the slabs, the occupancy maps, the drift accounting, or the
+        generation counter — the caller can correct and retry.  In-place
+        applies return a `DeltaReport` whose ``plan`` replays the exact slab
+        edits on any copy of the pre-delta slabs (see `ScatterPlan`).
         """
         self._validate(delta)
         self._precheck(delta)
@@ -324,32 +534,38 @@ class DeltaIngestor:
             return self._fallback(delta, plan_or_reason)
         moves, to_free = plan_or_reason
 
-        # 1. deletions (rows stay owned even at transient degree 0, so a
-        #    delete-all-then-reinsert delta keeps the source's row)
-        for s, d in zip(delta.delete_src, delta.delete_dst):
-            self._delete_edge(int(s), int(d))
-        # 2. release rows of sources whose *final* degree is 0 (planner-known),
-        #    making them available to the relocation pass
-        for s in to_free:
-            self._release_row(s)
-        # 3. row relocations / allocations for grown sources
-        for s, t_new in moves:
-            self._move_row(s, t_new)
-        # 4. insertions into (now sufficient) row headroom
-        for j, (s, d) in enumerate(zip(delta.insert_src, delta.insert_dst)):
-            self._insert_edge(
-                int(s), int(d),
-                float(delta.insert_values[j]), delta.insert_coeff[:, j],
-            )
-        # 5. cost/coefficient updates
-        for j, (s, d) in enumerate(zip(delta.update_src, delta.update_dst)):
-            val = None if delta.update_values is None else float(delta.update_values[j])
-            co = None if delta.update_coeff is None else delta.update_coeff[:, j]
-            self._update_edge(int(s), int(d), val, co)
-        # 6. budgets
-        if delta.rhs is not None:
-            self._rhs64[:] = delta.rhs
-            self.packed.rhs = self._rhs64.astype(self.dtype)
+        self._touched = {}
+        try:
+            # 1. deletions (rows stay owned even at transient degree 0, so a
+            #    delete-all-then-reinsert delta keeps the source's row)
+            for s, d in zip(delta.delete_src, delta.delete_dst):
+                self._delete_edge(int(s), int(d))
+            # 2. release rows of sources whose *final* degree is 0
+            #    (planner-known), making them available to the relocation pass
+            for s in to_free:
+                self._release_row(s)
+            # 3. row relocations / allocations for grown sources
+            for s, t_new in moves:
+                self._move_row(s, t_new)
+            # 4. insertions into (now sufficient) row headroom
+            for j, (s, d) in enumerate(zip(delta.insert_src, delta.insert_dst)):
+                self._insert_edge(
+                    int(s), int(d),
+                    float(delta.insert_values[j]), delta.insert_coeff[:, j],
+                )
+            # 5. cost/coefficient updates
+            for j, (s, d) in enumerate(zip(delta.update_src, delta.update_dst)):
+                val = None if delta.update_values is None else float(delta.update_values[j])
+                co = None if delta.update_coeff is None else delta.update_coeff[:, j]
+                self._update_edge(int(s), int(d), val, co)
+            # 6. budgets
+            if delta.rhs is not None:
+                self._rhs64[:] = delta.rhs
+                self.packed.rhs = self._rhs64.astype(self.dtype)
+            self.generation += 1
+            plan = self._emit_plan(rhs_updated=delta.rhs is not None)
+        finally:
+            self._touched = None
         return DeltaReport(
             in_place=True,
             rebucketized=False,
@@ -359,6 +575,40 @@ class DeltaIngestor:
             n_update=int(delta.update_src.size),
             rhs_updated=delta.rhs is not None,
             moved_rows=len(moves),
+            plan=plan,
+            generation=self.generation,
+        )
+
+    def _record(self, t: int, row: int, slot: int) -> None:
+        """Mark one slab cell as touched (all four arrays at that cell)."""
+        if self._touched is not None:
+            self._touched.setdefault(t, set()).add((row, slot))
+
+    def _emit_plan(self, *, rhs_updated: bool) -> ScatterPlan:
+        """Gather post-delta values at the touched cells into a ScatterPlan."""
+        ops = []
+        for t in sorted(self._touched or ()):
+            cells = self._touched[t]
+            if not cells:
+                continue
+            b = self.packed.buckets[t]
+            rc = np.array(sorted(cells), np.int32)  # [k, 2] row-major order
+            rows, slots = rc[:, 0], rc[:, 1]
+            ops.append(
+                BucketScatter(
+                    bucket=t,
+                    rows=rows,
+                    slots=slots,
+                    idx=b.idx[rows, slots].copy(),
+                    cost=b.cost[rows, slots].copy(),
+                    mask=b.mask[rows, slots].copy(),
+                    coeff=b.coeff[:, rows, slots].copy(),
+                )
+            )
+        return ScatterPlan(
+            generation=self.generation,
+            ops=tuple(ops),
+            rhs=np.asarray(self.packed.rhs).copy() if rhs_updated else None,
         )
 
     def _validate(self, delta: InstanceDelta) -> None:
@@ -498,6 +748,7 @@ class DeltaIngestor:
         mutated = apply_delta_to_edge_list(cur, delta)
         self._rhs64 = np.asarray(mutated.rhs, np.float64).copy()
         self._build(mutated)
+        self.generation += 1
         new_shapes = [(b.rows, b.length) for b in self.packed.buckets]
         return DeltaReport(
             in_place=False,
@@ -509,6 +760,8 @@ class DeltaIngestor:
             rhs_updated=delta.rhs is not None,
             moved_rows=0,
             fallback_reason=reason,
+            plan=None,
+            generation=self.generation,
         )
 
     # -- slab surgery --------------------------------------------------------
@@ -536,6 +789,8 @@ class DeltaIngestor:
         b.coeff[:, r, j] = b.coeff[:, r, last]
         b.coeff[:, r, last] = 0
         self.deg[s] = last
+        self._record(t, r, j)
+        self._record(t, r, last)
 
     def _release_row(self, s: int) -> None:
         if self.deg[s] != 0:
@@ -559,6 +814,7 @@ class DeltaIngestor:
         b.coeff[:, r, dd] = coeff
         self.deg[s] = dd + 1
         self._pending_dc_sq += value**2
+        self._record(t, r, dd)
 
     def _update_edge(
         self, s: int, d: int, value: Optional[float], coeff: Optional[np.ndarray]
@@ -570,6 +826,7 @@ class DeltaIngestor:
             b.cost[r, j] = -value
         if coeff is not None:
             b.coeff[:, r, j] = coeff
+        self._record(t, r, j)
 
     def _move_row(self, s: int, t_new: int) -> None:
         """Relocate source s to a free row of bucket t_new (or claim one)."""
@@ -588,6 +845,9 @@ class DeltaIngestor:
                 src_arr[r_old, :d] = 0
             bn.coeff[:, r_new, :d] = bo.coeff[:, r_old, :d]
             bo.coeff[:, r_old, :d] = 0
+            for j in range(d):
+                self._record(t_old, r_old, j)
+                self._record(t_new, r_new, j)
             self._source_ids[t_old][r_old] = -1
             self._free_rows[t_old].append(r_old)
         self._source_ids[t_new][r_new] = s

@@ -1,14 +1,26 @@
 """Recurring-solve service demo: multi-tenant cadences end-to-end.
 
     PYTHONPATH=src python -m repro.launch.service \
-        [--sources 2000] [--tenants 4] [--cadences 3] [--verify]
+        [--sources 2000] [--tenants 4] [--cadences 3] [--verify] \
+        [--checkpoint-dir ckpts/service] [--resume] [--dry-run]
 
 Simulates a production serving loop: N tenants share one eligibility topology
 (so their packed shapes match and the scheduler batches them into ONE vmapped
 solve), each cadence applies per-tenant deltas (cost updates, a few edge
 inserts/deletes inside the padding headroom, budget jitter), and every solve
 after the first warm-starts from the tenant's previous duals on a shortened
-continuation schedule with convergence-based early stopping.
+continuation schedule with convergence-based early stopping.  Slabs stay
+device-resident across cadences: each solve reports its host→device upload —
+one full O(nnz) transfer at bootstrap, then O(delta) scatter plans.
+
+`--checkpoint-dir` persists every tenant session (duals, edge-space primal,
+packed slabs + occupancy maps, continuation position) after each cadence via
+`repro.checkpoint.CheckpointManager`; `--resume` restarts from the latest
+checkpoint so every tenant's first solve after the restart is WARM, not cold.
+
+`--dry-run` builds the fleet, ingests one delta per tenant and prints the
+O(delta) scatter-plan sizes without solving — the CI docs job runs this to
+prove the quickstart snippet stays executable.
 
 `--verify` additionally cross-checks, for one tenant, the warm-started
 delta-updated solve against a cold full-budget solve of the same mutated
@@ -73,6 +85,14 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true",
                     help="cross-check warm vs cold and batched vs sequential")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="persist all tenant sessions after each cadence")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore from the latest checkpoint in "
+                         "--checkpoint-dir; the first solve resumes warm")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="build the fleet and ingest one delta per tenant "
+                         "(print scatter-plan sizes) without solving")
     args = ap.parse_args()
 
     import numpy as np
@@ -84,6 +104,7 @@ def main() -> int:
         Scheduler,
         ServiceConfig,
         compiled_solver,
+        instance_nbytes,
         shape_signature,
         to_solve_result,
     )
@@ -109,10 +130,41 @@ def main() -> int:
         row_headroom=args.row_headroom,
     )
     sched = Scheduler(cfg)
-    for t in range(args.tenants):
-        sched.add_tenant(f"tenant{t}", base)
 
-    for cadence in range(args.cadences):
+    mgr = None
+    start_cadence = 0
+    if args.checkpoint_dir:
+        from repro.checkpoint import CheckpointManager, latest_step
+
+        mgr = CheckpointManager(args.checkpoint_dir, keep=3)
+        last = latest_step(args.checkpoint_dir) if args.resume else None
+        if last is not None:
+            sched.restore_checkpoint(mgr, last)
+            start_cadence = last + 1
+            print(
+                f"resumed {len(sched.sessions)} tenants from "
+                f"{args.checkpoint_dir}/step_{last:08d} — first solve is WARM"
+            )
+    if not sched.sessions:
+        for t in range(args.tenants):
+            sched.add_tenant(f"tenant{t}", base)
+
+    if args.dry_run:
+        for name, sess in sched.sessions.items():
+            rep = sess.ingest(_random_delta(sess.ingestor.to_edge_list(), rng))
+            plan = rep.plan
+            print(
+                f"  {name}: delta +{rep.n_insert}/-{rep.n_delete}/~{rep.n_update}"
+                f" -> plan cells={plan.num_cells} bytes={plan.nbytes}"
+                f" (full slab upload would be "
+                f"{instance_nbytes(sess.instance())}B)"
+                if plan is not None
+                else f"  {name}: re-bucketize fallback ({rep.fallback_reason})"
+            )
+        print("DRY-RUN OK (no solves executed)")
+        return 0
+
+    for cadence in range(start_cadence, start_cadence + args.cadences):
         deltas = {}
         if cadence > 0:  # day 0 is the cold bootstrap of the shared topology
             for name, sess in sched.sessions.items():
@@ -120,6 +172,11 @@ def main() -> int:
         t0 = time.time()
         out = sched.run_cadence(deltas)
         dt = time.time() - t0
+        if mgr is not None:
+            # async save: the write overlaps the next cadence; the final
+            # mgr.wait() below keeps interpreter exit from killing the
+            # daemon writer mid-checkpoint
+            sched.save_checkpoint(mgr, cadence)
         n_batched = sum(len(g) for g in out.batched_groups)
         print(
             f"\ncadence {cadence}: {dt:.1f}s  "
@@ -144,8 +201,12 @@ def main() -> int:
             )
             print(
                 f"  {name}: {r['mode']:4s} iters {r['iters_used']}/{r['iter_budget']}"
-                f" g={r['g']:.4f} viol={r['max_violation']:.2e} {drift}{ing_s}"
+                f" g={r['g']:.4f} viol={r['max_violation']:.2e} "
+                f"up[{r['upload_mode']}:{r['upload_bytes']}B] {drift}{ing_s}"
             )
+
+    if mgr is not None:
+        mgr.wait()  # flush the last async checkpoint before exiting
 
     if args.verify:
         print("\n-- verify: warm+early-stop vs cold full budget ----------------")

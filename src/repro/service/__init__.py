@@ -30,15 +30,27 @@ cadences over slowly evolving inputs".  This package turns the one-shot
 Architecture invariants:
 
   * The packed instance is a *traced argument* of the compiled solvers, never
-    a closed-over constant — in-place slab updates are always visible, and
-    the jit cache keys executables on bucket shapes, so a tenant whose deltas
-    stay within padding headroom never recompiles.
+    a closed-over constant — slab updates are always visible, and the jit
+    cache keys executables on bucket shapes, so a tenant whose deltas stay
+    within padding headroom never recompiles.
   * Shape identity is the batching currency: `ServiceConfig.row_headroom`
     buys shape stability; the scheduler monetises it by vmapping
     shape-identical tenants together.
-  * Everything here is single-process and synchronous; distributed execution
-    composes underneath via `core.sharding` (the operator-centric boundary),
-    and async ingestion / cross-cadence checkpointing are ROADMAP items.
+  * Slabs are device-resident across cadences: the host `DeltaIngestor` is
+    the source of truth, each applied delta emits an O(delta) `ScatterPlan`,
+    and `engine.apply_scatter_plan` replays it on the device copy with
+    `.at[].set` — bit-for-bit equal to re-uploading, at O(delta) transfer.
+  * `Scheduler.run_pipeline` double-buffers cadences: host-side delta
+    validation + plan construction for cadence t+1 overlaps the device solve
+    of cadence t, fenced by `jax.block_until_ready`; per-tenant generation
+    counters guarantee a rejected delta never half-applies.
+  * Sessions checkpoint/restore through `checkpoint.CheckpointManager`
+    (`Scheduler.save_checkpoint` / `restore_checkpoint`): a restarted
+    service resumes every tenant warm.  Distributed execution composes
+    underneath via `core.sharding` (the operator-centric boundary).
+
+See docs/service.md for the operator-facing walkthrough and
+docs/architecture.md for the package map.
 
 Drift-SLA knobs (`ServiceConfig`): `drift_sla_rel` sets the relative
 run-to-run primal drift SLA checked each cadence; `cold.gammas[-1]` (the
@@ -52,6 +64,9 @@ from repro.service.engine import (
     to_solve_result,
     to_solve_results,
     compile_cache_report,
+    device_put_instance,
+    apply_scatter_plan,
+    instance_nbytes,
 )
 from repro.service.pool import BatchedSolvePool, shape_signature, stack_instances
 from repro.service.scheduler import CadenceReport, Scheduler
@@ -64,6 +79,9 @@ __all__ = [
     "to_solve_result",
     "to_solve_results",
     "compile_cache_report",
+    "device_put_instance",
+    "apply_scatter_plan",
+    "instance_nbytes",
     "BatchedSolvePool",
     "shape_signature",
     "stack_instances",

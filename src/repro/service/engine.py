@@ -14,13 +14,34 @@ keys executables on the bucket shapes — tenants (and cadences) that share slab
 shapes share one executable, which is exactly the reuse the delta-ingest layer
 preserves shapes for.  `jax.vmap` over a leading tenant axis turns the same
 function into the batched multi-tenant pool kernel.
+
+Invariants:
+
+  * **Shape-keyed compilation cache** — `compiled_solver` /
+    `compiled_batch_solver` hold one jitted entry point per
+    (MaximizerConfig, normalize) pair, and within each XLA re-keys on the
+    instance's bucket shapes.  Shape-preserving deltas therefore never
+    recompile; `compile_cache_report` exposes the executable counts.
+  * **Device residency** — `device_put_instance` uploads the packed slabs
+    once (O(nnz)); after that, each cadence's `ScatterPlan` is replayed with
+    `apply_scatter_plan` (`.at[].set` of the touched cells), so the
+    steady-state host→device traffic is O(delta) per cadence.  Because the
+    plan payload is gathered from the mutated host slabs, the scattered
+    device slabs equal the host slabs bit-for-bit — the host `DeltaIngestor`
+    stays the source of truth, the device copy is a faithful cache.
+  * **Asynchrony** — solver entry points only *dispatch* work; the returned
+    `RawSolve` holds device futures.  Callers that overlap host work with
+    the solve must fence with `jax.block_until_ready` (see
+    `service.scheduler`) before converting results host-side.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.maximizer import (
     MaximizerConfig,
@@ -31,7 +52,8 @@ from repro.core.maximizer import (
     step_size,
 )
 from repro.core.objective import MatchingObjective, normalize_rows_traced
-from repro.instances.buckets import BucketedInstance
+from repro.instances.buckets import Bucket, BucketedInstance
+from repro.instances.deltas import ScatterPlan
 
 __all__ = [
     "RawSolve",
@@ -40,6 +62,9 @@ __all__ = [
     "to_solve_result",
     "to_solve_results",
     "compile_cache_report",
+    "device_put_instance",
+    "apply_scatter_plan",
+    "instance_nbytes",
 ]
 
 
@@ -175,6 +200,50 @@ def to_solve_results(raw: RawSolve) -> list[SolveResult]:
             )
         )
     return out
+
+
+def device_put_instance(inst: BucketedInstance) -> BucketedInstance:
+    """Upload every slab leaf to device once (the O(nnz) bootstrap transfer).
+
+    The returned instance is leaf-wise `jax.Array`; subsequent cadences keep
+    it resident and mutate it with `apply_scatter_plan` (O(delta) transfer).
+    """
+    return jax.tree.map(jnp.asarray, inst)
+
+
+def apply_scatter_plan(
+    inst: BucketedInstance, plan: ScatterPlan
+) -> BucketedInstance:
+    """Replay one `ScatterPlan` on device-resident slabs with `.at[].set`.
+
+    Only the plan's compact index/value arrays cross the host→device boundary;
+    the slabs themselves never round-trip.  Touched cells receive the exact
+    host-slab values the plan carries, so the result is bit-for-bit equal to
+    re-uploading the mutated host slabs — at O(delta) instead of O(nnz) cost.
+    """
+    buckets = list(inst.buckets)
+    for op in plan.ops:
+        b = buckets[op.bucket]
+        rows = jnp.asarray(op.rows)
+        slots = jnp.asarray(op.slots)
+        buckets[op.bucket] = Bucket(
+            idx=jnp.asarray(b.idx).at[rows, slots].set(jnp.asarray(op.idx)),
+            coeff=jnp.asarray(b.coeff).at[:, rows, slots].set(
+                jnp.asarray(op.coeff)
+            ),
+            cost=jnp.asarray(b.cost).at[rows, slots].set(jnp.asarray(op.cost)),
+            mask=jnp.asarray(b.mask).at[rows, slots].set(jnp.asarray(op.mask)),
+            length=b.length,
+        )
+    rhs = inst.rhs if plan.rhs is None else jnp.asarray(plan.rhs)
+    return dataclasses.replace(inst, buckets=tuple(buckets), rhs=rhs)
+
+
+def instance_nbytes(inst: BucketedInstance) -> int:
+    """Total slab bytes — what a full (re-)upload of the instance transfers."""
+    return int(
+        sum(np.asarray(leaf).nbytes for leaf in jax.tree.leaves(inst))
+    )
 
 
 def compile_cache_report() -> dict[str, int]:

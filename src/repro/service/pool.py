@@ -13,6 +13,22 @@ Shape identity is the grouping key (`shape_signature`); the scheduler falls
 back to per-tenant solves for singleton groups.  The delta-ingest layer's
 shape-preserving updates are what keep a tenant inside its pool group day
 over day.
+
+Invariants:
+
+  * **Shape identity is the batching currency** — `stack_instances` refuses
+    mixed signatures; `ServiceConfig.row_headroom` is what buys tenants a
+    stable signature across deltas, and the vmapped solve is how the fleet
+    monetises it.
+  * **Stacking is a device op** — when the per-tenant leaves are already
+    device-resident (`service.engine.device_put_instance`), `jnp.stack`
+    runs on device: batching adds no host→device traffic on top of the
+    O(delta) scatter plans.
+  * **Dispatch/fence split** — `solve_async` only dispatches the vmapped
+    executable and returns a `RawSolve` of device futures; `finish` fences
+    (`jax.block_until_ready`) and converts host-side.  `solve` composes the
+    two; the scheduler's double-buffered pipeline keeps them apart so host
+    ingestion of the next cadence overlaps the in-flight batch.
 """
 from __future__ import annotations
 
@@ -26,6 +42,7 @@ import numpy as np
 from repro.core.maximizer import MaximizerConfig, SolveResult
 from repro.instances.buckets import BucketedInstance
 from repro.service.engine import (
+    RawSolve,
     compiled_batch_solver,
     to_solve_results,
 )
@@ -73,12 +90,17 @@ class BatchedSolvePool:
     # device-side Jacobi row normalization inside the solve (see engine)
     normalize: bool = False
 
-    def solve(
+    def solve_async(
         self,
         instances: Sequence[BucketedInstance],
         lam0s: Optional[Sequence[Optional[jax.Array]]] = None,
-    ) -> list[SolveResult]:
-        """One batched solve; `lam0s[i] = None` cold-starts that tenant."""
+    ) -> RawSolve:
+        """Dispatch one batched solve; `lam0s[i] = None` cold-starts that tenant.
+
+        Returns immediately with a `RawSolve` of device futures — pair with
+        `finish` (or `jax.block_until_ready`) to consume results.  Host work
+        scheduled between the two overlaps the device solve.
+        """
         stacked = stack_instances(instances)
         dual_dim = instances[0].dual_dim
         batch = len(instances)
@@ -95,7 +117,20 @@ class BatchedSolvePool:
                 raise ValueError(
                     f"lam0s[{i}] has shape {r.shape}, expected ({dual_dim},)"
                 )
-        raw = compiled_batch_solver(self.config, self.normalize)(
+        return compiled_batch_solver(self.config, self.normalize)(
             stacked, jnp.stack(rows)
         )
+
+    @staticmethod
+    def finish(raw: RawSolve) -> list[SolveResult]:
+        """Fence a `solve_async` dispatch and split it into per-tenant results."""
+        jax.block_until_ready(raw)
         return to_solve_results(raw)
+
+    def solve(
+        self,
+        instances: Sequence[BucketedInstance],
+        lam0s: Optional[Sequence[Optional[jax.Array]]] = None,
+    ) -> list[SolveResult]:
+        """One blocking batched solve (`solve_async` + `finish`)."""
+        return self.finish(self.solve_async(instances, lam0s))

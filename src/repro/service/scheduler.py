@@ -2,29 +2,53 @@
 
 One `Scheduler` owns all tenant `SolveSession`s and drives a cadence:
 
-  1. apply each tenant's `InstanceDelta` (O(delta) in-place when headroom
-     allows — see `repro.instances.deltas`);
+  1. apply each tenant's `InstanceDelta` on the host slabs (O(delta) in-place
+     when headroom allows — see `repro.instances.deltas`), queueing the
+     emitted scatter plans for the device-resident copies;
   2. partition tenants by `(shape_signature, warm/cold)` — shape-identical
      tenants in the same start mode can share one compiled executable;
   3. groups of >= `batch_min` tenants are solved by ONE vmapped call through
-     `BatchedSolvePool`; the rest solve individually (still sharing the
-     shape-keyed compile cache);
+     the shared engine; the rest solve individually (still sharing the
+     shape-keyed compile cache).  Solves run against device-resident slabs,
+     so the per-cadence host→device transfer is the scatter plans, O(delta);
   4. every tenant's session absorbs its result and emits its drift-SLA report.
 
-The scheduler is deliberately synchronous and deterministic — async ingestion
-and cross-cadence checkpointing are ROADMAP follow-ons.
+`run_cadence` is the synchronous single-step driver.  `run_pipeline` is the
+double-buffered multi-cadence driver: solves are *dispatched* (jax dispatch is
+asynchronous — the returned `RawSolve` holds device futures), then the NEXT
+cadence's delta validation, host slab surgery and scatter-plan construction
+run on the host while the devices are still solving, and only then does the
+scheduler fence with `jax.block_until_ready` and absorb results.  Steady
+state, the host ingest cost is hidden entirely behind the device solve.
+
+Fencing invariants of the overlap:
+
+  * Host ingestion for cadence t+1 mutates only the host slabs; the device
+    copies were materialised at dispatch time and are immutable jax arrays,
+    so the in-flight solve of cadence t can never observe cadence t+1 edits.
+  * A delta rejected during the overlap raises inside `DeltaIngestor.apply`
+    *before* any mutation: the host slabs, the scatter-plan queue and the
+    per-tenant generation counter are untouched, so nothing half-applies and
+    cadence t+1 simply solves the last good state (the rejection is reported
+    in `CadenceReport.ingest_errors`).
+  * Results are absorbed only after the fence, so drift metering always
+    compares completed cadence t against completed cadence t-1.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
-import jax.numpy as jnp
+import jax
 
 from repro.instances.deltas import DeltaReport, InstanceDelta
 from repro.instances.generator import EdgeListInstance
-from repro.service.engine import compiled_batch_solver, compile_cache_report, to_solve_results
-from repro.service.pool import shape_signature, stack_instances
+from repro.service.engine import (
+    compile_cache_report,
+    compiled_solver,
+    to_solve_result,
+)
+from repro.service.pool import BatchedSolvePool, shape_signature
 from repro.service.session import ServiceConfig, SolveSession
 
 __all__ = ["CadenceReport", "Scheduler"]
@@ -32,32 +56,147 @@ __all__ = ["CadenceReport", "Scheduler"]
 
 @dataclasses.dataclass
 class CadenceReport:
-    """Outcome of one `Scheduler.run_cadence` call."""
+    """Outcome of one scheduler cadence (`run_cadence` / `run_pipeline` step)."""
 
     reports: dict[str, dict[str, Any]]  # per-tenant solve reports
     ingest: dict[str, DeltaReport]  # per-tenant delta reports
     batched_groups: list[list[str]]  # tenant groups solved in one vmapped call
     solo_tenants: list[str]
     compile_cache: dict[str, int]
+    # deltas rejected during ingestion (pipeline mode): tenant -> error; the
+    # tenant's state is untouched and it solved the last good generation
+    ingest_errors: dict[str, str] = dataclasses.field(default_factory=dict)
+    # True when this cadence's ingest ran overlapped with the previous solve
+    overlapped: bool = False
 
     @property
     def batched_fraction(self) -> float:
+        """Fraction of tenants solved inside a vmapped pool group."""
         n = len(self.reports)
         return sum(len(g) for g in self.batched_groups) / max(n, 1)
 
+    @property
+    def upload_bytes(self) -> int:
+        """Total host→device bytes this cadence's solves transferred."""
+        return sum(r.get("upload_bytes") or 0 for r in self.reports.values())
+
 
 class Scheduler:
+    """Owns all tenant sessions and drives synchronous or pipelined cadences."""
+
     def __init__(self, config: Optional[ServiceConfig] = None, *, batch_min: int = 2):
         self.config = config or ServiceConfig()
         self.batch_min = max(2, int(batch_min))
         self.sessions: dict[str, SolveSession] = {}
 
     def add_tenant(self, name: str, inst: EdgeListInstance) -> SolveSession:
+        """Register a tenant with its bootstrap instance (cold first solve)."""
         if name in self.sessions:
             raise ValueError(f"tenant {name!r} already registered")
         s = SolveSession(name, inst, self.config)
         self.sessions[name] = s
         return s
+
+    # -- cadence phases ------------------------------------------------------
+
+    def _ingest_all(
+        self, deltas: Optional[dict[str, InstanceDelta]], *, strict: bool
+    ) -> tuple[dict[str, DeltaReport], dict[str, str]]:
+        """Apply per-tenant deltas on the host; collect rejections if not strict."""
+        ingest: dict[str, DeltaReport] = {}
+        errors: dict[str, str] = {}
+        for name, delta in (deltas or {}).items():
+            try:
+                ingest[name] = self.sessions[name].ingest(delta)
+            except (KeyError, ValueError) as e:
+                if strict:
+                    raise
+                errors[name] = f"{type(e).__name__}: {e}"
+        return ingest, errors
+
+    def _dispatch(self, force_cold: bool):
+        """Group tenants and dispatch every solve; returns device futures.
+
+        Nothing here blocks on device results: the batched/solo `RawSolve`s
+        are asynchronous, which is what `run_pipeline` overlaps host
+        ingestion against.
+        """
+        groups: dict[tuple, list[str]] = {}
+        starts: dict[str, tuple] = {}
+        for name, s in self.sessions.items():
+            cold, reason, lam0 = s._start_state(force_cold)
+            # Snapshot NOW everything absorb will need after the fence: the
+            # cost drift drained for THIS cadence and a primal unpacker
+            # frozen over this generation's occupancy maps.  Deltas ingested
+            # during the overlap then cannot be attributed to — or corrupt
+            # the drift metering of — the in-flight solve.
+            starts[name] = (
+                cold,
+                reason,
+                lam0,
+                s.ingestor.drain_cost_drift(),
+                s.ingestor.primal_unpacker(),
+            )
+            key = (shape_signature(s.instance()), cold)
+            groups.setdefault(key, []).append(name)
+
+        batched: list[tuple[list[str], bool, Any]] = []
+        solo: list[tuple[str, bool, Any]] = []
+        for (_, cold), names in groups.items():
+            cfg = self.config.cold if cold else self.config.warm
+            if len(names) >= self.batch_min:
+                pool = BatchedSolvePool(cfg, normalize=self.config.normalize)
+                raw = pool.solve_async(
+                    [self.sessions[n].device_instance() for n in names],
+                    [starts[n][2] for n in names],
+                )
+                batched.append((list(names), cold, raw))
+            else:
+                for name in names:
+                    raw = compiled_solver(cfg, self.config.normalize)(
+                        self.sessions[name].device_instance(), starts[name][2]
+                    )
+                    solo.append((name, cold, raw))
+        return batched, solo, starts
+
+    @staticmethod
+    def _fence(dispatched) -> None:
+        """Block until every dispatched solve's device work is complete."""
+        batched, solo, _ = dispatched
+        jax.block_until_ready(
+            [raw for _, _, raw in batched] + [raw for _, _, raw in solo]
+        )
+
+    def _absorb(self, dispatched):
+        """Fold finished solves into their sessions; build per-tenant reports."""
+        batched, solo, starts = dispatched
+        reports: dict[str, dict[str, Any]] = {}
+        batched_groups: list[list[str]] = []
+        solo_names: list[str] = []
+        for names, cold, raw in batched:
+            batched_groups.append(list(names))
+            for name, res in zip(names, BatchedSolvePool.finish(raw)):
+                reports[name] = self.sessions[name].absorb(
+                    res,
+                    cold=cold,
+                    cold_reason=starts[name][1],
+                    batched=True,
+                    dc_norm=starts[name][3],
+                    unpack=starts[name][4],
+                )
+        for name, cold, raw in solo:
+            solo_names.append(name)
+            reports[name] = self.sessions[name].absorb(
+                to_solve_result(raw),
+                cold=cold,
+                cold_reason=starts[name][1],
+                batched=False,
+                dc_norm=starts[name][3],
+                unpack=starts[name][4],
+            )
+        return reports, batched_groups, solo_names
+
+    # -- drivers -------------------------------------------------------------
 
     def run_cadence(
         self,
@@ -65,47 +204,10 @@ class Scheduler:
         *,
         force_cold: bool = False,
     ) -> CadenceReport:
-        """Ingest deltas and solve every tenant once."""
-        ingest: dict[str, DeltaReport] = {}
-        for name, delta in (deltas or {}).items():
-            ingest[name] = self.sessions[name].ingest(delta)
-
-        # group tenants that can share one vmapped executable
-        groups: dict[tuple, list[str]] = {}
-        starts: dict[str, tuple] = {}
-        for name, s in self.sessions.items():
-            cold, reason, lam0 = s._start_state(force_cold)
-            starts[name] = (cold, reason, lam0)
-            key = (shape_signature(s.instance()), cold)
-            groups.setdefault(key, []).append(name)
-
-        reports: dict[str, dict[str, Any]] = {}
-        batched_groups: list[list[str]] = []
-        solo: list[str] = []
-        for (_, cold), names in groups.items():
-            if len(names) >= self.batch_min:
-                batched_groups.append(list(names))
-                cfg = self.config.cold if cold else self.config.warm
-                stacked = stack_instances(
-                    [self.sessions[n].instance() for n in names]
-                )
-                lam0s = jnp.stack([starts[n][2] for n in names])
-                raw = compiled_batch_solver(cfg, self.config.normalize)(
-                    stacked, lam0s
-                )
-                for name, res in zip(names, to_solve_results(raw)):
-                    reports[name] = self.sessions[name].absorb(
-                        res,
-                        cold=cold,
-                        cold_reason=starts[name][1],
-                        batched=True,
-                    )
-            else:
-                solo.extend(names)
-        for name in solo:
-            _, report = self.sessions[name].solve(force_cold=force_cold)
-            reports[name] = report
-
+        """Ingest deltas and solve every tenant once (synchronous driver)."""
+        ingest, _ = self._ingest_all(deltas, strict=True)
+        dispatched = self._dispatch(force_cold)
+        reports, batched_groups, solo = self._absorb(dispatched)
         return CadenceReport(
             reports=reports,
             ingest=ingest,
@@ -113,3 +215,92 @@ class Scheduler:
             solo_tenants=solo,
             compile_cache=compile_cache_report(),
         )
+
+    def run_pipeline(
+        self,
+        cadence_deltas: Sequence[Optional[dict[str, InstanceDelta]]],
+        *,
+        force_cold: bool = False,
+    ) -> list[CadenceReport]:
+        """Run several cadences with host ingest overlapped against device solves.
+
+        ``cadence_deltas[t]`` are the deltas ingested *for* cadence t; while
+        cadence t's solves run on device, cadence t+1's deltas are validated
+        and applied on the host (scatter plans queued, device copies
+        untouched).  Rejected deltas never half-apply — they surface in the
+        next cadence's `ingest_errors` and that tenant solves its last good
+        state.  Equivalent to a `run_cadence` loop, minus the host-ingest
+        wall time.
+        """
+        deltas = list(cadence_deltas)
+        out: list[CadenceReport] = []
+        ingest, errors = self._ingest_all(
+            deltas[0] if deltas else None, strict=False
+        )
+        for t in range(len(deltas)):
+            dispatched = self._dispatch(force_cold)
+            if t + 1 < len(deltas):
+                # the overlap: host-side validation + slab surgery + plan
+                # construction for cadence t+1 while cadence t solves
+                next_ingest, next_errors = self._ingest_all(
+                    deltas[t + 1], strict=False
+                )
+            else:
+                next_ingest, next_errors = {}, {}
+            self._fence(dispatched)
+            reports, batched_groups, solo = self._absorb(dispatched)
+            out.append(
+                CadenceReport(
+                    reports=reports,
+                    ingest=ingest,
+                    batched_groups=batched_groups,
+                    solo_tenants=solo,
+                    compile_cache=compile_cache_report(),
+                    ingest_errors=errors,
+                    overlapped=t > 0,
+                )
+            )
+            ingest, errors = next_ingest, next_errors
+        return out
+
+    # -- checkpointing -------------------------------------------------------
+
+    def state_dict(self) -> tuple[dict[str, Any], dict]:
+        """(arrays, meta) of every tenant session, namespaced by tenant name."""
+        arrays: dict[str, Any] = {}
+        meta: dict = {"tenants": {}}
+        for name, s in self.sessions.items():
+            s_arrays, s_meta = s.state_dict()
+            for k, v in s_arrays.items():
+                arrays[f"{name}/{k}"] = v
+            meta["tenants"][name] = s_meta
+        return arrays, meta
+
+    def load_state(self, arrays: dict[str, Any], meta: dict) -> None:
+        """Rebuild all tenant sessions from `state_dict` output (warm resume)."""
+        self.sessions = {}
+        for name, s_meta in meta["tenants"].items():
+            prefix = f"{name}/"
+            s_arrays = {
+                k[len(prefix):]: v
+                for k, v in arrays.items()
+                if k.startswith(prefix)
+            }
+            self.sessions[name] = SolveSession.from_state(
+                self.config, s_arrays, s_meta
+            )
+
+    def save_checkpoint(self, manager, step: int, *, block: bool = False) -> None:
+        """Persist every session through a `checkpoint.CheckpointManager`.
+
+        Async by default (`block=False`): the state is snapshotted
+        synchronously, the file write happens on the manager's background
+        thread while the next cadence proceeds.
+        """
+        arrays, meta = self.state_dict()
+        manager.save(step, arrays, block=block, meta=meta)
+
+    def restore_checkpoint(self, manager, step: int) -> None:
+        """Rebuild all sessions from a checkpoint; next cadence resumes warm."""
+        arrays, meta = manager.restore_flat(step)
+        self.load_state(arrays, meta)

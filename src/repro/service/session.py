@@ -23,6 +23,12 @@ Drift-SLA: each solve reports the empirical primal drift vs the previous
 cadence together with the analytic bound `(sigma ||dlam|| + ||dc||) / gamma`
 (core.stability), and flags `sla_ok` against the configured relative-drift
 SLA — the run-to-run stability control the paper's ridge term exists for.
+
+Slabs are device-resident across cadences: `device_instance()` keeps a jax
+copy of the host slabs synced by replaying the ingestor's scatter plans
+(generation-fenced), so steady-state host→device transfer is O(delta); and
+`state_dict()`/`from_state()` persist everything needed for a restarted
+service to resume this tenant warm (see docs/service.md).
 """
 from __future__ import annotations
 
@@ -35,9 +41,20 @@ import numpy as np
 
 from repro.core.maximizer import MaximizerConfig, SolveResult
 from repro.core.stability import drift_bound
-from repro.instances.deltas import DeltaIngestor, DeltaReport, InstanceDelta
+from repro.instances.deltas import (
+    DeltaIngestor,
+    DeltaReport,
+    InstanceDelta,
+    ScatterPlan,
+)
 from repro.instances.generator import EdgeListInstance
-from repro.service.engine import compiled_solver, to_solve_result
+from repro.service.engine import (
+    apply_scatter_plan,
+    compiled_solver,
+    device_put_instance,
+    instance_nbytes,
+    to_solve_result,
+)
 
 __all__ = ["ServiceConfig", "SolveSession"]
 
@@ -71,6 +88,7 @@ class ServiceConfig:
 
     @property
     def warm(self) -> MaximizerConfig:
+        """The warm-start solver config: `cold` with the shortened gamma tail."""
         iters = (
             self.cold.iters_per_stage
             if self.warm_iters_per_stage is None
@@ -102,15 +120,79 @@ class SolveSession:
         self.cadence = 0
         self.last_ingest: Optional[DeltaReport] = None
         self.last_report: Optional[dict[str, Any]] = None
+        # Device-resident copy of the packed slabs, kept in sync with the host
+        # ingestor through scatter plans.  `_device_generation` is the
+        # ingestor generation the device copy reflects; `_pending_plans` are
+        # plans ingested but not yet replayed on device.
+        self._device_inst = None
+        self._device_generation = -1
+        self._pending_plans: list[ScatterPlan] = []
+        # What the last device sync transferred: {"mode": "full"|"scatter"|
+        # "none", "bytes": int} — the benchmark's O(delta)-vs-O(nnz) evidence.
+        self.last_transfer: Optional[dict[str, Any]] = None
 
     # -- cadence inputs ------------------------------------------------------
 
     def instance(self):
+        """The host-side packed instance (numpy slabs; the source of truth)."""
         return self.ingestor.instance()
 
+    def device_instance(self):
+        """The device-resident packed instance, synced to the host state.
+
+        First call (and any loss of sync: re-bucketize fallback, or host
+        mutations that bypassed this session) performs the full O(nnz)
+        upload; steady-state calls replay only the pending scatter plans —
+        O(delta) host→device bytes per cadence.  `last_transfer` records
+        which path ran and how many bytes moved.
+        """
+        gen = self.ingestor.generation
+        plans = self._pending_plans
+        in_sync = (
+            self._device_inst is not None
+            and self._device_generation + len(plans) == gen
+            and all(
+                p.generation == self._device_generation + i + 1
+                for i, p in enumerate(plans)
+            )
+        )
+        if not in_sync:
+            self._device_inst = device_put_instance(self.instance())
+            self._device_generation = gen
+            self._pending_plans = []
+            self.last_transfer = {
+                "mode": "full",
+                "bytes": instance_nbytes(self._device_inst),
+            }
+        elif plans:
+            nbytes = 0
+            for plan in plans:
+                self._device_inst = apply_scatter_plan(self._device_inst, plan)
+                self._device_generation = plan.generation
+                nbytes += plan.nbytes
+            self._pending_plans = []
+            self.last_transfer = {"mode": "scatter", "bytes": nbytes}
+        else:
+            self.last_transfer = {"mode": "none", "bytes": 0}
+        return self._device_inst
+
     def ingest(self, delta: InstanceDelta) -> DeltaReport:
+        """Apply one delta to the host slabs and queue its device replay.
+
+        Host application is atomic (`DeltaIngestor.apply`): a rejected delta
+        raises here without mutating the host slabs, queueing a plan, or
+        bumping the generation — so the device copy stays exactly at the last
+        good state and the next solve sees no partial edits.
+        """
         rep = self.ingestor.apply(delta)
         self.last_ingest = rep
+        if rep.plan is not None:
+            self._pending_plans.append(rep.plan)
+        else:
+            # re-bucketize fallback: shapes/placement changed, the device
+            # copy is unsalvageable — force a full re-upload on next access
+            self._device_inst = None
+            self._pending_plans = []
         return rep
 
     # -- solve ---------------------------------------------------------------
@@ -133,9 +215,16 @@ class SolveSession:
         return True, reason, jnp.zeros((dual_dim,), jnp.float32)
 
     def solve(self, *, force_cold: bool = False) -> tuple[SolveResult, dict]:
+        """One warm-started (or guarded-cold) solve of the current instance.
+
+        Solves against the device-resident slabs (`device_instance`), so the
+        per-cadence transfer is the pending scatter plans, not the slabs.
+        """
         cold, reason, lam0 = self._start_state(force_cold)
         cfg = self.config.cold if cold else self.config.warm
-        raw = compiled_solver(cfg, self.config.normalize)(self.instance(), lam0)
+        raw = compiled_solver(cfg, self.config.normalize)(
+            self.device_instance(), lam0
+        )
         res = to_solve_result(raw)
         report = self.absorb(res, cold=cold, cold_reason=reason, batched=False)
         return res, report
@@ -147,11 +236,24 @@ class SolveSession:
         cold: bool,
         cold_reason: Optional[str],
         batched: bool,
+        dc_norm: Optional[float] = None,
+        unpack=None,
     ) -> dict[str, Any]:
-        """Fold a finished solve (own or pool-produced) into session state."""
+        """Fold a finished solve (own or pool-produced) into session state.
+
+        ``dc_norm`` is the cost drift ingested *for* this solve; when None it
+        is drained here (correct for synchronous callers).  ``unpack`` is the
+        primal unpacker frozen when the solve was dispatched; when None the
+        ingestor's current maps are used.  Overlapped drivers must capture
+        both at dispatch time, or the next cadence's in-flight ingest would
+        corrupt this one's drift metering (see `Scheduler._dispatch`).
+        """
         cfg = self.config.cold if cold else self.config.warm
         gamma_floor = cfg.gammas[-1]
-        dc_norm = self.ingestor.drain_cost_drift()
+        if dc_norm is None:
+            dc_norm = self.ingestor.drain_cost_drift()
+        if unpack is None:
+            unpack = self.ingestor.primal_unpacker()
         report: dict[str, Any] = {
             "tenant": self.tenant,
             "cadence": self.cadence,
@@ -164,13 +266,19 @@ class SolveSession:
             "max_violation": float(res.stats[-1].max_violation[-1]),
             "gamma_floor": gamma_floor,
             "dc_norm": dc_norm,
+            "upload_mode": (
+                self.last_transfer["mode"] if self.last_transfer else None
+            ),
+            "upload_bytes": (
+                self.last_transfer["bytes"] if self.last_transfer else None
+            ),
             "drift_l2": None,
             "drift_rel": None,
             "drift_bound": None,
             "sla_rel": self.config.drift_sla_rel,
             "sla_ok": None,
         }
-        keys, x = self.ingestor.unpack_primal(res.x_slabs)
+        keys, x = unpack(res.x_slabs)
         if self.prev_primal is not None:
             drift = _edge_drift(self.prev_primal, (keys, x))
             x_norm = float(np.linalg.norm(x))
@@ -195,6 +303,69 @@ class SolveSession:
         self.cadence += 1
         self.last_report = report
         return report
+
+    # -- checkpointing -------------------------------------------------------
+
+    def state_dict(self) -> tuple[dict[str, np.ndarray], dict]:
+        """(arrays, meta) of everything a restarted service needs to resume warm.
+
+        Covers the duals (`lam_prev`), the edge-space previous primal (drift
+        metering), the full ingestor state (slabs + occupancy + generation +
+        drift accounting) and the continuation position (`cadence`).  The
+        device-resident copy is deliberately NOT saved — it is a cache the
+        restored session rebuilds with one upload on first solve.
+        """
+        arrays, ing_meta = self.ingestor.state_dict()
+        arrays = {f"ingestor.{k}": v for k, v in arrays.items()}
+        meta = {
+            "tenant": self.tenant,
+            "cadence": self.cadence,
+            "ingestor": ing_meta,
+            "has_lam": self.lam_prev is not None,
+            "has_primal": self.prev_primal is not None,
+        }
+        if self.lam_prev is not None:
+            arrays["lam_prev"] = np.asarray(self.lam_prev)
+        if self.prev_primal is not None:
+            arrays["primal_keys"] = self.prev_primal[0].copy()
+            arrays["primal_vals"] = self.prev_primal[1].copy()
+        return arrays, meta
+
+    @classmethod
+    def from_state(
+        cls,
+        config: ServiceConfig,
+        arrays: dict[str, np.ndarray],
+        meta: dict,
+    ) -> "SolveSession":
+        """Rebuild a session from `state_dict` output; next solve starts warm."""
+        self = cls.__new__(cls)
+        self.tenant = meta["tenant"]
+        self.config = config
+        self.ingestor = DeltaIngestor.from_state(
+            {
+                k[len("ingestor."):]: v
+                for k, v in arrays.items()
+                if k.startswith("ingestor.")
+            },
+            meta["ingestor"],
+        )
+        self.lam_prev = (
+            jnp.asarray(arrays["lam_prev"]) if meta["has_lam"] else None
+        )
+        self.prev_primal = (
+            (arrays["primal_keys"].copy(), arrays["primal_vals"].copy())
+            if meta["has_primal"]
+            else None
+        )
+        self.cadence = int(meta["cadence"])
+        self.last_ingest = None
+        self.last_report = None
+        self._device_inst = None
+        self._device_generation = -1
+        self._pending_plans = []
+        self.last_transfer = None
+        return self
 
 
 def _edge_drift(

@@ -229,6 +229,120 @@ def test_cost_drift_accounting():
     assert ing.drain_cost_drift() == 0.0  # drained
 
 
+def _snapshot(packed):
+    return [
+        dict(
+            idx=np.asarray(b.idx).copy(),
+            coeff=np.asarray(b.coeff).copy(),
+            cost=np.asarray(b.cost).copy(),
+            mask=np.asarray(b.mask).copy(),
+        )
+        for b in packed.buckets
+    ], np.asarray(packed.rhs).copy()
+
+
+def test_scatter_plan_replays_bit_for_bit_on_device():
+    """Device .at[].set replay of the plan == mutated host slabs, exactly."""
+    from repro.service import apply_scatter_plan, device_put_instance
+
+    rng = np.random.default_rng(29)
+    ing = DeltaIngestor(_instance(seed=29), row_headroom=6)
+    dev = device_put_instance(ing.instance())
+    ref = ing.to_edge_list()
+    for day in range(4):
+        delta = _random_delta(ref, rng, n_upd=8, n_del=3, n_ins=3)
+        rep = ing.apply(delta)
+        ref = apply_delta_to_edge_list(ref, delta)
+        if rep.plan is None:  # fallback: consumers must re-upload
+            assert rep.rebucketized
+            dev = device_put_instance(ing.instance())
+            continue
+        assert rep.plan.generation == ing.generation
+        dev = apply_scatter_plan(dev, rep.plan)
+        host = ing.instance()
+        for db, hb in zip(dev.buckets, host.buckets):
+            np.testing.assert_array_equal(np.asarray(db.idx), hb.idx)
+            np.testing.assert_array_equal(np.asarray(db.cost), hb.cost)
+            np.testing.assert_array_equal(np.asarray(db.mask), hb.mask)
+            np.testing.assert_array_equal(np.asarray(db.coeff), hb.coeff)
+        np.testing.assert_array_equal(np.asarray(dev.rhs), np.asarray(host.rhs))
+
+
+def test_scatter_plan_matches_host_apply_on_numpy_copy():
+    """Replaying the plan on a pre-delta numpy snapshot == host apply, bitwise."""
+    rng = np.random.default_rng(31)
+    base = _instance(seed=31)
+    ing = DeltaIngestor(base, row_headroom=6)
+    pre, pre_rhs = _snapshot(ing.instance())
+    rep = ing.apply(_random_delta(base, rng))
+    assert rep.in_place and rep.plan is not None
+    assert rep.plan.num_cells > 0
+    for op in rep.plan.ops:
+        p = pre[op.bucket]
+        p["idx"][op.rows, op.slots] = op.idx
+        p["cost"][op.rows, op.slots] = op.cost
+        p["mask"][op.rows, op.slots] = op.mask
+        p["coeff"][:, op.rows, op.slots] = op.coeff
+    if rep.plan.rhs is not None:
+        pre_rhs = rep.plan.rhs
+    for t, b in enumerate(ing.instance().buckets):
+        for k in ("idx", "coeff", "cost", "mask"):
+            np.testing.assert_array_equal(pre[t][k], getattr(b, k))
+    np.testing.assert_array_equal(pre_rhs, np.asarray(ing.instance().rhs))
+
+
+def test_generation_counter_and_plan_bytes():
+    rng = np.random.default_rng(37)
+    base = _instance(seed=37, m=1)
+    ing = DeltaIngestor(base, row_headroom=4)
+    assert ing.generation == 0
+    rep1 = ing.apply(_random_delta(base, rng, n_upd=3, n_del=0, n_ins=0, rhs=False))
+    assert (rep1.generation, ing.generation) == (1, 1)
+    assert rep1.plan.generation == 1
+    # an O(delta) plan must be far smaller than the O(nnz) slabs
+    slab_bytes = sum(
+        b.idx.nbytes + b.coeff.nbytes + b.cost.nbytes + b.mask.nbytes
+        for b in ing.instance().buckets
+    )
+    assert rep1.plan.nbytes < slab_bytes / 10
+    # rejected deltas bump nothing
+    s = int(base.src[0])
+    have = set(base.dst[base.src == s].tolist())
+    missing_d = next(
+        x for x in range(base.spec.num_destinations) if x not in have
+    )
+    with pytest.raises(KeyError):
+        ing.apply(InstanceDelta(delete_src=[s], delete_dst=[missing_d]))
+    assert ing.generation == 1
+
+
+def test_ingestor_state_roundtrip_bit_for_bit():
+    """from_state(state_dict()) reproduces slabs, maps, headroom and plans."""
+    rng = np.random.default_rng(41)
+    base = _instance(seed=41)
+    ing = DeltaIngestor(base, row_headroom=4)
+    ing.apply(_random_delta(base, rng))
+    arrays, meta = ing.state_dict()
+    back = DeltaIngestor.from_state(arrays, meta)
+    assert back.generation == ing.generation
+    assert back.headroom() == ing.headroom()
+    assert back._free_rows == ing._free_rows
+    for a, b in zip(ing.instance().buckets, back.instance().buckets):
+        for k in ("idx", "coeff", "cost", "mask"):
+            np.testing.assert_array_equal(getattr(a, k), getattr(b, k))
+    # identical future behaviour: same delta -> identical scatter plan
+    nxt = _random_delta(ing.to_edge_list(), rng, n_upd=5, n_del=2, n_ins=2)
+    ra, rb = ing.apply(nxt), back.apply(nxt)
+    assert ra.in_place == rb.in_place
+    if ra.plan is not None:
+        assert rb.plan is not None
+        for oa, ob in zip(ra.plan.ops, rb.plan.ops):
+            assert oa.bucket == ob.bucket
+            np.testing.assert_array_equal(oa.rows, ob.rows)
+            np.testing.assert_array_equal(oa.slots, ob.slots)
+            np.testing.assert_array_equal(oa.cost, ob.cost)
+
+
 def test_unpack_primal_edge_keys():
     base = _instance(seed=19, m=1)
     ing = DeltaIngestor(base, row_headroom=2)

@@ -198,3 +198,166 @@ def test_scheduler_batches_and_reports():
         r["iters_used"] < SERVICE.cold.total_iter_budget
         for r in out.reports.values()
     )
+
+
+# -- device residency ---------------------------------------------------------
+
+
+def test_device_resident_transfer_is_o_delta():
+    """First solve uploads O(nnz); delta cadences upload only the plan bytes."""
+    rng = np.random.default_rng(17)
+    sess = SolveSession("t0", BASE, SERVICE)
+    _, rep0 = sess.solve()
+    assert rep0["upload_mode"] == "full"
+    sess.ingest(_perturb_delta(BASE, rng, frac=0.05))
+    _, rep1 = sess.solve()
+    assert rep1["upload_mode"] == "scatter"
+    assert rep1["upload_bytes"] < rep0["upload_bytes"] / 5
+    # no delta -> no transfer at all
+    _, rep2 = sess.solve()
+    assert rep2["upload_mode"] == "none" and rep2["upload_bytes"] == 0
+
+
+def test_device_copy_resyncs_after_external_mutation():
+    """Host mutations that bypass the session force a full re-upload, not stale reuse."""
+    rng = np.random.default_rng(19)
+    sess = SolveSession("t0", BASE, SERVICE)
+    sess.solve()
+    # mutate the host ingestor directly (no plan queued on the session)
+    sess.ingestor.apply(_perturb_delta(BASE, rng))
+    dev = sess.device_instance()
+    assert sess.last_transfer["mode"] == "full"
+    host = sess.instance()
+    for db, hb in zip(dev.buckets, host.buckets):
+        np.testing.assert_array_equal(np.asarray(db.cost), hb.cost)
+
+
+# -- pipelined cadences -------------------------------------------------------
+
+
+def _fresh_sched(n=4):
+    sched = Scheduler(SERVICE)
+    for t in range(n):
+        sched.add_tenant(f"t{t}", BASE)
+    return sched
+
+
+def _cadence_deltas(n_tenants=4, cadences=2, seed=43, frac=0.1):
+    # update-only deltas against the shared BASE topology: applying the same
+    # dicts to two schedulers leaves both in identical states
+    out = [None]
+    for c in range(cadences):
+        rng = np.random.default_rng(seed + c)
+        out.append(
+            {f"t{t}": _perturb_delta(BASE, rng, frac) for t in range(n_tenants)}
+        )
+    return out
+
+
+def test_pipeline_matches_sequential_cadences():
+    """Double-buffered run_pipeline == run_cadence loop, report for report."""
+    deltas = _cadence_deltas()
+    outs_p = _fresh_sched().run_pipeline(deltas)
+    sched_s = _fresh_sched()
+    outs_s = [sched_s.run_cadence(d) for d in deltas]
+    assert len(outs_p) == len(outs_s) == 3
+    assert outs_p[1].overlapped and outs_p[2].overlapped
+    for op, os_ in zip(outs_p, outs_s):
+        assert not op.ingest_errors
+        assert sorted(sum(op.batched_groups, [])) == sorted(
+            sum(os_.batched_groups, [])
+        )
+        for name in op.reports:
+            assert op.reports[name]["g"] == os_.reports[name]["g"]
+            assert op.reports[name]["mode"] == os_.reports[name]["mode"]
+            assert (
+                op.reports[name]["iters_used"]
+                == os_.reports[name]["iters_used"]
+            )
+            # drift accounting must not leak across the overlap: the cost
+            # drift ingested for cadence t+1 belongs to t+1's report
+            assert op.reports[name]["dc_norm"] == os_.reports[name]["dc_norm"]
+            assert (
+                op.reports[name]["drift_bound"]
+                == os_.reports[name]["drift_bound"]
+            )
+
+
+def _structural_delta(seed, n=3):
+    """Inserts + deletes against the BASE topology (moves slab rows)."""
+    J = BASE.spec.num_destinations
+    r = np.random.default_rng(seed)
+    dele = r.permutation(BASE.nnz)[:n]
+    existing = set((BASE.src * J + BASE.dst).tolist())
+    ins_s, ins_d = [], []
+    while len(ins_s) < n:
+        s, d = int(r.integers(BASE.spec.num_sources)), int(r.integers(J))
+        if s * J + d not in existing:
+            existing.add(s * J + d)
+            ins_s.append(s)
+            ins_d.append(d)
+    return InstanceDelta(
+        insert_src=ins_s,
+        insert_dst=ins_d,
+        insert_values=r.uniform(0.1, 2.0, n),
+        insert_coeff=r.uniform(0.1, 2.0, (1, n)),
+        delete_src=BASE.src[dele],
+        delete_dst=BASE.dst[dele],
+    )
+
+
+def test_pipeline_structural_overlap_drift_parity():
+    """Overlapped ingest of row-moving deltas must not corrupt drift metering.
+
+    Cadence 2's inserts/deletes mutate the occupancy maps WHILE cadence 1's
+    results are still in flight; cadence 1's drift must be metered with the
+    maps its solve was dispatched under, identical to the sequential driver.
+    """
+    deltas = [
+        None,
+        _cadence_deltas(cadences=1, seed=61)[1],
+        {f"t{t}": _structural_delta(73 + t) for t in range(4)},
+    ]
+    outs_p = _fresh_sched().run_pipeline(deltas)
+    sched_s = _fresh_sched()
+    outs_s = [sched_s.run_cadence(d) for d in deltas]
+    for op, os_ in zip(outs_p, outs_s):
+        assert not op.ingest_errors
+        for name in op.reports:
+            for k in ("g", "dc_norm", "drift_l2", "drift_rel", "drift_bound"):
+                assert op.reports[name][k] == os_.reports[name][k], (name, k)
+
+
+def test_rejected_delta_mid_overlap_leaks_nothing():
+    """A delta rejected during the overlap leaves zero partial state behind.
+
+    The poisoned tenant must solve cadence 1 on its UNCHANGED instance —
+    identical (bitwise) to a run that never submitted the bad delta — while
+    healthy tenants' deltas still apply.
+    """
+    J = BASE.spec.num_destinations
+    s0 = int(BASE.src[0])
+    missing = next(
+        d for d in range(J) if d not in set(BASE.dst[BASE.src == s0].tolist())
+    )
+    # valid updates for t1..t3 + a delete of a nonexistent edge for t0,
+    # sequenced AFTER a valid delete so partial application would be visible
+    good = _cadence_deltas(seed=47)[1]
+    bad = InstanceDelta(
+        delete_src=[int(BASE.src[1]), s0],
+        delete_dst=[int(BASE.dst[1]), missing],
+    )
+    deltas = [None, {**good, "t0": bad}]
+    sched = _fresh_sched()
+    outs = sched.run_pipeline(deltas)
+    assert "t0" in outs[1].ingest_errors
+    assert "not present" in outs[1].ingest_errors["t0"]
+    assert sched.sessions["t0"].ingestor.generation == 0  # nothing applied
+    # reference: same run with t0 simply submitting no delta
+    ref = _fresh_sched()
+    ref_outs = ref.run_pipeline([None, {k: v for k, v in good.items() if k != "t0"}])
+    assert outs[1].reports["t0"]["g"] == ref_outs[1].reports["t0"]["g"]
+    # healthy tenants were not blocked by t0's rejection
+    for t in ("t1", "t2", "t3"):
+        assert t in outs[1].ingest
+        assert outs[1].reports[t]["g"] == ref_outs[1].reports[t]["g"]

@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Dead-link checker for the docs site and README.
+
+Scans markdown files for relative links (`[text](target)`) and verifies each
+target exists in the repo.  Anchors (`#section`) are checked against the
+target file's headings (GitHub slug rules, simplified).  External links
+(http/https/mailto) are ignored — CI must not depend on the network.
+
+Usage: python tools/check_links.py README.md docs/*.md
+Exits non-zero listing every dead link.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug (lowercase, spaces->dashes, drop punctuation)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    return {slugify(h) for h in HEADING.findall(path.read_text())}
+
+
+def check(files: list[str]) -> list[str]:
+    errors = []
+    for name in files:
+        src = Path(name)
+        text = src.read_text()
+        for target in LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = (
+                src if not path_part else (src.parent / path_part).resolve()
+            )
+            if not dest.exists():
+                errors.append(f"{name}: dead link -> {target}")
+                continue
+            if anchor and dest.suffix == ".md" and slugify(anchor) not in anchors_of(dest):
+                errors.append(f"{name}: dead anchor -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = argv or ["README.md"]
+    errors = check(files)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} file(s): {len(errors)} dead link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
