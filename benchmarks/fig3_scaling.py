@@ -23,6 +23,7 @@ import os, sys, json, time
 n = int(sys.argv[1])
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.core import DistributedMaximizer, DistConfig, MaximizerConfig
 from repro.instances import MatchingInstanceSpec, generate_matching_instance, bucketize
 from repro.core import normalize_rows
@@ -31,14 +32,14 @@ spec = MatchingInstanceSpec(num_sources=200_000, num_destinations=1000,
                             avg_degree=8.0, seed=0)
 packed = bucketize(generate_matching_instance(spec), shard_multiple=n)
 scaled, _ = normalize_rows(packed)
-mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((n,), ("data",))
 iters = 50
 dm = DistributedMaximizer(scaled, mesh, MaximizerConfig(iters_per_stage=iters),
                           DistConfig(axes="data"))
 dm.place()
 lam = jnp.zeros((scaled.dual_dim,), jnp.float32)
 g = jnp.float32(1.0); eta = jnp.float32(1e-2)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     out = dm._stage_fn(lam, g, eta, dm.inst); jax.block_until_ready(out[0])
     t0 = time.perf_counter()
     for _ in range(3):

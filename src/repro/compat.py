@@ -1,0 +1,108 @@
+"""Version-compat shims for jax mesh APIs.
+
+The distributed layer targets the modern mesh surface — ``jax.make_mesh(...,
+axis_types=...)`` plus the ``jax.set_mesh`` context — but the pinned jax in
+this environment predates both ``jax.sharding.AxisType`` and ``jax.set_mesh``
+(and some older versions predate ``jax.make_mesh`` entirely).  Everything in
+the repo that constructs or activates a mesh goes through this module, so the
+same solver, launch and test code runs on either API generation:
+
+  * `make_mesh(shape, names, devices=..., axis_types=...)` — forwards
+    ``axis_types`` only when the running jax understands it; falls back to
+    building a `jax.sharding.Mesh` directly when `jax.make_mesh` is absent.
+  * `set_mesh(mesh)` — context manager resolving to ``jax.set_mesh`` when
+    available, else ``jax.sharding.use_mesh``, else the legacy ``with mesh:``
+    physical-mesh context (sufficient here: every `shard_map`/`jit` call in
+    the solver passes its mesh explicitly, so the context only needs to keep
+    older jax's resource-env machinery happy).
+  * `default_axis_types(n)` — ``(AxisType.Auto,) * n`` or None when the enum
+    does not exist.
+
+This is what lets the `slow`-marked distributed/elastic suites run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on the pinned jax
+instead of being dead code (ROADMAP: "Version-compat for subprocess
+distributed tests").
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = [
+    "HAS_AXIS_TYPE",
+    "HAS_SET_MESH",
+    "axis_size",
+    "default_axis_types",
+    "make_mesh",
+    "set_mesh",
+]
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+HAS_SET_MESH = hasattr(jax, "set_mesh")
+
+# Sentinel: "give me whatever the running jax considers a plain data-parallel
+# mesh" (AxisType.Auto everywhere when the enum exists, nothing otherwise).
+_AUTO = "auto"
+
+
+def axis_size(name: str):
+    """`jax.lax.axis_size` with a psum(1) fallback for jax versions without it.
+
+    Inside `shard_map`/`pmap` tracing, ``psum(1, name)`` constant-folds to the
+    named axis's size, so the fallback costs no runtime collective.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def default_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` on modern jax, None on versions without it."""
+    if HAS_AXIS_TYPE:
+        return (jax.sharding.AxisType.Auto,) * n
+    return None
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices: Optional[Sequence] = None,
+    axis_types=_AUTO,
+):
+    """`jax.make_mesh` that tolerates jax versions without ``axis_types``."""
+    axis_shapes = tuple(int(s) for s in axis_shapes)
+    axis_names = tuple(axis_names)
+    if axis_types is _AUTO:
+        axis_types = default_axis_types(len(axis_names))
+    if hasattr(jax, "make_mesh"):
+        if axis_types is not None and HAS_AXIS_TYPE:
+            try:
+                return jax.make_mesh(
+                    axis_shapes, axis_names,
+                    devices=devices, axis_types=axis_types,
+                )
+            except TypeError:  # make_mesh exists but predates axis_types
+                pass
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+    devs = list(devices) if devices is not None else jax.devices()
+    n = int(np.prod(axis_shapes))
+    return Mesh(np.asarray(devs[:n]).reshape(axis_shapes), axis_names)
+
+
+@contextmanager
+def set_mesh(mesh: Mesh):
+    """``with set_mesh(mesh):`` — the newest mesh-context API available."""
+    if HAS_SET_MESH:
+        with jax.set_mesh(mesh):
+            yield mesh
+    elif hasattr(jax.sharding, "use_mesh"):
+        with jax.sharding.use_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:  # legacy physical-mesh context manager
+            yield mesh

@@ -210,6 +210,7 @@ def _stage_scan_early(
     tol_viol: Optional[float],
     check_every: int,
     comm0: object = None,
+    stop_reduce: Optional[Callable] = None,
 ) -> tuple[jax.Array, StageStats, object, jax.Array]:
     """Early-stopping variant of `_stage_scan` (recurring-solve service).
 
@@ -218,6 +219,14 @@ def _stage_scan_early(
     ``||grad|| <= tol_grad * max(1, |g|)  and  max(0, Ax-b) <= tol_viol``
     is evaluated and the loop exits once met.  Warm-started solves therefore
     pay only as many iterations as they need instead of the full fixed budget.
+
+    `stop_reduce` makes the stop decision *collective*: it maps the local
+    boolean convergence predicate to the global one (e.g. a psum-based
+    all-shards-agree reduction inside `shard_map` — see
+    `repro.core.sharding`).  It must return the same value on every
+    participant, otherwise shards exit the while_loop at different trip
+    counts and the collectives inside the body deadlock.  None (default)
+    keeps the local predicate — correct for single-device and vmapped use.
 
     Returns `(lam, stats, comm, iters_used)`.  Stats traces are preallocated at
     the padded budget; entries past `iters_used` are backfilled with the last
@@ -261,6 +270,8 @@ def _stage_scan_early(
             done = jnp.logical_and(done, gns[-1] <= tol_grad * scale)
         if tol_viol is not None:
             done = jnp.logical_and(done, viols[-1] <= tol_viol)
+        if stop_reduce is not None:
+            done = stop_reduce(done)
         return carry, k + 1, done, (bg, bgn, bv)
 
     final, k, _, (bg, bgn, bv) = jax.lax.while_loop(cond, step, state0)

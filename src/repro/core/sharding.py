@@ -36,11 +36,13 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro import compat
 from repro.core.maximizer import (
     MaximizerConfig,
     SolveResult,
     StageStats,
     _stage_scan,
+    _stage_scan_early,
     step_size,
 )
 from repro.core.objective import DualEval, MatchingObjective
@@ -157,7 +159,7 @@ def _make_calculate(local_obj: MatchingObjective, dist: DistConfig, rhs):
 def _linear_rank(axes: tuple[str, ...]) -> jax.Array:
     rank = jnp.int32(0)
     for a in axes:
-        rank = rank * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        rank = rank * compat.axis_size(a) + jax.lax.axis_index(a)
     return rank
 
 
@@ -165,9 +167,14 @@ class DistributedMaximizer:
     """Maximizer over a column-sharded instance (paper §4.4).
 
     The continuation driver and AGD stage logic are *shared* with the
-    single-device Maximizer (`_stage_scan`); this class contributes only the
-    sharded `calculate` and the shard_map plumbing — the paper's §5 claim that
-    distribution is invisible to the formulation.
+    single-device Maximizer (`_stage_scan` / `_stage_scan_early`); this class
+    contributes only the sharded `calculate`, the shard_map plumbing, and —
+    when `config.tol_grad`/`tol_viol` are set — a psum'd convergence
+    predicate so the chunked early-stop stage variant can run collectively:
+    every shard votes on the stop decision and the stage exits only on a
+    unanimous vote, keeping all shards at the same while_loop trip count.
+    Up to the stop iteration the trajectory is bit-for-bit the fixed-budget
+    one (same AGD body, same chunked scan).
     """
 
     def __init__(
@@ -178,12 +185,6 @@ class DistributedMaximizer:
         dist: DistConfig = DistConfig(),
         projection: Optional[ProjectionMap] = None,
     ):
-        if config.early_stop:
-            raise NotImplementedError(
-                "DistributedMaximizer runs fixed-budget stages; early stopping "
-                "(tol_grad/tol_viol) needs a psum'd convergence predicate — "
-                "see ROADMAP.  Use tol_grad=None, tol_viol=None here."
-            )
         self.mesh = mesh
         self.config = config
         self.dist = dist
@@ -206,6 +207,19 @@ class DistributedMaximizer:
 
         # ---- stage function (jit once; gamma/eta are traced scalars) -------
         slab_specs = tuple(P(axes, None) for _ in inst.buckets)
+        n_shards = num_shards(mesh, dist)
+
+        def psum_all_converged(done):
+            """Collective stop predicate: every shard must vote converged.
+
+            The per-shard predicate is computed from the psum'd global
+            gradient, so the votes agree mathematically; reducing them with
+            one more psum makes the agreement *structural* — the while_loop
+            trip count is identical on every shard by construction, which is
+            what keeps the collectives inside the loop body from deadlocking.
+            """
+            votes = jax.lax.psum(done.astype(jnp.int32), axes)
+            return votes == n_shards
 
         @partial(
             shard_map,
@@ -222,6 +236,22 @@ class DistributedMaximizer:
                 if dist.compress == "bf16_ef"
                 else None
             )
+            if cfg.early_stop:
+                lam, stats, _, iters_used = _stage_scan_early(
+                    calculate,
+                    lam0,
+                    gamma,
+                    eta,
+                    cfg.iters_per_stage,
+                    acceleration=cfg.acceleration,
+                    adaptive_restart=cfg.adaptive_restart,
+                    tol_grad=cfg.tol_grad,
+                    tol_viol=cfg.tol_viol,
+                    check_every=cfg.check_every,
+                    comm0=comm0,
+                    stop_reduce=psum_all_converged,
+                )
+                return lam, stats, iters_used
             lam, stats, _ = _stage_scan(
                 calculate,
                 lam0,
@@ -232,7 +262,7 @@ class DistributedMaximizer:
                 adaptive_restart=cfg.adaptive_restart,
                 comm0=comm0,
             )
-            return lam, stats, gamma
+            return lam, stats, jnp.asarray(cfg.iters_per_stage, jnp.int32)
 
         self._stage_fn = jax.jit(stage_fn)
 
@@ -283,22 +313,29 @@ class DistributedMaximizer:
         dual_dim = self.inst.dual_dim
         lam = jnp.zeros((dual_dim,), jnp.float32) if lam0 is None else lam0
         u0 = jax.random.normal(jax.random.key(cfg.seed), (dual_dim,), jnp.float32)
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             sigma_sq = self._power_fn(u0, self.inst)
-            stats, steps = [], []
+            stats, steps, used_stages = [], [], []
             for gamma in cfg.gammas:
                 eta = step_size(cfg, sigma_sq, gamma)
-                lam, st, _ = self._stage_fn(
+                lam, st, used = self._stage_fn(
                     lam, jnp.float32(gamma), eta.astype(jnp.float32), self.inst
                 )
                 stats.append(st)
                 steps.append(float(eta))
+                used_stages.append(used)
             x_slabs, g = self._final_fn(
                 lam, jnp.float32(cfg.gammas[-1]), self.inst
             )
+        # host-convert the per-stage counts only after every stage has been
+        # dispatched — int() blocks on the stage's device result, and the
+        # fixed-budget path should keep its dispatch pipelining
         return SolveResult(
             lam=lam, x_slabs=x_slabs, g=g, stats=tuple(stats),
             sigma_sq=sigma_sq, steps=tuple(steps),
+            iters_used=(
+                tuple(int(u) for u in used_stages) if cfg.early_stop else None
+            ),
         )
 
     # -- dry-run hooks (launch/dryrun.py) ------------------------------------
@@ -308,5 +345,5 @@ class DistributedMaximizer:
         sds = self.inst.shape_dtype_structs()
         lam = jax.ShapeDtypeStruct((self.inst.dual_dim,), jnp.float32)
         scalar = jax.ShapeDtypeStruct((), jnp.float32)
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             return self._stage_fn.lower(lam, scalar, scalar, sds)

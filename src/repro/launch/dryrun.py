@@ -137,7 +137,9 @@ def run_arch_cell(arch: str, shape_name: str, mesh_name: str,
 def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
                     compress="none", iters: int = 100,
                     slab_dtype: str = "float32",
-                    fused_kernel: bool = False) -> dict:
+                    fused_kernel: bool = False,
+                    tol_grad: Optional[float] = None,
+                    tol_viol: Optional[float] = None) -> dict:
     from repro.analysis.hlo_stats import collective_stats
     from repro.configs import LP_INSTANCES
     from repro.core.maximizer import MaximizerConfig
@@ -154,9 +156,13 @@ def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
         spec["avg_degree"], shard_multiple=n_shards,
         dtype=jnp.dtype(slab_dtype),
     )
+    # tol_grad/tol_viol lower the early-stop (psum'd-predicate while_loop)
+    # stage variant instead of the fixed-budget scan — same coherence proof,
+    # different collective program.
     dm = DistributedMaximizer(
         inst, mesh,
-        MaximizerConfig(iters_per_stage=iters),
+        MaximizerConfig(iters_per_stage=iters, tol_grad=tol_grad,
+                        tol_viol=tol_viol),
         DistConfig(axes=axes, comm_mode=comm_mode, compress=compress,
                    fused_kernel=fused_kernel, kernel_interpret=True),
     )
@@ -303,6 +309,8 @@ def main(argv: Optional[list[str]] = None) -> int:
     ap.add_argument("--kv-dtype", default="")
     ap.add_argument("--slab-dtype", default="float32")
     ap.add_argument("--fused-kernel", action="store_true")
+    ap.add_argument("--tol-grad", type=float, default=None)
+    ap.add_argument("--tol-viol", type=float, default=None)
     ap.add_argument("--tag", default="", help="suffix for the output json")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--all", action="store_true")
@@ -319,10 +327,14 @@ def main(argv: Optional[list[str]] = None) -> int:
                                   comm_mode=args.comm_mode,
                                   compress=args.compress,
                                   slab_dtype=args.slab_dtype,
-                                  fused_kernel=args.fused_kernel)
+                                  fused_kernel=args.fused_kernel,
+                                  tol_grad=args.tol_grad,
+                                  tol_viol=args.tol_viol)
             tag = f"solver-{args.solver}__{args.mesh}"
             if args.comm_mode != "psum" or args.compress != "none":
                 tag += f"__{args.comm_mode}-{args.compress}"
+            if args.tol_grad is not None or args.tol_viol is not None:
+                tag += "__earlystop"
             if args.tag:
                 tag += "__" + args.tag
         else:

@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro import compat
 from repro.models.config import ModelConfig, ShardingProfile
 
 __all__ = [
@@ -26,15 +27,13 @@ __all__ = [
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(n: int | None = None, axis: str = "data"):
     """Small CPU mesh over however many host devices exist (tests/benchmarks)."""
     n = n or len(jax.devices())
-    return jax.make_mesh((n,), (axis,), axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((n,), (axis,))
 
 
 def default_profile(cfg: ModelConfig, mesh) -> ShardingProfile:

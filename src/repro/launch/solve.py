@@ -21,12 +21,17 @@ def main() -> int:
     ap.add_argument("--comm-mode", default="psum", choices=["psum", "rank0"])
     ap.add_argument("--compress", default="none", choices=["none", "bf16", "bf16_ef"])
     ap.add_argument("--fused-kernel", action="store_true")
+    ap.add_argument("--tol-grad", type=float, default=None,
+                    help="relative gradient-norm tolerance (enables early stop)")
+    ap.add_argument("--tol-viol", type=float, default=None,
+                    help="max-violation tolerance (enables early stop)")
     args = ap.parse_args()
 
     import jax
     import jax.numpy as jnp
     import numpy as np
 
+    from repro import compat
     from repro.core import (
         DistConfig, DistributedMaximizer, Maximizer, MaximizerConfig,
         MatchingObjective, normalize_rows,
@@ -47,11 +52,11 @@ def main() -> int:
     scaled, _ = normalize_rows(packed)
     print(f"generated {inst.nnz} nnz in {time.time() - t0:.1f}s; shards={n}")
 
-    cfg = MaximizerConfig(iters_per_stage=args.iters_per_stage)
+    cfg = MaximizerConfig(iters_per_stage=args.iters_per_stage,
+                          tol_grad=args.tol_grad, tol_viol=args.tol_viol)
     t0 = time.time()
     if n > 1:
-        mesh = jax.make_mesh((n,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((n,), ("data",))
         dm = DistributedMaximizer(
             scaled, mesh, cfg,
             DistConfig(axes="data", comm_mode=args.comm_mode,
@@ -63,9 +68,11 @@ def main() -> int:
         obj = MatchingObjective(scaled, fused_kernel=args.fused_kernel)
         res = Maximizer(obj, cfg).solve()
     dt = time.time() - t0
-    total_iters = cfg.iters_per_stage * len(cfg.gammas)
+    total_iters = res.total_iters_used or cfg.total_iters
     x = unpack_primal(packed, [np.asarray(s) for s in res.x_slabs])
-    print(f"solved in {dt:.1f}s ({dt / total_iters * 1e3:.2f} ms/iter)")
+    budget = cfg.total_iter_budget if cfg.early_stop else cfg.total_iters
+    print(f"solved in {dt:.1f}s ({dt / max(total_iters, 1) * 1e3:.2f} ms/iter, "
+          f"{total_iters}/{budget} iters)")
     print(f"g = {float(res.g):.6f}  value = {-float(np.dot(inst.cost, x)):.4f}  "
           f"viol = {float(res.stats[-1].max_violation[-1]):.3e}")
     return 0

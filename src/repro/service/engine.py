@@ -105,6 +105,10 @@ def _raw_solve(
         eta = step_size(cfg, sigma_sq, gamma).astype(lam.dtype)
         gamma_t = jnp.asarray(gamma, lam.dtype)
         if cfg.early_stop:
+            # stop_reduce=None: the service engine is single-shard (or
+            # vmapped, where the batch runs lockstep anyway), so the local
+            # convergence predicate IS the global one.  The distributed path
+            # (core.sharding) passes a psum'd all-shards-agree reduction here.
             lam, st, _, used = _stage_scan_early(
                 calc, lam, gamma_t, eta, cfg.iters_per_stage,
                 acceleration=cfg.acceleration,
@@ -112,6 +116,7 @@ def _raw_solve(
                 tol_grad=cfg.tol_grad,
                 tol_viol=cfg.tol_viol,
                 check_every=cfg.check_every,
+                stop_reduce=None,
             )
         else:
             lam, st, _ = _stage_scan(

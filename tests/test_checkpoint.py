@@ -96,15 +96,15 @@ def test_elastic_reshard_subprocess(tmp_path):
     script = f"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import make_mesh
 from repro.checkpoint.manager import CheckpointManager
 
-mesh4 = jax.make_mesh((4,), ("d",), axis_types=(jax.sharding.AxisType.Auto,),
-                      devices=jax.devices()[:4])
+mesh4 = make_mesh((4,), ("d",), devices=jax.devices()[:4])
 x = jnp.arange(32.0).reshape(8, 4)
 xs = jax.device_put(x, NamedSharding(mesh4, P("d", None)))
 mgr = CheckpointManager(r"{tmp_path}", async_write=False)
 mgr.save(1, {{"x": xs}})
-mesh8 = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh8 = make_mesh((8,), ("d",))
 tpl = {{"x": jax.ShapeDtypeStruct((8, 4), jnp.float32)}}
 back = mgr.restore(1, tpl, shardings={{"x": NamedSharding(mesh8, P("d", None))}})
 assert len(back["x"].sharding.device_set) == 8

@@ -1,5 +1,10 @@
 """Distributed column-sharded execution (paper §4.4, B.1 parity) — subprocess
-tests with 8 forced host devices."""
+tests with 8 forced host devices.
+
+All mesh construction goes through `repro.compat` (make_mesh/set_mesh shims),
+so this suite runs on the pinned jax even though it predates
+`jax.sharding.AxisType` / `jax.set_mesh`.
+"""
 import json
 
 import pytest
@@ -10,6 +15,7 @@ pytestmark = pytest.mark.slow
 
 PARITY = r"""
 import jax, jax.numpy as jnp, numpy as np, json
+from repro.compat import make_mesh
 from repro.instances import MatchingInstanceSpec, generate_matching_instance, bucketize
 from repro.core import (MatchingObjective, normalize_rows, Maximizer, MaximizerConfig,
                         DistributedMaximizer, DistConfig)
@@ -20,7 +26,7 @@ packed = bucketize(generate_matching_instance(spec), shard_multiple=8)
 scaled, _ = normalize_rows(packed)
 cfg = MaximizerConfig(iters_per_stage=80)
 ref = Maximizer(MatchingObjective(scaled), cfg).solve()
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 out = {}
 for mode, compress in [("psum", "none"), ("rank0", "none"), ("psum", "bf16_ef")]:
     dm = DistributedMaximizer(scaled, mesh, cfg,
@@ -45,8 +51,67 @@ def test_sharded_parity_modes():
     assert res["psum-bf16_ef"] < 0.1
 
 
+EARLY_STOP_PARITY = r"""
+import jax, jax.numpy as jnp, numpy as np, json
+from repro.compat import make_mesh
+from repro.instances import MatchingInstanceSpec, generate_matching_instance, bucketize
+from repro.core import (MatchingObjective, normalize_rows, Maximizer, MaximizerConfig,
+                        DistributedMaximizer, DistConfig)
+
+spec = MatchingInstanceSpec(num_sources=200, num_destinations=16, avg_degree=4.0,
+                            num_families=2, seed=3)
+packed = bucketize(generate_matching_instance(spec), shard_multiple=8)
+scaled, _ = normalize_rows(packed)
+# tol_viol drives the stop (the raw ||grad|| plateaus on inactive duals);
+# adaptive restart is off so the trajectory has no fp-noise-triggered
+# momentum-reset branches — the stop decision must then be identical on
+# every mesh, which is exactly what the psum'd predicate guarantees.
+cfg = MaximizerConfig(gammas=(10.0, 1.0), iters_per_stage=600,
+                      adaptive_restart=False,
+                      tol_viol=1e-5, check_every=50)
+ref = Maximizer(MatchingObjective(scaled), cfg).solve()
+lref = np.asarray(ref.lam)
+out = {"budget": cfg.total_iter_budget,
+       "single": {"iters": list(ref.iters_used), "total": ref.total_iters_used}}
+for n in (1, 2, 8):
+    mesh = make_mesh((n,), ("data",), devices=jax.devices()[:n])
+    dm = DistributedMaximizer(scaled, mesh, cfg, DistConfig(axes="data"))
+    dm.place()
+    res = dm.solve()
+    ld = np.asarray(res.lam)
+    out[str(n)] = {
+        "iters": list(res.iters_used),
+        "total": res.total_iters_used,
+        "lam_rel_l2": float(np.linalg.norm(ld - lref) / np.linalg.norm(lref)),
+    }
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def test_early_stop_parity_across_meshes():
+    """Tentpole: early-stopped DistributedMaximizer matches the single-device
+    Maximizer, and the psum'd stop decision is shard-count independent."""
+    out = run_with_devices(EARLY_STOP_PARITY, 8)
+    res = json.loads(out.split("RESULT:")[1])
+    # the collective predicate actually fired: fewer iters than the budget
+    assert res["single"]["total"] < res["budget"], res
+    for n in ("1", "2", "8"):
+        # No shard-dependent stop decisions: per-stage counts identical.
+        # Within one mesh this is structural (the psum'd vote); across mesh
+        # sizes it additionally relies on the test instance's decisive
+        # threshold crossings — viol drops ~a decade per chunk here, while
+        # cross-mesh reduction-order noise is ~1e-7 relative, so a
+        # checkpoint can't land close enough to tol_viol to flip a chunk.
+        assert res[n]["iters"] == res["single"]["iters"], res
+        assert res[n]["total"] == res["single"]["total"], res
+        # duals match the single-device solution within 1e-6 (relative L2;
+        # measured 1e-7–5e-7, i.e. fp32 reduction noise under contraction)
+        assert res[n]["lam_rel_l2"] < 1e-6, res
+
+
 SHARD_COUNTS = r"""
 import jax, jax.numpy as jnp, numpy as np, json
+from repro.compat import make_mesh
 from repro.instances import MatchingInstanceSpec, generate_matching_instance, bucketize
 from repro.core import (MatchingObjective, normalize_rows, Maximizer, MaximizerConfig,
                         DistributedMaximizer, DistConfig)
@@ -57,8 +122,7 @@ scaled, _ = normalize_rows(packed)
 cfg = MaximizerConfig(iters_per_stage=60)
 gs = {}
 for n in (1, 2, 4, 8):
-    mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,),
-                         devices=jax.devices()[:n])
+    mesh = make_mesh((n,), ("data",), devices=jax.devices()[:n])
     dm = DistributedMaximizer(scaled, mesh, cfg, DistConfig(axes="data"))
     dm.place()
     gs[n] = float(dm.solve().g)
@@ -77,12 +141,12 @@ def test_invariance_to_shard_count():
 
 DRYRUN_SMALL = r"""
 import jax, jax.numpy as jnp, json
+from repro.compat import make_mesh
 from repro.core import DistributedMaximizer, DistConfig, MaximizerConfig
 from repro.instances.specs import solver_input_specs
 from repro.analysis.hlo_stats import collective_stats
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 inst = solver_input_specs(100_000, 1_000, shard_multiple=8)
 dm = DistributedMaximizer(inst, mesh, MaximizerConfig(iters_per_stage=10),
                           DistConfig(axes=("data", "model")))
@@ -103,13 +167,43 @@ def test_solver_dryrun_small_mesh():
     assert 0 < res["bytes"] <= 10 * (1_000 + 2) * 4 * 2 * 12
 
 
-COMM_VOLUME = r"""
+DRYRUN_EARLY_STOP = r"""
 import jax, jax.numpy as jnp, json
+from repro.compat import make_mesh
 from repro.core import DistributedMaximizer, DistConfig, MaximizerConfig
 from repro.instances.specs import solver_input_specs
 from repro.analysis.hlo_stats import collective_stats
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
+inst = solver_input_specs(100_000, 1_000, shard_multiple=8)
+dm = DistributedMaximizer(
+    inst, mesh,
+    MaximizerConfig(iters_per_stage=100, tol_grad=1e-4, tol_viol=1e-4,
+                    check_every=25),
+    DistConfig(axes="data"))
+compiled = dm.lower_stage().compile()
+st = collective_stats(compiled.as_text())
+print("RESULT:" + json.dumps({"counts": st["counts"]}))
+"""
+
+
+def test_early_stop_stage_lowers_with_predicate_collective():
+    """The early-stop stage variant compiles under shard_map; the psum'd stop
+    predicate contributes its own (tiny) all-reduce besides the gradient one."""
+    out = run_with_devices(DRYRUN_EARLY_STOP, 8)
+    res = json.loads(out.split("RESULT:")[1])
+    # at least the gradient all-reduce and the predicate all-reduce
+    assert res["counts"].get("all-reduce", 0) >= 2, res
+
+
+COMM_VOLUME = r"""
+import jax, jax.numpy as jnp, json
+from repro.compat import make_mesh
+from repro.core import DistributedMaximizer, DistConfig, MaximizerConfig
+from repro.instances.specs import solver_input_specs
+from repro.analysis.hlo_stats import collective_stats
+
+mesh = make_mesh((8,), ("data",))
 out = {}
 for I in (50_000, 200_000):
     inst = solver_input_specs(I, 1_000, shard_multiple=8)

@@ -119,6 +119,44 @@ def test_dual_gradient_is_exact():
     np.testing.assert_allclose(np.asarray(auto), np.asarray(analytic), atol=1e-4)
 
 
+def test_step_size_single_source_of_truth():
+    """`Maximizer.step_size`, the module-level `step_size` helper, and the
+    service engine's compiled solves must all produce the same step — the
+    formula exists exactly once (warm/batched solves would silently diverge
+    from one-shot solves if a copy drifted)."""
+    from repro.core.maximizer import step_size
+    from repro.service import compiled_solver
+
+    spec = MatchingInstanceSpec(
+        num_sources=40, num_destinations=6, avg_degree=3.0, seed=17
+    )
+    packed, _ = normalize_rows(bucketize(generate_matching_instance(spec)))
+    cfg = MaximizerConfig(step_scale=0.7, iters_per_stage=10)
+    m = Maximizer(MatchingObjective(packed), cfg)
+    # the method IS the helper, across clipped and unclipped regimes
+    for sigma_sq in (1e-8, 0.3, 4.0, 1e7):
+        for gamma in cfg.gammas:
+            np.testing.assert_array_equal(
+                np.asarray(m.step_size(jnp.float32(sigma_sq), gamma)),
+                np.asarray(step_size(cfg, jnp.float32(sigma_sq), gamma)),
+            )
+    # the service engine reports exactly the helper's steps for its sigma_sq
+    raw = compiled_solver(cfg, False)(
+        packed, jnp.zeros((packed.dual_dim,), jnp.float32)
+    )
+    expect = [
+        float(step_size(cfg, raw.sigma_sq, g).astype(jnp.float32))
+        for g in cfg.gammas
+    ]
+    np.testing.assert_allclose(np.asarray(raw.etas), expect, rtol=1e-7)
+    # and Maximizer.solve's recorded steps agree with the helper too
+    res = m.solve()
+    for eta, gamma in zip(res.steps, cfg.gammas):
+        np.testing.assert_allclose(
+            eta, float(step_size(cfg, res.sigma_sq, gamma)), rtol=1e-7
+        )
+
+
 def test_adaptive_restart_no_worse():
     spec = MatchingInstanceSpec(num_sources=100, num_destinations=10, avg_degree=4.0, seed=16)
     packed, _ = normalize_rows(bucketize(generate_matching_instance(spec)))
