@@ -16,6 +16,10 @@ from repro.instances import (
 
 ROWS: list[tuple] = []
 
+# CI smoke mode (benchmarks/run.py --quick): suites shrink their sweeps so
+# the whole harness finishes in a couple of minutes on a shared runner.
+QUICK = False
+
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     ROWS.append((name, us_per_call, derived))

@@ -1,10 +1,17 @@
-"""Figure 1 analog: fused projection vs multi-op eager Duchi.
+"""Figure 1 analog: fused projection vs multi-op eager Duchi, and the
+one-pass fused dual oracle vs the multi-launch oracle chain.
 
-On-TPU the fused Pallas kernel removes inter-stage HBM traffic; on this CPU
+On-TPU the fused Pallas kernels remove inter-stage HBM traffic; on this CPU
 host we measure (a) the multi-op eager pipeline (one dispatch per stage — the
 paper's 'PyTorch eager' role), (b) the jit'd single-program pipeline, and
 report the *analytic* HBM traffic each variant implies on the TPU target
 (the quantity Figure 1's memory panel measures).
+
+The oracle rows extend the same comparison one level up: the unfused oracle
+is three separately-jitted launches (primal step, gradient segment-sum,
+objective scalars) with the primal slab and the [m, n, L] contribution
+intermediates crossing HBM between them; the fused oracle is one launch
+returning (x, A x histogram, c'x, ||x||^2) from a single slab pass.
 """
 from __future__ import annotations
 
@@ -12,7 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, time_fn
+from repro.core.objective import binned_segment_sum
 from repro.kernels import ref as kref
 
 
@@ -24,9 +33,13 @@ def _eager_duchi(v, mask):
 _jit_duchi = jax.jit(kref.simplex_ref)
 
 
-def run() -> None:
+def _run_projection() -> None:
     rng = np.random.default_rng(0)
-    for n, L in ((20_000, 64), (100_000, 64), (20_000, 512)):
+    cases = (
+        ((20_000, 64),) if common.QUICK
+        else ((20_000, 64), (100_000, 64), (20_000, 512))
+    )
+    for n, L in cases:
         v = jnp.asarray(rng.normal(size=(n, L)).astype(np.float32))
         mask = jnp.asarray((rng.random((n, L)) < 0.8).astype(np.float32))
         t_eager = time_fn(_eager_duchi, v, mask, warmup=1, iters=3)
@@ -41,3 +54,63 @@ def run() -> None:
             f"hbm_bytes~{3 * slab};speedup={t_eager / max(t_jit, 1e-9):.1f}x;"
             f"traffic_reduction={9 / 3:.1f}x",
         )
+
+
+def _run_oracle() -> None:
+    rng = np.random.default_rng(1)
+    m, J = 1, 1_000
+    cases = (
+        ((20_000, 8),) if common.QUICK
+        else ((20_000, 8), (100_000, 8), (20_000, 64))
+    )
+    # the unfused oracle as three separate launches (multi-launch role)
+    primal = jax.jit(
+        lambda idx, coeff, cost, mask, lam, gamma: kref.dual_primal_ref(
+            idx, coeff, cost, mask, lam, gamma, J
+        )
+    )
+    segsum = jax.jit(
+        lambda idx, coeff, x: binned_segment_sum(idx, coeff * x[None], J)
+    )
+    scalars = jax.jit(lambda cost, x: (jnp.vdot(cost, x), jnp.vdot(x, x)))
+    fused = jax.jit(
+        lambda idx, coeff, cost, mask, lam, gamma: kref.dual_oracle_ref(
+            idx, coeff, cost, mask, lam, gamma, J
+        )
+    )
+
+    def multi_launch(idx, coeff, cost, mask, lam, gamma):
+        x = primal(idx, coeff, cost, mask, lam, gamma)
+        hist = segsum(idx, coeff, x)
+        lin, sq = scalars(cost, x)
+        return x, hist, lin, sq
+
+    for n, L in cases:
+        idx = jnp.asarray(rng.integers(0, J, size=(n, L)), jnp.int32)
+        coeff = jnp.asarray(rng.random((m, n, L)).astype(np.float32))
+        cost = jnp.asarray(rng.normal(size=(n, L)).astype(np.float32))
+        mask = jnp.asarray((rng.random((n, L)) < 0.8).astype(np.float32))
+        lam = jnp.asarray(rng.random(m * J).astype(np.float32))
+        gamma = jnp.float32(1.0)
+        t_multi = time_fn(multi_launch, idx, coeff, cost, mask, lam, gamma)
+        t_fused = time_fn(fused, idx, coeff, cost, mask, lam, gamma)
+        # TPU-target slab bytes/iter: primal (idx+coeff+cost+mask r, x w) then
+        # re-reads for segment-sum (idx+coeff+x) and scalars (cost+x) vs one
+        # pass + O(grid*m*J) histogram partials
+        slab = n * L * 4
+        b_multi = (5 + 5) * slab
+        b_fused = 5 * slab
+        emit(
+            f"fig1/oracle_multi_n{n}_L{L}", t_multi, f"hbm_bytes~{b_multi}"
+        )
+        emit(
+            f"fig1/oracle_fused_n{n}_L{L}", t_fused,
+            f"hbm_bytes~{b_fused};"
+            f"speedup={t_multi / max(t_fused, 1e-9):.2f}x;"
+            f"traffic_reduction={b_multi / b_fused:.1f}x",
+        )
+
+
+def run() -> None:
+    _run_projection()
+    _run_oracle()

@@ -1,11 +1,19 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
-Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig1,table2]
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig1,table2] [--quick]
+
+After the table2 suite runs, its oracle measurements are persisted to
+``BENCH_oracle.json`` (``--bench-out``) — the perf-trajectory record of the
+per-iteration hot path (fused one-pass dual oracle vs the unfused / legacy
+iterations, wall time + analytic HBM bytes/iter).  ``--quick`` shrinks every
+suite's sweep for the CI smoke step.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -23,11 +31,55 @@ SUITES = [
     "roofline_report",
 ]
 
+_DEFAULT_BENCH_OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_oracle.json",
+)
+
+
+def _write_oracle_bench(path: str) -> None:
+    from benchmarks import common, table2_iteration_time
+
+    if not table2_iteration_time.RESULTS:
+        return
+    fig1_rows = {
+        name: {"us_per_call": us, "derived": derived}
+        for name, us, derived in common.ROWS
+        if name.startswith("fig1/oracle_")
+    }
+    record = {
+        "suite": "fused dual oracle (one-pass Ax + objective reduction)",
+        "quick": common.QUICK,
+        "iteration_by_sources": {
+            str(k): v for k, v in sorted(table2_iteration_time.RESULTS.items())
+        },
+        "fig1_oracle_rows": fig1_rows,
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path}", file=sys.stderr)
+
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--quick", action="store_true",
+                    help="shrunken sweeps (CI smoke)")
+    ap.add_argument("--bench-out", default=_DEFAULT_BENCH_OUT,
+                    help="where to write the oracle perf record "
+                         "(empty string disables)")
     args = ap.parse_args()
+    if args.quick:
+        from benchmarks import common
+
+        common.QUICK = True
+        if args.bench_out == _DEFAULT_BENCH_OUT:
+            # never let a reduced smoke sweep clobber the committed
+            # full-sweep trajectory record; pass --bench-out to force a path
+            args.bench_out = ""
+            print("# --quick: skipping BENCH_oracle.json (reduced sweep); "
+                  "pass --bench-out explicitly to write one", file=sys.stderr)
     only = {s.strip() for s in args.only.split(",") if s.strip()}
     print("name,us_per_call,derived")
     failures = 0
@@ -43,6 +95,8 @@ def main() -> int:
             failures += 1
             print(f"# {name} FAILED", file=sys.stderr)
             traceback.print_exc()
+    if args.bench_out:
+        _write_oracle_bench(args.bench_out)
     return failures
 
 

@@ -1,24 +1,105 @@
 """Table 2 analog: average time per AGD iteration across problem sizes.
 
 The paper compares Scala/Spark vs the PyTorch-GPU system at 25M-100M sources;
-the CPU analog here sweeps source count and compares the multi-op eager
-objective ("Scala-like" unfused role) against the jit'd solver iteration, plus
-the per-iteration cost model at production scale from the dry-run.
+the CPU analog here sweeps source count and compares four oracle variants per
+AGD iteration:
+
+  eager         dispatch-per-op unfused oracle (the paper's "Scala-like" role)
+  jit_legacy    the CURRENT (pre-this-PR) jit'd iteration: gradient half
+                built from a [m, n, L] index broadcast + per-family vmap'd
+                `.at[].add` scatters, plus separate c'x / ||x||^2 reduction
+                passes — the baseline the fused oracle is measured against
+  jit           the unfused jit'd iteration after the segment-sum rewrite of
+                `_segment_sum_ax` (one flat family-offset segment_sum)
+  fused_oracle  the one-pass fused dual oracle (`MatchingObjective(
+                fused_oracle=True)`): x, A x and the objective scalars from a
+                single slab pass
+
+On this CPU host the fused oracle and the rewritten unfused jit iteration
+lower to near-identical XLA programs (XLA fuses the reference's passes), so
+their times tie to noise; the fused row's wall-clock win is against the
+pre-PR iteration (~15-25x at 200k sources, where the legacy batched scatter
+falls off a cliff), and its *slab-traffic* win (~2x analytic HBM bytes/iter)
+is what the Mosaic kernel banks on TPU.
+
+Alongside wall time each row reports the *analytic* per-iteration HBM slab
+traffic the variant implies on the TPU target (the quantity §4.3 is about):
+the unfused oracle reads every slab ~3x per iteration (primal pass, gradient
+segment-sum pass, scalar reduction passes), the fused oracle exactly once
+plus an O(grid*m*J) partial-histogram tree-sum.
+
+`RESULTS` is consumed by benchmarks/run.py to persist BENCH_oracle.json —
+the perf-trajectory record for this hot path.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from benchmarks import common
 from benchmarks.common import cpu_instance, emit, time_fn
 from repro.core import MatchingObjective
-from repro.core.maximizer import _stage_scan
+
+# sources -> row dict (times in us/iter + analytic bytes); see run.py
+RESULTS: dict[int, dict] = {}
+
+
+def _legacy_segment_sum_ax(bucket, x, J):
+    """The pre-PR gradient half: broadcast index tensor + vmap'd scatter-add."""
+    contrib = bucket.coeff * (x * bucket.mask)[None]  # [m, n, L]
+    m = bucket.coeff.shape[0]
+    flat_idx = jnp.broadcast_to(bucket.idx[None], contrib.shape).reshape(m, -1)
+    return jax.vmap(
+        lambda data, seg: jnp.zeros((J,), data.dtype).at[seg].add(data)
+    )(contrib.reshape(m, -1), flat_idx)
+
+
+def _legacy_calculate(obj: MatchingObjective, lam, gamma):
+    """The iteration this PR replaces (bit-equal math, legacy lowering)."""
+    inst = obj.instance
+    x_slabs = obj.primal_candidate(lam, gamma)
+    ax = jnp.zeros((inst.num_families, inst.num_destinations), jnp.float32)
+    for b, x in zip(inst.buckets, x_slabs):
+        ax = ax + _legacy_segment_sum_ax(b, x, inst.num_destinations)
+    ax = ax.reshape(-1)
+    lin = sum(jnp.vdot(b.cost, x) for b, x in zip(inst.buckets, x_slabs))
+    ridge = 0.5 * gamma * sum(jnp.vdot(x, x) for x in x_slabs)
+    grad = ax - inst.rhs
+    g = lin + ridge + jnp.vdot(lam, grad)
+    return g, grad
+
+
+def _slab_slots(inst) -> int:
+    return sum(b.cost.size for b in inst.buckets)
+
+
+def _analytic_bytes(inst, *, fused: bool) -> int:
+    """Per-iteration HBM slab bytes on the TPU target (fp32, see dryrun)."""
+    m, J = inst.num_families, inst.num_destinations
+    slots = _slab_slots(inst)
+    # shared primal pass: idx(4) + coeff(4m) + cost(4) + mask(4) reads + x(4) write
+    per_slot = 4 + 4 * m + 4 + 4 + 4
+    if not fused:
+        # gradient half re-reads idx + coeff + x; scalar passes re-read cost + x
+        per_slot += 4 + 4 * m + 4 + 4 + 4
+    total = per_slot * slots
+    if fused:
+        # partial histograms: one [m, J] write + read per grid step
+        # (tree-sum); shared model with launch.dryrun
+        from repro.kernels.ops import oracle_hist_partial_bytes
+
+        for b in inst.buckets:
+            n, L = b.cost.shape
+            total += oracle_hist_partial_bytes(n, L, m, J)
+    return total
 
 
 def run() -> None:
-    for sources in (10_000, 50_000, 200_000):
+    sizes = (10_000,) if common.QUICK else (10_000, 50_000, 200_000)
+    for sources in sizes:
         inst, packed, scaled = cpu_instance(sources)
         obj = MatchingObjective(scaled)
+        obj_fused = MatchingObjective(scaled, fused_oracle=True)
         lam0 = jnp.zeros((obj.dual_dim,), jnp.float32)
 
         # eager (dispatch-per-op) single iteration
@@ -33,13 +114,51 @@ def run() -> None:
             ev = obj.calculate(lam, jnp.float32(1.0))
             return jnp.maximum(lam + 1e-2 * ev.grad, 0.0)
 
+        # the pre-PR jit'd iteration (broadcast + vmap'd scatter gradient)
+        @jax.jit
+        def legacy_iter(lam):
+            _, grad = _legacy_calculate(obj, lam, jnp.float32(1.0))
+            return jnp.maximum(lam + 1e-2 * grad, 0.0)
+
+        # one-pass fused dual oracle iteration
+        @jax.jit
+        def fused_iter(lam):
+            ev = obj_fused.calculate(lam, jnp.float32(1.0))
+            return jnp.maximum(lam + 1e-2 * ev.grad, 0.0)
+
         t_eager = time_fn(eager_iter, lam0, warmup=1, iters=3)
+        t_legacy = time_fn(legacy_iter, lam0)
         t_jit = time_fn(jit_iter, lam0)
+        t_fused = time_fn(fused_iter, lam0)
+        bytes_unfused = _analytic_bytes(scaled, fused=False)
+        bytes_fused = _analytic_bytes(scaled, fused=True)
+        emit(f"table2/iter_s{sources}_eager", t_eager, f"sources={sources}")
         emit(
-            f"table2/iter_s{sources}_eager", t_eager,
-            f"sources={sources}",
+            f"table2/iter_s{sources}_jit_legacy", t_legacy,
+            f"hbm_bytes~{bytes_unfused}",
         )
         emit(
             f"table2/iter_s{sources}_jit", t_jit,
+            f"hbm_bytes~{bytes_unfused};"
             f"speedup_vs_eager={t_eager / max(t_jit, 1e-9):.1f}x",
         )
+        emit(
+            f"table2/iter_s{sources}_fused_oracle", t_fused,
+            f"hbm_bytes~{bytes_fused};"
+            f"speedup_vs_current={t_legacy / max(t_fused, 1e-9):.2f}x;"
+            f"speedup_vs_rewritten={t_jit / max(t_fused, 1e-9):.2f}x;"
+            f"traffic_reduction={bytes_unfused / max(bytes_fused, 1):.2f}x",
+        )
+        RESULTS[sources] = {
+            "eager_us": t_eager,
+            "jit_legacy_us": t_legacy,
+            "jit_us": t_jit,
+            "fused_oracle_us": t_fused,
+            # 'current' = the pre-PR jit'd iteration (jit_legacy row)
+            "fused_speedup_vs_current": t_legacy / max(t_fused, 1e-9),
+            "fused_faster_than_current": bool(t_fused < t_legacy),
+            "fused_speedup_vs_rewritten_unfused": t_jit / max(t_fused, 1e-9),
+            "hbm_bytes_per_iter_unfused": bytes_unfused,
+            "hbm_bytes_per_iter_fused": bytes_fused,
+            "hbm_traffic_reduction": bytes_unfused / max(bytes_fused, 1),
+        }

@@ -16,6 +16,12 @@ Both SpMVs touch only real nonzeros (padding is masked to exact zeros), so the
 cost matches the paper's CSC complexity while staying dense-slab shaped for the
 VPU/MXU.  All methods are pure functions of jax arrays — safe under jit,
 shard_map and grad.
+
+`fused_oracle=True` routes the whole of `calculate` through the one-pass
+fused dual-oracle kernel (kernels/dual_oracle.py): one launch per bucket
+emits the primal slab plus this bucket's A x histogram and (c'x, ||x||^2)
+partials from a single slab read, instead of the ~3 passes the unfused
+composition pays (docs/architecture.md "one-pass dual oracle").
 """
 from __future__ import annotations
 
@@ -33,6 +39,7 @@ from repro.instances.buckets import Bucket, BucketedInstance
 __all__ = [
     "DualEval",
     "MatchingObjective",
+    "binned_segment_sum",
     "normalize_rows",
     "normalize_rows_traced",
 ]
@@ -55,15 +62,26 @@ def _gather_at_lam(bucket: Bucket, lam2: jax.Array) -> jax.Array:
     return jnp.einsum("mnl,mnl->nl", bucket.coeff, gathered)
 
 
+def binned_segment_sum(idx: jax.Array, contrib: jax.Array, J: int) -> jax.Array:
+    """Scatter-add [m, ...] contributions into [m, J] bins keyed by `idx`.
+
+    One `segment_sum` over family-offset indices (`idx + k*J`, flattened
+    once) replaces the previous per-family vmap'd `.at[].add` plus the
+    materialised [m, n, L] broadcast of the index tensor — XLA lowers the
+    single flat segment-sum without the batched-scatter loop.
+    """
+    m = contrib.shape[0]
+    flat_idx = idx.reshape(-1).astype(jnp.int32)
+    offs = (jnp.arange(m, dtype=jnp.int32) * J)[:, None]  # [m, 1]
+    seg = (flat_idx[None, :] + offs).reshape(-1)
+    out = jax.ops.segment_sum(contrib.reshape(-1), seg, num_segments=m * J)
+    return out.reshape(m, J)
+
+
 def _segment_sum_ax(bucket: Bucket, x: jax.Array, J: int) -> jax.Array:
     """This bucket's contribution to A x: [m, J]."""
     contrib = bucket.coeff * (x * bucket.mask)[None]  # [m, n, L]
-    m = bucket.coeff.shape[0]
-    flat_idx = jnp.broadcast_to(bucket.idx[None], contrib.shape).reshape(m, -1)
-    out = jax.vmap(
-        lambda data, seg: jnp.zeros((J,), data.dtype).at[seg].add(data)
-    )(contrib.reshape(m, -1), flat_idx)
-    return out  # [m, J]
+    return binned_segment_sum(bucket.idx, contrib, J)
 
 
 @dataclasses.dataclass
@@ -87,6 +105,13 @@ class MatchingObjective:
     # (gather + axpy + scale + projection in one kernel; see kernels/).
     # Only valid for UnitSimplexProjection feasible sets.
     fused_kernel: bool = False
+    # Route the ENTIRE oracle through the one-pass fused dual-oracle kernel:
+    # the same one-pass-over-VMEM-tiles launch that computes x also emits
+    # per-grid-step partial A x histograms and (c'x, ||x||^2) partials, so
+    # `calculate` reads each slab once per iteration instead of ~3x (see
+    # kernels/dual_oracle.py and docs/architecture.md "one-pass dual
+    # oracle").  Subsumes fused_kernel; simplex feasible sets only.
+    fused_oracle: bool = False
     kernel_interpret: bool | None = None
 
     @property
@@ -139,21 +164,71 @@ class MatchingObjective:
 
     def calculate(self, lam: jax.Array, gamma) -> DualEval:
         """(g, grad g, x*) — the paper's ObjectiveFunction.calculate (Table 1)."""
+        if self.fused_oracle:
+            return self._calculate_fused(lam, gamma)
         inst = self.instance
         gamma = jnp.asarray(gamma, lam.dtype)
         x_slabs = self.primal_candidate(lam, gamma)
         ax = self.apply_A(x_slabs)
         lin = sum(jnp.vdot(b.cost, x) for b, x in zip(inst.buckets, x_slabs))
         ridge = 0.5 * gamma * sum(jnp.vdot(x, x) for x in x_slabs)
+        return self._finish_eval(lam, ax, lin, ridge, x_slabs)
+
+    def _finish_eval(
+        self, lam, ax, lin, ridge, x_slabs: tuple[jax.Array, ...]
+    ) -> DualEval:
+        """Shared tail of both oracle paths: grad/g from the reduced pieces.
+
+        `include_rhs=False` is the sharded-local mode: b is applied once
+        globally after the psum, so grad/g here are pre-reduction
+        contributions (see core.sharding._make_calculate).
+        """
         if self.include_rhs:
-            grad = ax - inst.rhs
+            grad = ax - self.instance.rhs
             g = lin + ridge + jnp.vdot(lam, grad)
-        else:  # sharded mode: b applied once globally after the reduction
+        else:
             grad = ax
             g = lin + ridge + jnp.vdot(lam, ax)
         return DualEval(
             g=g, grad=grad, x_slabs=x_slabs, primal_linear=lin,
             primal_ridge=ridge, ax=ax,
+        )
+
+    def _calculate_fused(self, lam: jax.Array, gamma) -> DualEval:
+        """One-pass oracle: per bucket, ONE fused launch emits the primal slab
+        plus partial A x histograms and the objective scalars; `calculate`
+        finishes with the O(m*J) tree-sums.  Same DualEval as the unfused
+        path (including the `include_rhs=False` sharded-local mode, where
+        the returned ax/lin/ridge are this shard's pre-psum contributions).
+        """
+        from repro.kernels import ops as kops
+
+        inst = self.instance
+        proj = self.projection
+        assert isinstance(proj, UnitSimplexProjection), (
+            "fused dual-oracle kernel implements the simplex feasible set"
+        )
+        gamma = jnp.asarray(gamma, jnp.float32)
+        ax2 = jnp.zeros(
+            (inst.num_families, inst.num_destinations), jnp.float32
+        )
+        lin = jnp.float32(0.0)
+        sq = jnp.float32(0.0)
+        x_slabs = []
+        for b in inst.buckets:
+            x, hist, b_lin, b_sq = kops.fused_dual_oracle(
+                b.idx, b.coeff, b.cost, b.mask, lam, gamma,
+                num_destinations=inst.num_destinations,
+                radius=proj.radius,
+                inequality=proj.inequality,
+                interpret=self.kernel_interpret,
+            )
+            x_slabs.append(x)
+            ax2 = ax2 + hist
+            lin = lin + b_lin
+            sq = sq + b_sq
+        return self._finish_eval(
+            lam, ax2.reshape(-1), lin, 0.5 * gamma * sq, tuple(x_slabs)
         )
 
     # -- diagnostics --------------------------------------------------------
@@ -208,10 +283,7 @@ def normalize_rows_traced(
     norms_sq = jnp.zeros((m, J), jnp.float32)
     for b in inst.buckets:
         contrib = (b.coeff**2) * b.mask[None]  # [m, n, L]
-        flat_idx = jnp.broadcast_to(b.idx[None], contrib.shape).reshape(m, -1)
-        norms_sq = norms_sq + jax.vmap(
-            lambda data, seg: jnp.zeros((J,), data.dtype).at[seg].add(data)
-        )(contrib.reshape(m, -1), flat_idx)
+        norms_sq = norms_sq + binned_segment_sum(b.idx, contrib, J)
     norms = jnp.sqrt(norms_sq)
     d2 = jnp.where(norms > eps, 1.0 / jnp.maximum(norms, eps), 1.0)  # [m, J]
     buckets = tuple(

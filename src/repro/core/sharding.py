@@ -64,6 +64,12 @@ class DistConfig:
     comm_mode: str = "psum"  # "psum" | "rank0"
     compress: str = "none"  # "none" | "bf16" | "bf16_ef"
     fused_kernel: bool = False
+    # One-pass fused dual oracle (kernels/dual_oracle.py): each shard's local
+    # calculate() reads its slab rows once per iteration and emits the
+    # pre-psum (ax, c'x, ||x||^2) contributions directly from the kernel's
+    # partial histograms (include_rhs=False local mode, b applied after the
+    # reduction as before).  Subsumes fused_kernel when set.
+    fused_oracle: bool = False
     kernel_interpret: Optional[bool] = None
 
     @property
@@ -202,6 +208,7 @@ class DistributedMaximizer:
                 projection=self.projection,
                 include_rhs=False,
                 fused_kernel=dist.fused_kernel,
+                fused_oracle=dist.fused_oracle,
                 kernel_interpret=dist.kernel_interpret,
             )
 

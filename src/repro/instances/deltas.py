@@ -159,28 +159,90 @@ class InstanceDelta:
 class BucketScatter:
     """Touched cells of one bucket's slabs, with their post-delta values.
 
-    ``rows``/``slots`` address cells of the [n, L] slabs; the parallel value
-    arrays carry what the host slabs hold at those cells *after* the delta.
-    Cells are unique and sorted (row-major), so `.at[rows, slots].set(...)`
-    is deterministic regardless of backend scatter order.
+    Cell addresses are **run-length compacted**: a run is a maximal set of
+    consecutive slots ``[run_slots[r], run_slots[r] + run_lengths[r])`` in
+    row ``run_rows[r]``.  Deltas touch contiguous slot spans by construction
+    — row moves rewrite ``[0, d)`` of both the old and new row, deletes touch
+    ``{j, d-1}``, inserts append at ``d`` — so high-degree sources compress
+    from O(d) index pairs to O(1) run descriptors while the value payload
+    stays per-cell.  The expanded views (`rows`/`slots` properties, host
+    numpy) remain unique and sorted row-major, so `.at[rows, slots].set(...)`
+    is deterministic regardless of backend scatter order; the device replay
+    (`service.engine.apply_scatter_plan`) transfers only the runs + values
+    and re-expands on device.
     """
 
     bucket: int
-    rows: np.ndarray  # [k] int32
-    slots: np.ndarray  # [k] int32
-    idx: np.ndarray  # [k] int32 destination ids
+    run_rows: np.ndarray  # [R] int32 row of each run
+    run_slots: np.ndarray  # [R] int32 first slot of each run
+    run_lengths: np.ndarray  # [R] int32 cells in each run
+    idx: np.ndarray  # [k] int32 destination ids (run order)
     cost: np.ndarray  # [k] slab dtype
     mask: np.ndarray  # [k] slab dtype
     coeff: np.ndarray  # [m, k] slab dtype
 
+    @classmethod
+    def from_cells(
+        cls,
+        bucket: int,
+        rows: np.ndarray,
+        slots: np.ndarray,
+        idx: np.ndarray,
+        cost: np.ndarray,
+        mask: np.ndarray,
+        coeff: np.ndarray,
+    ) -> "BucketScatter":
+        """Compact unique row-major-sorted (rows, slots) cells into runs."""
+        rows = np.asarray(rows, np.int32)
+        slots = np.asarray(slots, np.int32)
+        if rows.size == 0:
+            starts = np.zeros(0, bool)
+        else:
+            starts = np.empty(rows.size, bool)
+            starts[0] = True
+            starts[1:] = (rows[1:] != rows[:-1]) | (slots[1:] != slots[:-1] + 1)
+        first = np.flatnonzero(starts)
+        bounds = np.append(first, rows.size)
+        return cls(
+            bucket=bucket,
+            run_rows=rows[first],
+            run_slots=slots[first],
+            run_lengths=np.diff(bounds).astype(np.int32),
+            idx=idx,
+            cost=cost,
+            mask=mask,
+            coeff=coeff,
+        )
+
     @property
     def num_cells(self) -> int:
-        return int(self.rows.size)
+        return int(self.idx.size)
+
+    @property
+    def num_runs(self) -> int:
+        return int(self.run_rows.size)
+
+    @property
+    def rows(self) -> np.ndarray:
+        """Expanded per-cell row addresses (host-side view of the runs)."""
+        return np.repeat(self.run_rows, self.run_lengths)
+
+    @property
+    def slots(self) -> np.ndarray:
+        """Expanded per-cell slot addresses (host-side view of the runs)."""
+        k = self.num_cells
+        run_of = np.repeat(np.arange(self.num_runs), self.run_lengths)
+        starts = np.cumsum(self.run_lengths) - self.run_lengths
+        return (
+            self.run_slots[run_of] + (np.arange(k) - starts[run_of])
+        ).astype(np.int32)
 
     @property
     def nbytes(self) -> int:
+        """Bytes a consumer transfers to replay: run descriptors + values."""
         return int(
-            self.rows.nbytes + self.slots.nbytes + self.idx.nbytes
+            self.run_rows.nbytes + self.run_slots.nbytes
+            + self.run_lengths.nbytes + self.idx.nbytes
             + self.cost.nbytes + self.mask.nbytes + self.coeff.nbytes
         )
 
@@ -203,6 +265,11 @@ class ScatterPlan:
     @property
     def num_cells(self) -> int:
         return sum(op.num_cells for op in self.ops)
+
+    @property
+    def num_runs(self) -> int:
+        """Contiguous-slot runs across all ops (index overhead is O(runs))."""
+        return sum(op.num_runs for op in self.ops)
 
     @property
     def nbytes(self) -> int:
@@ -595,7 +662,7 @@ class DeltaIngestor:
             rc = np.array(sorted(cells), np.int32)  # [k, 2] row-major order
             rows, slots = rc[:, 0], rc[:, 1]
             ops.append(
-                BucketScatter(
+                BucketScatter.from_cells(
                     bucket=t,
                     rows=rows,
                     slots=slots,

@@ -4,12 +4,23 @@ simplex_proj.py  fused Duchi simplex projection (paper §4.3): bitonic sort
                  network + Hillis-Steele scan along lanes, VMEM-tiled.
 dual_primal.py   beyond-paper fusion of the whole primal step (eq. 3):
                  gather(lam) -> axpy -> scale -> project in one kernel.
+dual_oracle.py   one-pass fusion of the ENTIRE oracle: the primal-step
+                 kernel additionally emits per-grid-step partial A x
+                 histograms (one-hot MXU contraction vs the VMEM-resident
+                 [m, J] dual shape) and (c'x, ||x||^2) partials, so one
+                 launch per bucket yields g, grad and x from a single
+                 slab read per iteration.
 ops.py           jit'd wrappers: block sizing, padding, bucket dispatch,
                  >8192-width fallback, interpret/TPU switch.
-ref.py           pure-jnp oracles (the kernel tests' ground truth).
+ref.py           pure-jnp oracles (the kernel tests' ground truth and the
+                 off-TPU execution path of the fused dual oracle).
 
 Validated with interpret=True on CPU; BlockSpecs target TPU v5e VMEM.
 """
-from repro.kernels.ops import fused_dual_primal, fused_project_simplex
+from repro.kernels.ops import (
+    fused_dual_oracle,
+    fused_dual_primal,
+    fused_project_simplex,
+)
 
-__all__ = ["fused_dual_primal", "fused_project_simplex"]
+__all__ = ["fused_dual_oracle", "fused_dual_primal", "fused_project_simplex"]

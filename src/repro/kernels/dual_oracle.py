@@ -1,0 +1,202 @@
+"""One-pass fused dual-oracle Pallas kernel — the whole oracle, one slab read.
+
+`dual_primal.py` fuses the *forward* half of the oracle (eq. 3): the slab is
+read once and the projected primal tile is written back.  But every AGD
+iteration also needs the gradient half (eq. 4) — `A x` — plus the objective
+scalars `c'x` and `||x||^2`, and the unfused path re-reads the slab for each:
+a segment-sum pass over (idx, coeff, x) for `A x` and two more reduction
+passes for the scalars, ~3x the slab traffic per iteration, with a
+materialised `[m, n, L]` `coeff * x` intermediate in between.
+
+This kernel computes *everything the oracle emits* in the same
+one-pass-over-VMEM-tiles schedule:
+
+  per grid step i over (block_rows, L) tiles:
+    x_tile   = Pi_simplex( -(A^T lam + c)/gamma )      -> x[i]      [block, L]
+    hist[i]  = this tile's binned contribution to A x  -> [1, m, J]
+    scal[i]  = (sum c*x_tile, sum x_tile^2)            -> [1, 2]
+
+so one kernel launch per bucket yields `(x, [grid, m, J], [grid, 2])` and the
+caller finishes with an O(grid*m*J) tree-sum — the slab is read exactly once
+per iteration and the `[m, n, L]` gradient intermediates never exist.
+
+The in-kernel binned scatter is a **one-hot MXU contraction**, not a scatter:
+TPU has no efficient VMEM scatter-add, but `hist[k, j] += coeff[k,e] * x[e]`
+over the tile's edges e with `idx[e] == j` is exactly
+
+    hist += einsum('re,rej->rj'-style dot)  with  onehot[e, j] = (idx[e] == j)
+
+a dense [m, chunk] x [chunk, J] matmul against a comparison-generated one-hot
+tile.  Edges are processed in row chunks sized so the one-hot tile stays
+within its VMEM budget (`_ONEHOT_TILE_ELEMS`).  Partial histograms per grid
+step + a tree-sum outside the kernel replace global atomics, which TPU lacks
+(and which on GPU serialise under contention anyway) — determinism comes for
+free because every partial has a fixed slot in the [grid, m, J] output.
+
+Padded rows are mask-zero, so their x tile is exactly 0.0 and they contribute
+exact zeros to the histogram and both scalars (same guarantee `bucketize`
+documents for gradients).
+
+As with every kernel in this repo, correctness is *validated* in interpret
+mode on CPU (tests/test_dual_oracle.py); `kernels/ops.py` dispatches to the
+fused one-pass reference (`kernels/ref.dual_oracle_ref`) off-TPU because the
+one-hot contraction is an MXU trick — on a scalar interpreter it costs
+O(edges * J) real multiplies, while XLA-CPU fuses the reference's
+segment-sum formulation natively.  See ops.fused_dual_oracle for the full
+fallback matrix.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.dual_primal import fused_primal_tile
+from repro.kernels.simplex_proj import MAX_FUSED_LENGTH
+
+__all__ = ["make_dual_oracle_call", "pick_row_chunk", "fits_onehot_budget"]
+
+# VMEM budget for the one-hot [chunk*L, J] fp32 tile of the histogram
+# contraction: 512k elements = 2 MiB, alongside the ~5 live tiles of the
+# primal pipeline this keeps the working set under the ops.py tile budget.
+_ONEHOT_TILE_ELEMS = 1 << 19
+
+
+def fits_onehot_budget(length: int, num_destinations: int) -> bool:
+    """True iff even a single-row chunk's one-hot tile [L, J] respects the
+    VMEM budget — the dispatch-level gate `ops.fused_dual_oracle` checks
+    before taking the kernel path (very wide slabs x very many destinations
+    fall back to the reference oracle, like the paper's >MAX_FUSED_LENGTH
+    multi-launch fallback)."""
+    return length * num_destinations <= _ONEHOT_TILE_ELEMS
+
+
+def pick_row_chunk(block_rows: int, length: int, num_destinations: int) -> int:
+    """Rows per one-hot contraction chunk: largest divisor of block_rows whose
+    [chunk*L, J] one-hot tile fits in _ONEHOT_TILE_ELEMS (floor 1 row;
+    callers gate on `fits_onehot_budget` so the floor respects the budget)."""
+    cap = max(1, _ONEHOT_TILE_ELEMS // max(length * num_destinations, 1))
+    chunk = min(block_rows, cap)
+    while block_rows % chunk:
+        chunk -= 1
+    return max(chunk, 1)
+
+
+def dual_oracle_kernel_body(
+    idx_ref,  # [block, L] int32
+    coeff_ref,  # [m, block, L]
+    cost_ref,  # [block, L]
+    mask_ref,  # [block, L]
+    lam_ref,  # [m, J]  whole dual vector resident in VMEM
+    ginv_ref,  # [1, 1]  1/gamma (traced; continuation changes it per stage)
+    x_ref,  # [block, L] out: primal tile
+    hist_ref,  # [1, m, J] out: this grid step's partial A x
+    scal_ref,  # [1, 2] out: (c'x, ||x||^2) partials
+    *,
+    radius: float,
+    inequality: bool,
+    row_chunk: int,
+):
+    x = fused_primal_tile(
+        idx_ref, coeff_ref, cost_ref, mask_ref, lam_ref, ginv_ref,
+        radius=radius, inequality=inequality,
+    )
+    x_ref[...] = x.astype(x_ref.dtype)
+
+    m = coeff_ref.shape[0]
+    block, L = x.shape
+    J = lam_ref.shape[1]
+    idx = idx_ref[...]
+    coeff = coeff_ref[...].astype(jnp.float32)
+
+    # scalar partials: cost/x are exact zeros on padded slots already
+    scal_ref[0, 0] = jnp.sum(cost_ref[...].astype(jnp.float32) * x)
+    scal_ref[0, 1] = jnp.sum(x * x)
+
+    # binned scatter as a chunked one-hot contraction:
+    #   contrib[k, r, l] = coeff[k, r, l] * x[r, l]   (x is already masked)
+    #   hist[k, j]      += sum_{r,l} contrib[k, r, l] * [idx[r, l] == j]
+    contrib = coeff * x[None]  # [m, block, L]
+    n_chunks = block // row_chunk
+
+    def chunk_step(c, hist):
+        r0 = c * row_chunk
+        ids = jax.lax.dynamic_slice(idx, (r0, 0), (row_chunk, L))
+        con = jax.lax.dynamic_slice(
+            contrib, (0, r0, 0), (m, row_chunk, L)
+        ).reshape(m, row_chunk * L)
+        onehot = (
+            ids.reshape(row_chunk * L, 1)
+            == jax.lax.broadcasted_iota(jnp.int32, (row_chunk * L, J), 1)
+        ).astype(jnp.float32)
+        return hist + jax.lax.dot_general(
+            con, onehot,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    hist = jax.lax.fori_loop(
+        0, n_chunks, chunk_step, jnp.zeros((m, J), jnp.float32)
+    )
+    hist_ref[0] = hist.astype(hist_ref.dtype)
+
+
+def make_dual_oracle_call(
+    n_rows: int,
+    length: int,
+    num_families: int,
+    num_destinations: int,
+    block_rows: int,
+    dtype,
+    *,
+    radius: float = 1.0,
+    inequality: bool = True,
+    interpret: bool = True,
+):
+    """pallas_call for one bucket slab returning (x, hist_partials, scalar_partials).
+
+    Call-time arguments: (idx, coeff, cost, mask, lam2, gamma_inv) exactly as
+    `make_dual_primal_call`.  Outputs:
+      x               [n_rows, length]       projected primal slab
+      hist_partials   [grid, m, J] fp32      per-grid-step partial A x
+      scalar_partials [grid, 2] fp32         per-grid-step (c'x, ||x||^2)
+    The caller tree-sums the partials over the grid axis (O(grid*(m*J + 2))).
+    """
+    assert n_rows % block_rows == 0
+    assert length <= MAX_FUSED_LENGTH
+    grid_n = n_rows // block_rows
+    grid = (grid_n,)
+    row_spec = pl.BlockSpec((block_rows, length), lambda i: (i, 0))
+    coeff_spec = pl.BlockSpec(
+        (num_families, block_rows, length), lambda i: (0, i, 0)
+    )
+    lam_spec = pl.BlockSpec(
+        (num_families, num_destinations), lambda i: (0, 0)
+    )
+    ginv_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    hist_spec = pl.BlockSpec(
+        (1, num_families, num_destinations), lambda i: (i, 0, 0)
+    )
+    scal_spec = pl.BlockSpec((1, 2), lambda i: (i, 0))
+    body = functools.partial(
+        dual_oracle_kernel_body,
+        radius=radius,
+        inequality=inequality,
+        row_chunk=pick_row_chunk(block_rows, length, num_destinations),
+    )
+    return pl.pallas_call(
+        body,
+        out_shape=(
+            jax.ShapeDtypeStruct((n_rows, length), dtype),
+            jax.ShapeDtypeStruct(
+                (grid_n, num_families, num_destinations), jnp.float32
+            ),
+            jax.ShapeDtypeStruct((grid_n, 2), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[row_spec, coeff_spec, row_spec, row_spec, lam_spec, ginv_spec],
+        out_specs=(row_spec, hist_spec, scal_spec),
+        interpret=interpret,
+    )

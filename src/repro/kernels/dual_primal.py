@@ -33,21 +33,26 @@ from repro.kernels.simplex_proj import (
     _NEG,
 )
 
-__all__ = ["make_dual_primal_call"]
+__all__ = ["make_dual_primal_call", "fused_primal_tile"]
 
 
-def dual_primal_kernel_body(
+def fused_primal_tile(
     idx_ref,  # [block, L] int32
     coeff_ref,  # [m, block, L]
     cost_ref,  # [block, L]
     mask_ref,  # [block, L]
     lam_ref,  # [m, J]  (whole dual vector in VMEM, replicated per grid step)
     ginv_ref,  # [1, 1]  1/gamma (dynamic: continuation changes it per stage)
-    out_ref,  # [block, L]
     *,
     radius: float,
     inequality: bool,
-):
+) -> jax.Array:
+    """One VMEM tile of x = Pi_simplex( -(A^T lam + c)/gamma ), fp32.
+
+    Shared by the dual-primal kernel (writes x only) and the dual-oracle
+    kernel (additionally reduces this tile's A x / c'x / ||x||^2 partials).
+    Mask-zero (padded) slots come out exactly 0.0.
+    """
     idx = idx_ref[...]
     cost = cost_ref[...].astype(jnp.float32)
     mask = mask_ref[...].astype(jnp.float32)
@@ -79,6 +84,25 @@ def dual_primal_kernel_body(
         out = jnp.where(feasible, w0, w_eq)
     else:
         out = w_eq
+    return out
+
+
+def dual_primal_kernel_body(
+    idx_ref,
+    coeff_ref,
+    cost_ref,
+    mask_ref,
+    lam_ref,
+    ginv_ref,
+    out_ref,  # [block, L]
+    *,
+    radius: float,
+    inequality: bool,
+):
+    out = fused_primal_tile(
+        idx_ref, coeff_ref, cost_ref, mask_ref, lam_ref, ginv_ref,
+        radius=radius, inequality=inequality,
+    )
     out_ref[...] = out.astype(out_ref.dtype)
 
 

@@ -19,12 +19,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as kref
+from repro.kernels.dual_oracle import fits_onehot_budget, make_dual_oracle_call
 from repro.kernels.dual_primal import make_dual_primal_call
 from repro.kernels.simplex_proj import MAX_FUSED_LENGTH, make_simplex_call
 
 __all__ = [
     "fused_project_simplex",
     "fused_dual_primal",
+    "fused_dual_oracle",
+    "oracle_hist_partial_bytes",
     "pick_block_rows",
 ]
 
@@ -43,6 +46,20 @@ def pick_block_rows(n_rows: int, length: int) -> int:
     # round down to a multiple of 8 (sublane count), floor at 8
     block = max(8, (max_rows // 8) * 8)
     return min(block, max(8, n_rows))
+
+
+def oracle_hist_partial_bytes(
+    n_rows: int, length: int, num_families: int, num_destinations: int
+) -> int:
+    """Fused-oracle per-iteration partial-histogram HBM traffic for one
+    bucket: one [m, J] fp32 write + read per grid step (the tree-sum).
+
+    The single source of the analytic model — `launch.dryrun` and
+    `benchmarks.table2_iteration_time` both report it, and the two records
+    must agree for the perf trajectory to be comparable.
+    """
+    grid = -(-n_rows // pick_block_rows(n_rows, length))
+    return 2 * 4 * grid * num_families * num_destinations
 
 
 def _pad_rows(x: jax.Array, target: int) -> jax.Array:
@@ -141,3 +158,85 @@ def fused_dual_primal(
         ginv,
     )
     return out[:n]
+
+
+def fused_dual_oracle(
+    idx: jax.Array,  # [n, L] int32
+    coeff: jax.Array,  # [m, n, L]
+    cost: jax.Array,  # [n, L]
+    mask: jax.Array,  # [n, L]
+    lam: jax.Array,  # [m * J]
+    gamma: jax.Array,  # scalar
+    *,
+    num_destinations: int,
+    radius: float = 1.0,
+    inequality: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One-pass fused dual oracle for one bucket: `(x, hist, lin, sq)`.
+
+    One kernel launch computes the projected primal slab `x` AND this
+    bucket's gradient/objective partials (`hist = A x` contribution [m, J],
+    `lin = c'x`, `sq = ||x||^2`) from a single read of the slab; the
+    per-grid-step histogram partials are tree-summed here (O(grid*m*J)).
+
+    Fallback matrix (see also docs/architecture.md):
+      * L not a power of two or L > MAX_FUSED_LENGTH -> `dual_oracle_ref`
+        (the paper's multi-launch fallback policy, §4.3);
+      * L * J beyond the one-hot contraction's VMEM budget
+        (`fits_onehot_budget`) -> `dual_oracle_ref`: even a one-row chunk's
+        [L, J] one-hot tile would blow the kernel's working set;
+      * `interpret=None` off-TPU -> `dual_oracle_ref` as well: unlike the
+        elementwise dual-primal kernel, the oracle's in-kernel histogram is
+        a one-hot MXU contraction — O(edges * J) scalar multiplies on a
+        non-matrix backend — while XLA-CPU fuses the reference's
+        segment-sum formulation natively, so interpret mode is kept for
+        *validation*, not execution;
+      * `interpret=True` -> Pallas interpret mode (kernel-body semantics on
+        any backend; what the parity tests exercise);
+      * `interpret=False`/None on TPU -> real Mosaic lowering.
+    Padded rows are mask-zero and contribute exact zeros to `hist`/`lin`/`sq`
+    on every path.
+
+    Deliberately NOT wrapped in its own `jax.jit` (unlike the standalone
+    `fused_dual_primal`): the oracle is only ever called from inside an
+    already-jitted `calculate`, and a nested jit boundary would fence off
+    cross-bucket/cross-pass fusion in the surrounding program.
+    """
+    n, L = cost.shape
+    m = coeff.shape[0]
+    use_kernel = (
+        _is_pow2(L)
+        and L <= MAX_FUSED_LENGTH
+        and fits_onehot_budget(L, num_destinations)
+    )
+    if interpret is None and jax.default_backend() != "tpu":
+        use_kernel = False
+    if not use_kernel:
+        return kref.dual_oracle_ref(
+            idx, coeff, cost, mask, lam, gamma, num_destinations,
+            radius, inequality=inequality,
+        )
+    block = pick_block_rows(n, L)
+    n_pad = ((n + block - 1) // block) * block
+    call = make_dual_oracle_call(
+        n_pad,
+        L,
+        m,
+        num_destinations,
+        block,
+        cost.dtype,
+        radius=radius,
+        inequality=inequality,
+        interpret=bool(interpret) if interpret is not None else False,
+    )
+    ginv = (1.0 / gamma).astype(jnp.float32).reshape(1, 1)
+    x, hist_p, scal_p = call(
+        _pad_rows(idx, n_pad),
+        _pad_rows(coeff.swapaxes(0, 1), n_pad).swapaxes(0, 1),
+        _pad_rows(cost, n_pad),
+        _pad_rows(mask, n_pad),
+        lam.reshape(m, num_destinations),
+        ginv,
+    )
+    return x[:n], hist_p.sum(axis=0), scal_p[:, 0].sum(), scal_p[:, 1].sum()

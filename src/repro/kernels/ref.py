@@ -3,17 +3,23 @@
 `simplex_ref` is exactly the paper's multi-launch PyTorch-eager Duchi pipeline
 (sort -> cumsum -> cutoff -> threshold -> subtract-and-clamp); `dual_primal_ref`
 is the unfused primal step  x = Pi_simplex( -(A^T lam + c) / gamma )  for one
-bucket slab.  Kernel tests sweep shapes/dtypes and assert_allclose against
-these.
+bucket slab; `dual_oracle_ref` is the whole one-pass oracle (primal slab +
+this bucket's A x histogram + the c'x / ||x||^2 partials) expressed as a
+single traced function — it is both the ground truth the dual-oracle kernel
+tests compare against and the off-TPU execution path `ops.fused_dual_oracle`
+dispatches to (XLA fuses its passes; the kernel's one-hot MXU contraction
+does not pay off on a scalar backend).  Kernel tests sweep shapes/dtypes and
+assert_allclose against these.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.objective import binned_segment_sum
 from repro.core.projections import project_simplex
 
-__all__ = ["simplex_ref", "dual_primal_ref"]
+__all__ = ["simplex_ref", "dual_primal_ref", "dual_oracle_ref"]
 
 
 def simplex_ref(
@@ -45,3 +51,37 @@ def dual_primal_ref(
     atl = jnp.einsum("mnl,mnl->nl", coeff, jnp.take(lam2, idx, axis=1))
     z = -(atl + cost) / jnp.asarray(gamma, cost.dtype)
     return project_simplex(z, mask, radius, inequality=inequality)
+
+
+def dual_oracle_ref(
+    idx: jax.Array,  # [n, L] int32 destination ids
+    coeff: jax.Array,  # [m, n, L] constraint coefficients
+    cost: jax.Array,  # [n, L]
+    mask: jax.Array,  # [n, L]
+    lam: jax.Array,  # [m * J]
+    gamma,
+    J: int,
+    radius: float = 1.0,
+    *,
+    inequality: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One-pass oracle for one bucket: `(x, hist, lin, sq)` where
+
+        x    [n, L]  = Pi_simplex( -(A^T lam + c)/gamma )
+        hist [m, J]  = this bucket's contribution to A x
+        lin  scalar  = c'x        (this bucket's part)
+        sq   scalar  = ||x||^2    (this bucket's part)
+
+    Mathematically identical to primal-then-`_segment_sum_ax`-then-vdots, but
+    expressed as one traced function so a single jit fuses all passes and no
+    [m, n, L] gradient intermediates outlive the oracle.  The projection
+    multiplies by `mask`, so x is already exact-zero on padded slots and the
+    histogram/scalars need no re-masking.
+    """
+    x = dual_primal_ref(
+        idx, coeff, cost, mask, lam, gamma, J, radius, inequality=inequality
+    )
+    hist = binned_segment_sum(idx, (coeff * x[None]).astype(jnp.float32), J)
+    lin = jnp.vdot(cost, x)
+    sq = jnp.vdot(x, x)
+    return x, hist, lin.astype(jnp.float32), sq.astype(jnp.float32)

@@ -34,6 +34,20 @@ def _mesh(mesh_name: str):
     return make_production_mesh(multi_pod=(mesh_name == "multi_pod"))
 
 
+def _cost_analysis(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def _oracle_partial_bytes(bucket, num_destinations: int, num_families: int) -> float:
+    from repro.kernels.ops import oracle_hist_partial_bytes
+
+    n, L = (int(s) for s in bucket.cost.shape)
+    return float(oracle_hist_partial_bytes(n, L, num_families, num_destinations))
+
+
 def run_arch_cell(arch: str, shape_name: str, mesh_name: str,
                   moe_groups: int = 0, kv_dtype: str = "") -> dict:
     import dataclasses as _dc
@@ -74,7 +88,7 @@ def run_arch_cell(arch: str, shape_name: str, mesh_name: str,
     t_compile = time.time() - t0
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis(compiled)
     print(compiled.memory_analysis())
     print({k: v for k, v in ca.items() if k in ("flops", "bytes accessed", "transcendentals")})
     hlo = compiled.as_text()
@@ -138,6 +152,7 @@ def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
                     compress="none", iters: int = 100,
                     slab_dtype: str = "float32",
                     fused_kernel: bool = False,
+                    fused_oracle: bool = False,
                     tol_grad: Optional[float] = None,
                     tol_viol: Optional[float] = None) -> dict:
     from repro.analysis.hlo_stats import collective_stats
@@ -164,7 +179,8 @@ def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
         MaximizerConfig(iters_per_stage=iters, tol_grad=tol_grad,
                         tol_viol=tol_viol),
         DistConfig(axes=axes, comm_mode=comm_mode, compress=compress,
-                   fused_kernel=fused_kernel, kernel_interpret=True),
+                   fused_kernel=fused_kernel, fused_oracle=fused_oracle,
+                   kernel_interpret=True),
     )
     t0 = time.time()
     lowered = dm.lower_stage()
@@ -173,7 +189,7 @@ def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
     compiled = lowered.compile()
     t_compile = time.time() - t0
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis(compiled)
     print(compiled.memory_analysis())
     print({k: v for k, v in ca.items() if k in ("flops", "bytes accessed")})
     hlo = compiled.as_text()
@@ -209,11 +225,21 @@ def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
         "bytes_global": float(
             iters * sum(
                 # per slot per iteration: idx(4B) + coeff/cost/mask reads +
-                # x write + (unfused only) z write+read
+                # x write + (unfused primal only) z write+read + (unfused
+                # oracle only) the gradient half's slab re-read — idx +
+                # coeff + x for the segment-sum plus cost + x for the
+                # objective scalars; the fused oracle instead pays the
+                # O(grid*m*J) partial-histogram write+read tree-sum (same
+                # model as benchmarks/table2_iteration_time._analytic_bytes)
                 (4 + 3 * jnp.dtype(slab_dtype).itemsize
                  + jnp.dtype(slab_dtype).itemsize
-                 + (0 if fused_kernel else 8))
+                 + (0 if (fused_kernel or fused_oracle) else 8)
+                 + (0 if fused_oracle
+                    else 4 + 4 * jnp.dtype(slab_dtype).itemsize))
                 * float(jnp.prod(jnp.asarray(b.cost.shape)))
+                + (_oracle_partial_bytes(b, spec["num_destinations"],
+                                         spec["num_families"])
+                   if fused_oracle else 0)
                 for b in inst.buckets
             )
         ),
@@ -309,6 +335,7 @@ def main(argv: Optional[list[str]] = None) -> int:
     ap.add_argument("--kv-dtype", default="")
     ap.add_argument("--slab-dtype", default="float32")
     ap.add_argument("--fused-kernel", action="store_true")
+    ap.add_argument("--fused-oracle", action="store_true")
     ap.add_argument("--tol-grad", type=float, default=None)
     ap.add_argument("--tol-viol", type=float, default=None)
     ap.add_argument("--tag", default="", help="suffix for the output json")
@@ -328,11 +355,14 @@ def main(argv: Optional[list[str]] = None) -> int:
                                   compress=args.compress,
                                   slab_dtype=args.slab_dtype,
                                   fused_kernel=args.fused_kernel,
+                                  fused_oracle=args.fused_oracle,
                                   tol_grad=args.tol_grad,
                                   tol_viol=args.tol_viol)
             tag = f"solver-{args.solver}__{args.mesh}"
             if args.comm_mode != "psum" or args.compress != "none":
                 tag += f"__{args.comm_mode}-{args.compress}"
+            if args.fused_oracle:
+                tag += "__fusedoracle"
             if args.tol_grad is not None or args.tol_viol is not None:
                 tag += "__earlystop"
             if args.tag:

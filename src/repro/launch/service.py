@@ -82,6 +82,11 @@ def main() -> int:
     ap.add_argument("--tol-viol", type=float, default=1e-4)
     ap.add_argument("--drift-sla", type=float, default=0.25)
     ap.add_argument("--row-headroom", type=int, default=8)
+    ap.add_argument("--fused-oracle", action="store_true",
+                    help="one-pass fused dual oracle inside every solve")
+    ap.add_argument("--sigma-reuse-threshold", type=float, default=None,
+                    help="warm cadences with ||dc|| at or below this skip "
+                         "the power iteration (reuse previous sigma_sq)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true",
                     help="cross-check warm vs cold and batched vs sequential")
@@ -128,6 +133,8 @@ def main() -> int:
         ),
         drift_sla_rel=args.drift_sla,
         row_headroom=args.row_headroom,
+        fused_oracle=args.fused_oracle,
+        sigma_reuse_dc_threshold=args.sigma_reuse_threshold,
     )
     sched = Scheduler(cfg)
 
@@ -199,10 +206,11 @@ def main() -> int:
                 else f"drift_rel={r['drift_rel']:.3e} "
                 f"(bound {r['drift_bound']:.2e}) sla_ok={r['sla_ok']}"
             )
+            sigma_s = " sigma[reused]" if r.get("sigma_reused") else ""
             print(
                 f"  {name}: {r['mode']:4s} iters {r['iters_used']}/{r['iter_budget']}"
                 f" g={r['g']:.4f} viol={r['max_violation']:.2e} "
-                f"up[{r['upload_mode']}:{r['upload_bytes']}B] {drift}{ing_s}"
+                f"up[{r['upload_mode']}:{r['upload_bytes']}B] {drift}{sigma_s}{ing_s}"
             )
 
     if mgr is not None:

@@ -21,6 +21,9 @@ def main() -> int:
     ap.add_argument("--comm-mode", default="psum", choices=["psum", "rank0"])
     ap.add_argument("--compress", default="none", choices=["none", "bf16", "bf16_ef"])
     ap.add_argument("--fused-kernel", action="store_true")
+    ap.add_argument("--fused-oracle", action="store_true",
+                    help="one-pass fused dual oracle (kernel Ax + objective "
+                         "reduction; single slab read per iteration)")
     ap.add_argument("--tol-grad", type=float, default=None,
                     help="relative gradient-norm tolerance (enables early stop)")
     ap.add_argument("--tol-viol", type=float, default=None,
@@ -60,12 +63,14 @@ def main() -> int:
         dm = DistributedMaximizer(
             scaled, mesh, cfg,
             DistConfig(axes="data", comm_mode=args.comm_mode,
-                       compress=args.compress, fused_kernel=args.fused_kernel),
+                       compress=args.compress, fused_kernel=args.fused_kernel,
+                       fused_oracle=args.fused_oracle),
         )
         dm.place()
         res = dm.solve()
     else:
-        obj = MatchingObjective(scaled, fused_kernel=args.fused_kernel)
+        obj = MatchingObjective(scaled, fused_kernel=args.fused_kernel,
+                                fused_oracle=args.fused_oracle)
         res = Maximizer(obj, cfg).solve()
     dt = time.time() - t0
     total_iters = res.total_iters_used or cfg.total_iters

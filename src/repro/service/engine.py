@@ -37,7 +37,7 @@ Invariants:
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +58,7 @@ from repro.instances.deltas import ScatterPlan
 __all__ = [
     "RawSolve",
     "compiled_solver",
+    "compiled_solver_fixed_sigma",
     "compiled_batch_solver",
     "to_solve_result",
     "to_solve_results",
@@ -85,18 +86,30 @@ def _raw_solve(
     lam0: jax.Array,
     cfg: MaximizerConfig,
     normalize: bool,
+    fused_oracle: bool = False,
+    sigma_sq: Optional[jax.Array] = None,
 ) -> RawSolve:
-    """Full continuation solve as a pure traced function of the instance."""
+    """Full continuation solve as a pure traced function of the instance.
+
+    ``sigma_sq=None`` runs the power iteration (~cfg.power_iters oracle
+    calls); a traced scalar skips it and reuses the caller's estimate — the
+    warm-cadence path (`SolveSession`) passes the previous solve's value when
+    the coefficients haven't drifted, since sigma_max(A) is a function of A
+    alone (see `compiled_solver_fixed_sigma`).
+    """
     if normalize:
         # Jacobi preconditioning applied device-side each solve, so the
         # delta-mutated raw slabs never need a host-side re-normalization
         inst, _ = normalize_rows_traced(inst)
-    obj = MatchingObjective(inst)
+    obj = MatchingObjective(inst, fused_oracle=fused_oracle)
 
     def calc(lam, gamma, comm):
         return obj.calculate(lam, gamma), comm
 
-    sigma_sq = obj.power_iteration(jax.random.key(cfg.seed), iters=cfg.power_iters)
+    if sigma_sq is None:
+        sigma_sq = obj.power_iteration(
+            jax.random.key(cfg.seed), iters=cfg.power_iters
+        )
     lam = lam0
     stats: list[StageStats] = []
     etas: list[jax.Array] = []
@@ -140,35 +153,68 @@ def _raw_solve(
     )
 
 
-# One compiled entry point per (MaximizerConfig, normalize) pair (the config
-# is a hashable frozen dataclass); within each, XLA's jit cache keys
-# executables on the instance's bucket shapes.  Shared process-wide across
-# sessions, schedulers and pools.
+# One compiled entry point per (MaximizerConfig, normalize, fused_oracle)
+# tuple (the config is a hashable frozen dataclass); within each, XLA's jit
+# cache keys executables on the instance's bucket shapes.  Shared
+# process-wide across sessions, schedulers and pools.
 _SINGLE: dict[tuple, object] = {}
+_SINGLE_SIGMA: dict[tuple, object] = {}
 _BATCH: dict[tuple, object] = {}
 
 
-def compiled_solver(cfg: MaximizerConfig, normalize: bool = False):
+def compiled_solver(
+    cfg: MaximizerConfig, normalize: bool = False, fused_oracle: bool = False
+):
     """Jitted `(instance, lam0) -> RawSolve` for one tenant."""
-    key = (cfg, normalize)
+    key = (cfg, normalize, fused_oracle)
     fn = _SINGLE.get(key)
     if fn is None:
-        fn = jax.jit(lambda inst, lam0: _raw_solve(inst, lam0, cfg, normalize))
+        fn = jax.jit(
+            lambda inst, lam0: _raw_solve(inst, lam0, cfg, normalize, fused_oracle)
+        )
         _SINGLE[key] = fn
     return fn
 
 
-def compiled_batch_solver(cfg: MaximizerConfig, normalize: bool = False):
+def compiled_solver_fixed_sigma(
+    cfg: MaximizerConfig, normalize: bool = False, fused_oracle: bool = False
+):
+    """Jitted `(instance, lam0, sigma_sq) -> RawSolve` skipping power iteration.
+
+    The power iteration costs ~`cfg.power_iters` (default 30) oracle calls
+    per solve, each a full pass over every slab — a large fraction of a warm
+    cadence's total work.  sigma_max(A) depends only on the coefficients, so
+    when a cadence's drift is below the session's threshold the previous
+    estimate is still (approximately) valid and the warm solve skips the
+    recomputation entirely.  `RawSolve.sigma_sq` echoes the passed value.
+    """
+    key = (cfg, normalize, fused_oracle)
+    fn = _SINGLE_SIGMA.get(key)
+    if fn is None:
+        fn = jax.jit(
+            lambda inst, lam0, sigma_sq: _raw_solve(
+                inst, lam0, cfg, normalize, fused_oracle, sigma_sq=sigma_sq
+            )
+        )
+        _SINGLE_SIGMA[key] = fn
+    return fn
+
+
+def compiled_batch_solver(
+    cfg: MaximizerConfig, normalize: bool = False, fused_oracle: bool = False
+):
     """Jitted, vmapped `(stacked_instance, lam0s[B, :]) -> RawSolve` pool kernel.
 
     All per-stage work runs lockstep across the tenant batch; with early
     stopping enabled the batch exits a stage once *every* tenant has converged.
     """
-    key = (cfg, normalize)
+    key = (cfg, normalize, fused_oracle)
     fn = _BATCH.get(key)
     if fn is None:
         fn = jax.jit(
-            jax.vmap(lambda inst, lam0: _raw_solve(inst, lam0, cfg, normalize))
+            jax.vmap(
+                lambda inst, lam0: _raw_solve(inst, lam0, cfg, normalize, fused_oracle)
+            )
         )
         _BATCH[key] = fn
     return fn
@@ -216,21 +262,45 @@ def device_put_instance(inst: BucketedInstance) -> BucketedInstance:
     return jax.tree.map(jnp.asarray, inst)
 
 
+def _expand_runs(op) -> tuple[jax.Array, jax.Array]:
+    """Device-side expansion of a BucketScatter's run encoding to cell coords.
+
+    Only the [R] run descriptors are uploaded; the per-cell (rows, slots)
+    addresses are rebuilt on device with shape-static `jnp.repeat`
+    (total_repeat_length = num_cells, known on host), so index transfer is
+    O(runs) while the scatter itself stays per-cell.
+    """
+    k = op.num_cells
+    run_rows = jnp.asarray(op.run_rows)
+    run_slots = jnp.asarray(op.run_slots)
+    run_lengths = jnp.asarray(op.run_lengths)
+    run_of = jnp.repeat(
+        jnp.arange(run_rows.size, dtype=jnp.int32),
+        run_lengths,
+        total_repeat_length=k,
+    )
+    starts = jnp.cumsum(run_lengths) - run_lengths
+    rows = run_rows[run_of]
+    slots = run_slots[run_of] + (jnp.arange(k, dtype=jnp.int32) - starts[run_of])
+    return rows, slots
+
+
 def apply_scatter_plan(
     inst: BucketedInstance, plan: ScatterPlan
 ) -> BucketedInstance:
     """Replay one `ScatterPlan` on device-resident slabs with `.at[].set`.
 
-    Only the plan's compact index/value arrays cross the host→device boundary;
-    the slabs themselves never round-trip.  Touched cells receive the exact
-    host-slab values the plan carries, so the result is bit-for-bit equal to
-    re-uploading the mutated host slabs — at O(delta) instead of O(nnz) cost.
+    Only the plan's compact run/value arrays cross the host→device boundary
+    (contiguous slot spans are run-length encoded; see
+    `instances.deltas.BucketScatter`); the slabs themselves never round-trip.
+    Touched cells receive the exact host-slab values the plan carries, so the
+    result is bit-for-bit equal to re-uploading the mutated host slabs — at
+    O(delta) instead of O(nnz) cost.
     """
     buckets = list(inst.buckets)
     for op in plan.ops:
         b = buckets[op.bucket]
-        rows = jnp.asarray(op.rows)
-        slots = jnp.asarray(op.slots)
+        rows, slots = _expand_runs(op)
         buckets[op.bucket] = Bucket(
             idx=jnp.asarray(b.idx).at[rows, slots].set(jnp.asarray(op.idx)),
             coeff=jnp.asarray(b.coeff).at[:, rows, slots].set(
@@ -254,11 +324,16 @@ def instance_nbytes(inst: BucketedInstance) -> int:
 def compile_cache_report() -> dict[str, int]:
     """Number of compiled executables per entry point (shape-keyed reuse)."""
     report = {}
-    for name, cache in (("single", _SINGLE), ("batch", _BATCH)):
-        for (cfg, normalize), fn in cache.items():
+    for name, cache in (
+        ("single", _SINGLE),
+        ("single_sigma", _SINGLE_SIGMA),
+        ("batch", _BATCH),
+    ):
+        for (cfg, normalize, fused_oracle), fn in cache.items():
             key = (
                 f"{name}:gammas={cfg.gammas},iters={cfg.iters_per_stage},"
-                f"tol=({cfg.tol_grad},{cfg.tol_viol}),norm={normalize}"
+                f"tol=({cfg.tol_grad},{cfg.tol_viol}),norm={normalize},"
+                f"fused={fused_oracle}"
             )
             try:
                 report[key] = fn._cache_size()

@@ -89,6 +89,9 @@ class BatchedSolvePool:
     config: MaximizerConfig = dataclasses.field(default_factory=MaximizerConfig)
     # device-side Jacobi row normalization inside the solve (see engine)
     normalize: bool = False
+    # one-pass fused dual oracle inside the vmapped solve (see engine);
+    # vmap adds the tenant axis outside the per-bucket oracle launches
+    fused_oracle: bool = False
 
     def solve_async(
         self,
@@ -117,7 +120,7 @@ class BatchedSolvePool:
                 raise ValueError(
                     f"lam0s[{i}] has shape {r.shape}, expected ({dual_dim},)"
                 )
-        return compiled_batch_solver(self.config, self.normalize)(
+        return compiled_batch_solver(self.config, self.normalize, self.fused_oracle)(
             stacked, jnp.stack(rows)
         )
 

@@ -45,7 +45,6 @@ from repro.instances.deltas import DeltaReport, InstanceDelta
 from repro.instances.generator import EdgeListInstance
 from repro.service.engine import (
     compile_cache_report,
-    compiled_solver,
     to_solve_result,
 )
 from repro.service.pool import BatchedSolvePool, shape_signature
@@ -126,26 +125,32 @@ class Scheduler:
         for name, s in self.sessions.items():
             cold, reason, lam0 = s._start_state(force_cold)
             # Snapshot NOW everything absorb will need after the fence: the
-            # cost drift drained for THIS cadence and a primal unpacker
-            # frozen over this generation's occupancy maps.  Deltas ingested
-            # during the overlap then cannot be attributed to — or corrupt
-            # the drift metering of — the in-flight solve.
+            # cost drift drained for THIS cadence, a primal unpacker frozen
+            # over this generation's occupancy maps, and the sigma dirty
+            # count the solve's A corresponds to.  Deltas ingested during
+            # the overlap then cannot be attributed to — or corrupt the
+            # drift metering / sigma-cache validity of — the in-flight solve.
             starts[name] = (
                 cold,
                 reason,
                 lam0,
                 s.ingestor.drain_cost_drift(),
                 s.ingestor.primal_unpacker(),
+                s._dirty_count,
             )
             key = (shape_signature(s.instance()), cold)
             groups.setdefault(key, []).append(name)
 
         batched: list[tuple[list[str], bool, Any]] = []
-        solo: list[tuple[str, bool, Any]] = []
+        solo: list[tuple[str, bool, Any, bool]] = []
         for (_, cold), names in groups.items():
             cfg = self.config.cold if cold else self.config.warm
             if len(names) >= self.batch_min:
-                pool = BatchedSolvePool(cfg, normalize=self.config.normalize)
+                pool = BatchedSolvePool(
+                    cfg,
+                    normalize=self.config.normalize,
+                    fused_oracle=self.config.fused_oracle,
+                )
                 raw = pool.solve_async(
                     [self.sessions[n].device_instance() for n in names],
                     [starts[n][2] for n in names],
@@ -153,10 +158,13 @@ class Scheduler:
                 batched.append((list(names), cold, raw))
             else:
                 for name in names:
-                    raw = compiled_solver(cfg, self.config.normalize)(
-                        self.sessions[name].device_instance(), starts[name][2]
+                    # dispatch_raw owns the per-tenant power-iteration skip
+                    # on quiet warm cadences (the batched pool always
+                    # recomputes — see ROADMAP)
+                    raw, reuse = self.sessions[name].dispatch_raw(
+                        cfg, starts[name][2], starts[name][3], cold=cold
                     )
-                    solo.append((name, cold, raw))
+                    solo.append((name, cold, raw, reuse))
         return batched, solo, starts
 
     @staticmethod
@@ -164,7 +172,7 @@ class Scheduler:
         """Block until every dispatched solve's device work is complete."""
         batched, solo, _ = dispatched
         jax.block_until_ready(
-            [raw for _, _, raw in batched] + [raw for _, _, raw in solo]
+            [raw for _, _, raw in batched] + [raw for _, _, raw, _ in solo]
         )
 
     def _absorb(self, dispatched):
@@ -183,8 +191,9 @@ class Scheduler:
                     batched=True,
                     dc_norm=starts[name][3],
                     unpack=starts[name][4],
+                    dirty_count=starts[name][5],
                 )
-        for name, cold, raw in solo:
+        for name, cold, raw, sigma_reused in solo:
             solo_names.append(name)
             reports[name] = self.sessions[name].absorb(
                 to_solve_result(raw),
@@ -193,6 +202,8 @@ class Scheduler:
                 batched=False,
                 dc_norm=starts[name][3],
                 unpack=starts[name][4],
+                sigma_reused=sigma_reused,
+                dirty_count=starts[name][5],
             )
         return reports, batched_groups, solo_names
 

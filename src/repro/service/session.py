@@ -51,6 +51,7 @@ from repro.instances.generator import EdgeListInstance
 from repro.service.engine import (
     apply_scatter_plan,
     compiled_solver,
+    compiled_solver_fixed_sigma,
     device_put_instance,
     instance_nbytes,
     to_solve_result,
@@ -81,6 +82,23 @@ class ServiceConfig:
     # solve (normalize_rows_traced) — the paper's preconditioning without a
     # host-side O(nnz) repack per cadence.
     normalize: bool = True
+    # One-pass fused dual oracle inside every compiled solve (see
+    # core.objective.MatchingObjective.fused_oracle): each AGD iteration
+    # reads every slab once instead of ~3x.  Off-TPU this routes through the
+    # fused reference oracle; results match the unfused path to fp32 noise.
+    fused_oracle: bool = False
+    # Warm cadences whose ingested cost drift ||dc|| is at or below this
+    # threshold reuse the previous solve's sigma_max(A)^2 estimate instead of
+    # re-running the ~power_iters-oracle-call power iteration.  sigma_max(A)
+    # is a function of the coefficients alone, so reuse additionally requires
+    # that no delta since the estimate touched A: any insert/delete,
+    # coefficient update, or re-bucketize marks the cache dirty and forces a
+    # recompute (cost-only updates — the common quiet cadence — keep it
+    # valid; dc_norm then only gates how quiet the cadence was).  Cold starts
+    # always recompute.  None disables reuse.  Honored by the synchronous
+    # `SolveSession.solve` and the scheduler's solo dispatch path; the
+    # batched (vmapped) pool always recomputes (see ROADMAP).
+    sigma_reuse_dc_threshold: Optional[float] = None
     # Packing knobs forwarded to each tenant's DeltaIngestor.
     row_headroom: int = 8
     min_length: int = 1
@@ -130,6 +148,16 @@ class SolveSession:
         # What the last device sync transferred: {"mode": "full"|"scatter"|
         # "none", "bytes": int} — the benchmark's O(delta)-vs-O(nnz) evidence.
         self.last_transfer: Optional[dict[str, Any]] = None
+        # Previous solve's sigma_max(A)^2 estimate for the warm-cadence
+        # power-iteration skip (sigma_reuse_dc_threshold).  `_dirty_count`
+        # increments on every ingested delta that touches A (inserts,
+        # deletes, coefficient updates, re-bucketizes); `_sigma_clean_at` is
+        # the count the stored estimate was computed under, snapshotted at
+        # dispatch time so the overlapped scheduler's ingest-during-solve
+        # cannot launder a stale estimate into validity.
+        self._sigma_sq: Optional[float] = None
+        self._dirty_count = 0
+        self._sigma_clean_at = -1
 
     # -- cadence inputs ------------------------------------------------------
 
@@ -193,7 +221,51 @@ class SolveSession:
             # copy is unsalvageable — force a full re-upload on next access
             self._device_inst = None
             self._pending_plans = []
+        # Anything that touches the coefficients of A invalidates the cached
+        # sigma_max estimate: structural edits (insert/delete change the
+        # sparsity), coefficient updates (which meter NO cost drift, so
+        # dc_norm alone would be blind to them), and re-bucketizes.
+        # Cost-only updates leave A — and therefore sigma — untouched.
+        if (
+            rep.rebucketized
+            or rep.n_insert
+            or rep.n_delete
+            or delta.update_coeff is not None
+        ):
+            self._dirty_count += 1
         return rep
+
+    def sigma_reuse_ready(self, dc_norm: float) -> bool:
+        """True iff the next solve may skip the power iteration: a cached
+        estimate exists, no A-touching delta landed since it was computed,
+        and this cadence's cost drift is within the configured threshold."""
+        thr = self.config.sigma_reuse_dc_threshold
+        return (
+            thr is not None
+            and self._sigma_sq is not None
+            and self._sigma_clean_at == self._dirty_count
+            and dc_norm <= thr
+        )
+
+    def dispatch_raw(self, cfg, lam0, dc_norm: float, *, cold: bool):
+        """Dispatch one compiled solve of the device-resident instance.
+
+        The single site choosing between the fixed-sigma entry point
+        (power-iteration skip, `sigma_reuse_ready`) and the full solver —
+        both the synchronous `solve()` and the scheduler's solo dispatch go
+        through here, so the reuse gating cannot drift between them.
+        Returns `(RawSolve device futures, sigma_reused)`.
+        """
+        reuse = not cold and self.sigma_reuse_ready(dc_norm)
+        if reuse:
+            raw = compiled_solver_fixed_sigma(
+                cfg, self.config.normalize, self.config.fused_oracle
+            )(self.device_instance(), lam0, jnp.float32(self._sigma_sq))
+        else:
+            raw = compiled_solver(
+                cfg, self.config.normalize, self.config.fused_oracle
+            )(self.device_instance(), lam0)
+        return raw, reuse
 
     # -- solve ---------------------------------------------------------------
 
@@ -219,14 +291,21 @@ class SolveSession:
 
         Solves against the device-resident slabs (`device_instance`), so the
         per-cadence transfer is the pending scatter plans, not the slabs.
+        Warm cadences below `sigma_reuse_dc_threshold` additionally skip the
+        power iteration by reusing the previous solve's sigma_max estimate
+        (`compiled_solver_fixed_sigma`); the report says so (`sigma_reused`).
         """
         cold, reason, lam0 = self._start_state(force_cold)
         cfg = self.config.cold if cold else self.config.warm
-        raw = compiled_solver(cfg, self.config.normalize)(
-            self.device_instance(), lam0
-        )
+        dc_norm = self.ingestor.drain_cost_drift()
+        dirty_count = self._dirty_count  # A-state the solve runs against
+        raw, reuse_sigma = self.dispatch_raw(cfg, lam0, dc_norm, cold=cold)
         res = to_solve_result(raw)
-        report = self.absorb(res, cold=cold, cold_reason=reason, batched=False)
+        report = self.absorb(
+            res, cold=cold, cold_reason=reason, batched=False,
+            dc_norm=dc_norm, sigma_reused=reuse_sigma,
+            dirty_count=dirty_count,
+        )
         return res, report
 
     def absorb(
@@ -238,6 +317,8 @@ class SolveSession:
         batched: bool,
         dc_norm: Optional[float] = None,
         unpack=None,
+        sigma_reused: bool = False,
+        dirty_count: Optional[int] = None,
     ) -> dict[str, Any]:
         """Fold a finished solve (own or pool-produced) into session state.
 
@@ -266,6 +347,7 @@ class SolveSession:
             "max_violation": float(res.stats[-1].max_violation[-1]),
             "gamma_floor": gamma_floor,
             "dc_norm": dc_norm,
+            "sigma_reused": sigma_reused,
             "upload_mode": (
                 self.last_transfer["mode"] if self.last_transfer else None
             ),
@@ -300,6 +382,15 @@ class SolveSession:
                 )
         self.lam_prev = res.lam
         self.prev_primal = (keys, x)
+        # The solve's sigma estimate (recomputed or echoed) corresponds to
+        # the A captured at dispatch time — the caller's `dirty_count`
+        # snapshot.  Under the overlapped pipeline a later cadence's
+        # A-touching delta may have landed meanwhile; tagging with the
+        # dispatch-time count (rather than the current one) keeps such an
+        # estimate marked stale.  Callers that cannot snapshot pass None and
+        # the estimate is stored but never considered clean.
+        self._sigma_sq = float(res.sigma_sq)
+        self._sigma_clean_at = -1 if dirty_count is None else dirty_count
         self.cadence += 1
         self.last_report = report
         return report
@@ -323,7 +414,10 @@ class SolveSession:
             "ingestor": ing_meta,
             "has_lam": self.lam_prev is not None,
             "has_primal": self.prev_primal is not None,
+            "sigma_clean": bool(self._sigma_clean_at == self._dirty_count),
         }
+        if self._sigma_sq is not None:
+            arrays["sigma_sq"] = np.asarray(self._sigma_sq, np.float64)
         if self.lam_prev is not None:
             arrays["lam_prev"] = np.asarray(self.lam_prev)
         if self.prev_primal is not None:
@@ -365,6 +459,12 @@ class SolveSession:
         self._device_generation = -1
         self._pending_plans = []
         self.last_transfer = None
+        # older checkpoints carry no sigma cache: resume with a recompute
+        self._sigma_sq = (
+            float(arrays["sigma_sq"]) if "sigma_sq" in arrays else None
+        )
+        self._dirty_count = 0
+        self._sigma_clean_at = 0 if meta.get("sigma_clean", False) else -1
         return self
 
 

@@ -298,6 +298,55 @@ def test_scatter_plan_matches_host_apply_on_numpy_copy():
     np.testing.assert_array_equal(pre_rhs, np.asarray(ing.instance().rhs))
 
 
+def test_scatter_plan_run_compaction():
+    """Contiguous slot spans compress to runs; expansion reproduces the cells.
+
+    A row move rewrites ``[0, d)`` of the old and new rows — exactly the
+    high-degree case run-length encoding is for: the plan's index overhead
+    must be O(runs), far below O(cells), while the expanded `rows`/`slots`
+    views stay unique, row-major sorted, and bit-for-bit replayable.
+    """
+    rng = np.random.default_rng(53)
+    base = _instance(seed=53, I=60, J=40, m=1)
+    ing = DeltaIngestor(base, row_headroom=8)
+    # grow a low-degree source past its bucket width (but within the widest
+    # bucket): the move rewrites its whole [0, d) span in two buckets
+    widest = max(b.length for b in ing.instance().buckets)
+    deg = ing.deg
+    candidates = np.flatnonzero((deg >= 3) & (deg <= widest // 2))
+    assert candidates.size, "seed produced no movable source"
+    s = int(candidates[np.argmax(deg[candidates])])
+    have = set(base.dst[base.src == s].tolist())
+    grow = int(2 ** np.ceil(np.log2(deg[s])) + 1 - deg[s])  # past next pow2
+    new_d = [d for d in range(40) if d not in have][:grow]
+    rep = ing.apply(
+        InstanceDelta(
+            insert_src=[s] * len(new_d), insert_dst=new_d,
+            insert_values=np.ones(len(new_d)),
+            insert_coeff=np.ones((1, len(new_d))),
+        )
+    )
+    assert rep.in_place and rep.moved_rows >= 1
+    plan = rep.plan
+    assert plan.num_runs < plan.num_cells
+    for op in plan.ops:
+        rows, slots = op.rows, op.slots
+        assert rows.size == op.num_cells == op.idx.size
+        # unique, row-major sorted cells (the .at[].set determinism invariant)
+        order = np.lexsort((slots, rows))
+        np.testing.assert_array_equal(order, np.arange(rows.size))
+        cells = set(zip(rows.tolist(), slots.tolist()))
+        assert len(cells) == rows.size
+        # each run covers consecutive slots of one row
+        np.testing.assert_array_equal(
+            np.repeat(op.run_rows, op.run_lengths), rows
+        )
+    # the run-encoded index payload beats per-cell (rows + slots) encoding
+    per_cell_index_bytes = 2 * 4 * plan.num_cells
+    run_index_bytes = 3 * 4 * plan.num_runs
+    assert run_index_bytes < per_cell_index_bytes
+
+
 def test_generation_counter_and_plan_bytes():
     rng = np.random.default_rng(37)
     base = _instance(seed=37, m=1)

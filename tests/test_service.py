@@ -410,3 +410,144 @@ def test_rejected_delta_mid_overlap_leaks_nothing():
     for t in ("t1", "t2", "t3"):
         assert t in outs[1].ingest
         assert outs[1].reports[t]["g"] == ref_outs[1].reports[t]["g"]
+
+
+# -- power-iteration reuse + fused oracle ------------------------------------
+
+
+def test_sigma_reuse_on_quiet_warm_cadence():
+    """Sub-threshold drift: the warm solve reuses yesterday's sigma_sq
+    (skipping the power iteration) with the same solution quality; large
+    drift and re-bucketizes recompute."""
+    rng = np.random.default_rng(7)
+    cfg = dataclasses.replace(SERVICE, sigma_reuse_dc_threshold=1.0)
+    sess = SolveSession("t0", BASE, cfg)
+    res0, rep0 = sess.solve()
+    assert rep0["sigma_reused"] is False  # cold always recomputes
+    # tiny cost perturbation -> dc below threshold -> reuse
+    sess.ingest(_perturb_delta(BASE, rng, frac=0.02))
+    assert sess.last_ingest.in_place
+    res1, rep1 = sess.solve()
+    assert rep1["mode"] == "warm" and rep1["dc_norm"] <= 1.0
+    assert rep1["sigma_reused"] is True
+    assert float(res1.sigma_sq) == float(res0.sigma_sq)  # echoed, not recomputed
+    # the reused-sigma solve still reaches the non-reuse solution
+    twin = SolveSession("twin", BASE, SERVICE)
+    twin.solve()
+    twin.ingest(_perturb_delta(generate_matching_instance(SPEC),
+                               np.random.default_rng(7), frac=0.02))
+    res_ref, rep_ref = twin.solve()
+    assert rep_ref["sigma_reused"] is False
+    rel = abs(rep1["g"] - rep_ref["g"]) / max(abs(rep_ref["g"]), 1e-9)
+    assert rel < 1e-3, (rep1["g"], rep_ref["g"])
+    # large drift -> recompute
+    big = InstanceDelta(
+        update_src=BASE.src[:1], update_dst=BASE.dst[:1],
+        update_values=[float(BASE.values[0]) + 100.0],
+    )
+    sess.ingest(big)
+    _, rep2 = sess.solve()
+    assert rep2["sigma_reused"] is False and rep2["dc_norm"] > 1.0
+    # next quiet cadence reuses again (sigma refreshed by the recompute)
+    sess.ingest(_perturb_delta(sess.ingestor.to_edge_list(), rng, frac=0.02))
+    if sess.last_ingest.in_place:
+        _, rep3 = sess.solve()
+        assert rep3["sigma_reused"] is True
+
+
+def test_sigma_reuse_disabled_without_threshold():
+    rng = np.random.default_rng(11)
+    sess = SolveSession("t0", BASE, SERVICE)  # threshold None
+    sess.solve()
+    sess.ingest(_perturb_delta(BASE, rng, frac=0.02))
+    _, rep = sess.solve()
+    assert rep["mode"] == "warm" and rep["sigma_reused"] is False
+
+
+def test_sigma_reuse_survives_checkpoint_roundtrip():
+    rng = np.random.default_rng(13)
+    cfg = dataclasses.replace(SERVICE, sigma_reuse_dc_threshold=1.0)
+    sess = SolveSession("t0", BASE, cfg)
+    sess.solve()
+    arrays, meta = sess.state_dict()
+    back = SolveSession.from_state(cfg, arrays, meta)
+    back.ingest(_perturb_delta(BASE, rng, frac=0.02))
+    _, rep = back.solve()
+    assert rep["mode"] == "warm"
+    assert rep["sigma_reused"] is True  # sigma cache restored with the session
+
+
+def test_session_fused_oracle_matches_unfused():
+    """ServiceConfig.fused_oracle: same cadence trajectory as the unfused
+    engine (identical off-TPU, where the oracle dispatches to the fused
+    reference path)."""
+    rng = np.random.default_rng(17)
+    a = SolveSession("a", BASE, SERVICE)
+    b = SolveSession(
+        "b", BASE, dataclasses.replace(SERVICE, fused_oracle=True)
+    )
+    _, rep_a0 = a.solve()
+    _, rep_b0 = b.solve()
+    assert rep_a0["g"] == rep_b0["g"]
+    delta = _perturb_delta(BASE, rng)
+    a.ingest(delta)
+    b.ingest(delta)
+    _, rep_a1 = a.solve()
+    _, rep_b1 = b.solve()
+    assert rep_a1["mode"] == rep_b1["mode"] == "warm"
+    assert rep_a1["g"] == rep_b1["g"]
+    assert rep_a1["iters_used"] == rep_b1["iters_used"]
+
+
+def test_batched_pool_fused_oracle_matches_sequential():
+    """vmapped fused-oracle pool == per-tenant unfused solves."""
+    insts = _tenant_instances(3)
+    cfg = MaximizerConfig(iters_per_stage=60)
+    pool = BatchedSolvePool(cfg, fused_oracle=True)
+    batch = pool.solve(insts)
+    z = np.zeros(insts[0].dual_dim, np.float32)
+    for inst, rb in zip(insts, batch):
+        solo = to_solve_result(compiled_solver(cfg)(inst, z))
+        rel = abs(float(rb.g) - float(solo.g)) / max(abs(float(solo.g)), 1e-9)
+        assert rel < 1e-3, (float(rb.g), float(solo.g))
+        np.testing.assert_allclose(
+            np.asarray(rb.lam), np.asarray(solo.lam), atol=5e-2
+        )
+
+
+def test_sigma_reuse_invalidated_by_coeff_and_structural_edits():
+    """Coefficient updates meter no cost drift but DO change A: they (and
+    inserts/deletes) must invalidate the sigma cache even at dc_norm ~ 0."""
+    cfg = dataclasses.replace(SERVICE, sigma_reuse_dc_threshold=1e6)
+    sess = SolveSession("t0", BASE, cfg)
+    sess.solve()
+    # coefficient-only update: dc_norm contribution is zero
+    sess.ingest(InstanceDelta(
+        update_src=BASE.src[:1], update_dst=BASE.dst[:1],
+        update_coeff=np.asarray([[7.5]]),
+    ))
+    assert sess.last_ingest.in_place
+    _, rep = sess.solve()
+    assert rep["mode"] == "warm"
+    assert rep["sigma_reused"] is False  # A changed -> recompute
+    # cost-only update afterwards: cache fresh again -> reuse
+    sess.ingest(InstanceDelta(
+        update_src=BASE.src[:1], update_dst=BASE.dst[:1],
+        update_values=[float(BASE.values[0]) + 0.01],
+    ))
+    _, rep2 = sess.solve()
+    assert rep2["sigma_reused"] is True
+
+
+def test_scheduler_solo_path_reuses_sigma():
+    """The scheduler's non-batched dispatch honors sigma_reuse_dc_threshold."""
+    rng = np.random.default_rng(19)
+    cfg = dataclasses.replace(SERVICE, sigma_reuse_dc_threshold=1e6)
+    sched = Scheduler(cfg)
+    sched.add_tenant("t0", BASE)  # single tenant -> always solo
+    out0 = sched.run_cadence()
+    assert out0.reports["t0"]["sigma_reused"] is False  # cold
+    out1 = sched.run_cadence({"t0": _perturb_delta(BASE, rng, frac=0.05)})
+    assert out1.solo_tenants == ["t0"]
+    assert out1.reports["t0"]["mode"] == "warm"
+    assert out1.reports["t0"]["sigma_reused"] is True
