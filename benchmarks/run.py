@@ -8,6 +8,12 @@ After the table2 suite runs, its oracle measurements are persisted to
 per-iteration hot path (fused one-pass dual oracle vs the unfused / legacy
 iterations, wall time + analytic HBM bytes/iter).  ``--quick`` shrinks every
 suite's sweep for the CI smoke step.
+
+``--bench-history h.jsonl`` additionally APPENDS one timestamped record per
+harness run in the telemetry JSONL schema (kind ``bench``; validate with
+``tools/check_metrics.py``): where BENCH_oracle.json is the latest snapshot,
+the history file accumulates the perf trajectory run over run — CI's
+bench-smoke step uploads it as an artifact.
 """
 from __future__ import annotations
 
@@ -61,6 +67,23 @@ def _write_oracle_bench(path: str) -> None:
     print(f"# wrote {path}", file=sys.stderr)
 
 
+def _append_bench_history(path: str, only: set, failures: int) -> None:
+    from benchmarks import common
+    from repro.telemetry import JsonlSink
+
+    with JsonlSink(path) as sink:
+        sink.emit("bench", {
+            "suite": ",".join(sorted(only)) if only else "all",
+            "quick": common.QUICK,
+            "failures": failures,
+            "results": [
+                {"name": name, "us_per_call": us, "derived": derived}
+                for name, us, derived in common.ROWS
+            ],
+        })
+    print(f"# appended bench record to {path}", file=sys.stderr)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
@@ -69,6 +92,9 @@ def main() -> int:
     ap.add_argument("--bench-out", default=_DEFAULT_BENCH_OUT,
                     help="where to write the oracle perf record "
                          "(empty string disables)")
+    ap.add_argument("--bench-history", default="",
+                    help="append one timestamped telemetry-schema JSONL "
+                         "record per run here (empty string disables)")
     args = ap.parse_args()
     if args.quick:
         from benchmarks import common
@@ -97,6 +123,8 @@ def main() -> int:
             traceback.print_exc()
     if args.bench_out:
         _write_oracle_bench(args.bench_out)
+    if args.bench_history:
+        _append_bench_history(args.bench_history, only, failures)
     return failures
 
 

@@ -28,6 +28,7 @@ from typing import Callable, NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.core.objective import DualEval, MatchingObjective
 
 __all__ = [
@@ -341,23 +342,25 @@ class Maximizer:
         lam = (
             jnp.zeros((obj.dual_dim,), jnp.float32) if lam0 is None else lam0
         )
-        sigma_sq = jax.jit(partial(obj.power_iteration, iters=cfg.power_iters))(
-            jax.random.key(cfg.seed)
-        )
+        with telemetry.span("power_iteration"):
+            sigma_sq = jax.jit(partial(obj.power_iteration, iters=cfg.power_iters))(
+                jax.random.key(cfg.seed)
+            )
         stats: list[StageStats] = []
         steps: list[float] = []
         iters_used: list[int] = []
-        for gamma in cfg.gammas:
+        for k, gamma in enumerate(cfg.gammas):
             eta = self.step_size(sigma_sq, gamma)
-            if cfg.early_stop:
-                lam, st, _, used = self._stage_fn(
-                    lam, jnp.asarray(gamma, lam.dtype), eta.astype(lam.dtype)
-                )
-                iters_used.append(int(used))
-            else:
-                lam, st, _ = self._stage_fn(
-                    lam, jnp.asarray(gamma, lam.dtype), eta.astype(lam.dtype)
-                )
+            with telemetry.span("stage", stage=k, gamma=float(gamma)):
+                if cfg.early_stop:
+                    lam, st, _, used = self._stage_fn(
+                        lam, jnp.asarray(gamma, lam.dtype), eta.astype(lam.dtype)
+                    )
+                    iters_used.append(int(used))
+                else:
+                    lam, st, _ = self._stage_fn(
+                        lam, jnp.asarray(gamma, lam.dtype), eta.astype(lam.dtype)
+                    )
             stats.append(st)
             steps.append(float(eta))
         final = jax.jit(obj.calculate)(lam, jnp.asarray(cfg.gammas[-1], lam.dtype))

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.maximizer import StageStats
 from repro.instances.generator import EdgeListInstance
 
 __all__ = ["COOLP", "PDHGConfig", "PDHGResult", "from_edge_list", "solve_pdhg"]
@@ -103,6 +104,15 @@ class PDHGResult(NamedTuple):
     primal_res: jax.Array
     dual_res: jax.Array
     converged: jax.Array
+    # Convergence-telemetry parity with core.maximizer.SolveResult: `stats` is
+    # a 1-tuple of StageStats at check_every resolution (g=primal objective,
+    # grad_norm=dual residual, max_violation=primal residual; entries past the
+    # last check backfilled with the final residuals), `iters_used` a 1-tuple
+    # of the iterations actually executed.  Both feed
+    # telemetry.ConvergenceTrace.from_result(engine="pdhg",
+    # trace_stride=check_every) unchanged.
+    stats: tuple = ()
+    iters_used: Optional[tuple[int, ...]] = None
 
 
 def _residuals(lp: COOLP, x, y):
@@ -126,9 +136,10 @@ def _residuals(lp: COOLP, x, y):
 
 
 @partial(jax.jit, static_argnames=("config",))
-def solve_pdhg(lp: COOLP, config: PDHGConfig = PDHGConfig()) -> PDHGResult:
+def _solve_pdhg_jit(lp: COOLP, config: PDHGConfig) -> PDHGResult:
     cfg = config
     n, R = lp.num_cols, lp.num_rows
+    n_checks = max(1, -(-cfg.max_iters // cfg.check_every))
 
     # ||K||_2 by power iteration
     v0 = jax.random.normal(jax.random.key(cfg.seed), (n,), jnp.float32)
@@ -152,6 +163,7 @@ def solve_pdhg(lp: COOLP, config: PDHGConfig = PDHGConfig()) -> PDHGResult:
         it: jax.Array
         done: jax.Array
         stats: tuple
+        bufs: tuple  # check-resolution (primal_obj, dual_res, primal_res)
 
     def cond(s: S):
         return jnp.logical_and(s.it < cfg.max_iters, jnp.logical_not(s.done))
@@ -179,7 +191,18 @@ def solve_pdhg(lp: COOLP, config: PDHGConfig = PDHGConfig()) -> PDHGResult:
             check,
             jnp.logical_and(gap < cfg.tol, jnp.logical_and(pr < cfg.tol, dr < cfg.tol)),
         )
-        return S(x2, y2, x_sum, y_sum, k, s.it + 1, done, (po, do_, gap, pr, dr))
+        # check-resolution trace buffers (AGD stats parity); idx addresses
+        # the check that iteration it+1 completes, clipped so the non-check
+        # branch's self-write is a no-op
+        idx = jnp.clip((s.it + 1) // cfg.check_every - 1, 0, n_checks - 1)
+        bg, bdr, bpr = s.bufs
+        bg = bg.at[idx].set(jnp.where(check, po, bg[idx]))
+        bdr = bdr.at[idx].set(jnp.where(check, dr, bdr[idx]))
+        bpr = bpr.at[idx].set(jnp.where(check, pr, bpr[idx]))
+        return S(
+            x2, y2, x_sum, y_sum, k, s.it + 1, done,
+            (po, do_, gap, pr, dr), (bg, bdr, bpr),
+        )
 
     zero_stats = tuple(jnp.asarray(jnp.inf, jnp.float32) for _ in range(5))
     init = S(
@@ -191,11 +214,32 @@ def solve_pdhg(lp: COOLP, config: PDHGConfig = PDHGConfig()) -> PDHGResult:
         it=jnp.asarray(0, jnp.int32),
         done=jnp.asarray(False),
         stats=zero_stats,
+        bufs=tuple(jnp.zeros((n_checks,), jnp.float32) for _ in range(3)),
     )
     s = jax.lax.while_loop(cond, body, init)
     po, do_, gap, pr, dr = _residuals(lp, s.x, s.y)
+    # backfill check slots the loop never reached with the final residuals —
+    # the same convention _stage_scan_early uses, so trace tails stay
+    # meaningful after an early exit
+    checks_done = s.it // cfg.check_every
+    pos = jnp.arange(n_checks)
+    bg, bdr, bpr = s.bufs
+    stats = StageStats(
+        g=jnp.where(pos < checks_done, bg, po),
+        grad_norm=jnp.where(pos < checks_done, bdr, dr),
+        max_violation=jnp.where(pos < checks_done, bpr, pr),
+    )
     return PDHGResult(
         x=s.x, y=s.y, iters=s.it, primal_obj=po, dual_obj=do_,
         rel_gap=gap, primal_res=pr, dual_res=dr,
         converged=jnp.logical_and(gap < cfg.tol, jnp.logical_and(pr < cfg.tol, dr < cfg.tol)),
+        stats=(stats,),
+        iters_used=None,
     )
+
+
+def solve_pdhg(lp: COOLP, config: PDHGConfig = PDHGConfig()) -> PDHGResult:
+    """Solve the COO LP; the host wrapper fills in `iters_used` (one scalar
+    host read after the solve completes — no per-iteration syncs)."""
+    res = _solve_pdhg_jit(lp, config)
+    return res._replace(iters_used=(int(res.iters),))

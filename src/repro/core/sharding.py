@@ -36,7 +36,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro import compat
+from repro import compat, telemetry
 from repro.core.maximizer import (
     MaximizerConfig,
     SolveResult,
@@ -317,17 +317,23 @@ class DistributedMaximizer:
 
     def solve(self, lam0: Optional[jax.Array] = None) -> SolveResult:
         cfg = self.config
+        shards = num_shards(self.mesh, self.dist)
         dual_dim = self.inst.dual_dim
         lam = jnp.zeros((dual_dim,), jnp.float32) if lam0 is None else lam0
         u0 = jax.random.normal(jax.random.key(cfg.seed), (dual_dim,), jnp.float32)
-        with compat.set_mesh(self.mesh):
-            sigma_sq = self._power_fn(u0, self.inst)
+        with telemetry.span(
+            "dist_solve", shards=shards, comm_mode=self.dist.comm_mode
+        ), compat.set_mesh(self.mesh):
+            with telemetry.span("power_iteration"):
+                sigma_sq = self._power_fn(u0, self.inst)
             stats, steps, used_stages = [], [], []
-            for gamma in cfg.gammas:
+            for k, gamma in enumerate(cfg.gammas):
                 eta = step_size(cfg, sigma_sq, gamma)
-                lam, st, used = self._stage_fn(
-                    lam, jnp.float32(gamma), eta.astype(jnp.float32), self.inst
-                )
+                with telemetry.span("stage", stage=k, gamma=float(gamma)):
+                    lam, st, used = self._stage_fn(
+                        lam, jnp.float32(gamma), eta.astype(jnp.float32),
+                        self.inst,
+                    )
                 stats.append(st)
                 steps.append(float(eta))
                 used_stages.append(used)
@@ -337,12 +343,24 @@ class DistributedMaximizer:
         # host-convert the per-stage counts only after every stage has been
         # dispatched — int() blocks on the stage's device result, and the
         # fixed-budget path should keep its dispatch pipelining
+        iters_used = (
+            tuple(int(u) for u in used_stages) if cfg.early_stop else None
+        )
+        reg = telemetry.get_registry()
+        reg.inc("dist_solves_total", 1, shards=shards)
+        if iters_used is not None:
+            # every shard votes once per check_every-chunk actually executed,
+            # and budget minus iters_used is the work early stopping skipped
+            checks = sum(-(-u // cfg.check_every) for u in iters_used)
+            reg.inc("dist_early_stop_checks_total", checks * shards)
+            reg.inc(
+                "dist_iters_saved_total",
+                sum(cfg.iters_per_stage - u for u in iters_used),
+            )
         return SolveResult(
             lam=lam, x_slabs=x_slabs, g=g, stats=tuple(stats),
             sigma_sq=sigma_sq, steps=tuple(steps),
-            iters_used=(
-                tuple(int(u) for u in used_stages) if cfg.early_stop else None
-            ),
+            iters_used=iters_used,
         )
 
     # -- dry-run hooks (launch/dryrun.py) ------------------------------------

@@ -63,6 +63,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro import telemetry
 from repro.instances.buckets import (
     Bucket,
     BucketedInstance,
@@ -323,6 +324,9 @@ class DeltaIngestor:
         self.min_length = int(min_length)
         self.row_headroom = int(row_headroom)
         self.dtype = dtype
+        # Label for this ingestor's telemetry series; the owning session sets
+        # it to its tenant name ("" keeps standalone ingestors unlabelled).
+        self.telemetry_tenant = ""
         self._rhs64 = np.asarray(inst.rhs, np.float64).copy()
         # ||Delta c||^2 accumulated since the last drain — feeds the paper's
         # gamma drift bound (core.stability.drift_bound) in SLA reports.
@@ -549,6 +553,7 @@ class DeltaIngestor:
         self._pending_dc_sq = float(arrays["pending_dc_sq"])
         self.generation = int(arrays["generation"])
         self._touched = None
+        self.telemetry_tenant = ""
         lengths = [int(L) for L in meta["lengths"]]
         buckets, sids, free = [], [], []
         for t, L in enumerate(lengths):
@@ -594,6 +599,35 @@ class DeltaIngestor:
         applies return a `DeltaReport` whose ``plan`` replays the exact slab
         edits on any copy of the pre-delta slabs (see `ScatterPlan`).
         """
+        reg = telemetry.get_registry()
+        tenant = self.telemetry_tenant
+        try:
+            report = self._apply(delta)
+        except (ValueError, KeyError):
+            reg.inc("delta_rejections_total", 1, tenant=tenant)
+            raise
+        path = "in_place" if report.in_place else "rebucketize"
+        reg.inc("deltas_applied_total", 1, tenant=tenant, path=path)
+        if report.n_insert:
+            reg.inc("delta_edits_total", report.n_insert, op="insert")
+        if report.n_delete:
+            reg.inc("delta_edits_total", report.n_delete, op="delete")
+        if report.n_update:
+            reg.inc("delta_edits_total", report.n_update, op="update")
+        if report.rebucketized:
+            reg.inc("delta_rebucketize_total", 1, tenant=tenant)
+        if report.plan is not None:
+            reg.inc(
+                "scatter_bytes_total", report.plan.nbytes, tenant=tenant
+            )
+            reg.inc(
+                "scatter_cells_total", report.plan.num_cells, tenant=tenant
+            )
+        if report.moved_rows:
+            reg.inc("delta_moved_rows_total", report.moved_rows, tenant=tenant)
+        return report
+
+    def _apply(self, delta: InstanceDelta) -> DeltaReport:
         self._validate(delta)
         self._precheck(delta)
         plan_or_reason = self._plan_moves(delta)

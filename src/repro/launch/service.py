@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.service \
         [--sources 2000] [--tenants 4] [--cadences 3] [--verify] \
-        [--checkpoint-dir ckpts/service] [--resume] [--dry-run]
+        [--checkpoint-dir ckpts/service] [--resume] [--dry-run] \
+        [--metrics-out m.jsonl] [--trace-out t.json] [--prom-out m.prom]
 
 Simulates a production serving loop: N tenants share one eligibility topology
 (so their packed shapes match and the scheduler batches them into ONE vmapped
@@ -26,6 +27,17 @@ prove the quickstart snippet stays executable.
 delta-updated solve against a cold full-budget solve of the same mutated
 instance (same final objective/violation, fewer iterations) and the batched
 pool against sequential per-tenant solves.
+
+Telemetry exports (see docs/observability.md):
+
+  * `--metrics-out m.jsonl` appends schema-validated JSONL records (one
+    `cadence` per scheduler cadence, one `solve_report` + `convergence` per
+    tenant solve, one `ingest` per delta, a final `counters` snapshot) —
+    validate with `python tools/check_metrics.py m.jsonl`;
+  * `--trace-out t.json` writes a Chrome-trace-event file of the nested
+    cadence→solve spans, loadable in Perfetto / chrome://tracing;
+  * `--prom-out m.prom` writes a Prometheus text-exposition snapshot of the
+    metrics registry.
 """
 from __future__ import annotations
 
@@ -98,10 +110,18 @@ def main() -> int:
     ap.add_argument("--dry-run", action="store_true",
                     help="build the fleet and ingest one delta per tenant "
                          "(print scatter-plan sizes) without solving")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append telemetry JSONL records here "
+                         "(schema: repro.telemetry.SCHEMA)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace-event (Perfetto) span file")
+    ap.add_argument("--prom-out", default=None,
+                    help="write a Prometheus text-exposition snapshot")
     args = ap.parse_args()
 
     import numpy as np
 
+    from repro import telemetry
     from repro.core import MaximizerConfig
     from repro.instances import MatchingInstanceSpec, generate_matching_instance
     from repro.service import (
@@ -138,6 +158,60 @@ def main() -> int:
     )
     sched = Scheduler(cfg)
 
+    sink = telemetry.JsonlSink(args.metrics_out) if args.metrics_out else None
+
+    def emit_ingest(name, rep):
+        if sink is None or rep is None:
+            return
+        sink.emit("ingest", {
+            "tenant": name,
+            "in_place": rep.in_place,
+            "n_insert": rep.n_insert,
+            "n_delete": rep.n_delete,
+            "n_update": rep.n_update,
+            "rebucketized": rep.rebucketized,
+            "plan_cells": None if rep.plan is None else rep.plan.num_cells,
+            "plan_bytes": None if rep.plan is None else rep.plan.nbytes,
+        })
+
+    def emit_cadence(cadence, out, wall):
+        if sink is None:
+            return
+        n = len(out.reports)
+        n_batched = sum(len(g) for g in out.batched_groups)
+        sink.emit("cadence", {
+            "cadence": cadence,
+            "tenants": n,
+            "batched_fraction": (n_batched / n) if n else 0.0,
+            "upload_bytes": sum(
+                r["upload_bytes"] or 0 for r in out.reports.values()
+            ),
+            "overlapped": False,
+            "wall_seconds": wall,
+        })
+        for name in sorted(out.reports):
+            r = out.reports[name]
+            sink.emit(
+                "solve_report",
+                {k: v for k, v in r.items() if k != "convergence"},
+            )
+            if r.get("convergence"):
+                sink.emit("convergence", r["convergence"])
+        for name, rep in out.ingest.items():
+            emit_ingest(name, rep)
+
+    def export_telemetry():
+        if sink is not None:
+            sink.emit_counters()
+            sink.close()
+            print(f"telemetry: metrics JSONL appended to {args.metrics_out}")
+        if args.trace_out:
+            telemetry.get_tracer().export_chrome_trace(args.trace_out)
+            print(f"telemetry: chrome trace written to {args.trace_out}")
+        if args.prom_out:
+            telemetry.write_prometheus(args.prom_out)
+            print(f"telemetry: prometheus snapshot written to {args.prom_out}")
+
     mgr = None
     start_cadence = 0
     if args.checkpoint_dir:
@@ -158,7 +232,11 @@ def main() -> int:
 
     if args.dry_run:
         for name, sess in sched.sessions.items():
-            rep = sess.ingest(_random_delta(sess.ingestor.to_edge_list(), rng))
+            with telemetry.span("dry_run_ingest", tenant=name):
+                rep = sess.ingest(
+                    _random_delta(sess.ingestor.to_edge_list(), rng)
+                )
+            emit_ingest(name, rep)
             plan = rep.plan
             print(
                 f"  {name}: delta +{rep.n_insert}/-{rep.n_delete}/~{rep.n_update}"
@@ -168,6 +246,7 @@ def main() -> int:
                 if plan is not None
                 else f"  {name}: re-bucketize fallback ({rep.fallback_reason})"
             )
+        export_telemetry()
         print("DRY-RUN OK (no solves executed)")
         return 0
 
@@ -179,6 +258,7 @@ def main() -> int:
         t0 = time.time()
         out = sched.run_cadence(deltas)
         dt = time.time() - t0
+        emit_cadence(cadence, out, dt)
         if mgr is not None:
             # async save: the write overlaps the next cadence; the final
             # mgr.wait() below keeps interpreter exit from killing the
@@ -215,6 +295,8 @@ def main() -> int:
 
     if mgr is not None:
         mgr.wait()  # flush the last async checkpoint before exiting
+
+    export_telemetry()
 
     if args.verify:
         print("\n-- verify: warm+early-stop vs cold full budget ----------------")

@@ -37,12 +37,15 @@ Invariants:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import time
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core.maximizer import (
     MaximizerConfig,
     SolveResult,
@@ -162,6 +165,51 @@ _SINGLE_SIGMA: dict[tuple, object] = {}
 _BATCH: dict[tuple, object] = {}
 
 
+def _shape_key(inst) -> str:
+    """Short stable digest of a pytree's leaf shapes — the compile-cache key
+    XLA re-keys executables on, rendered as a telemetry label."""
+    shapes = tuple(tuple(l.shape) for l in jax.tree.leaves(inst))
+    return hashlib.md5(repr(shapes).encode()).hexdigest()[:10]
+
+
+def _instrument(fn, entry: str):
+    """Wrap a jitted entry point with compile-cache hit/miss accounting.
+
+    jax traces + compiles synchronously inside the dispatching call, so when
+    the jit cache grows across a call its wall time is (almost entirely) the
+    trace+compile cost of the new shape key; cached dispatches are recorded
+    as hits.  The underlying jitted fn stays reachable (`_jit_fn`) for
+    `compile_cache_report` and `.lower()` users.
+    """
+
+    def wrapper(*args):
+        reg = telemetry.get_registry()
+        try:
+            before = fn._cache_size()
+        except AttributeError:
+            before = None
+        t0 = time.perf_counter()
+        out = fn(*args)
+        dt = time.perf_counter() - t0
+        try:
+            after = fn._cache_size()
+        except AttributeError:
+            after = None
+        if before is not None and after is not None and after > before:
+            key = _shape_key(args[0])
+            reg.inc("engine_compiles_total", 1, entry=entry)
+            reg.inc(
+                "engine_compile_seconds_total", dt, entry=entry, shapes=key
+            )
+            reg.observe("engine_compile_seconds", dt, entry=entry)
+        else:
+            reg.inc("engine_cache_hits_total", 1, entry=entry)
+        return out
+
+    wrapper._jit_fn = fn
+    return wrapper
+
+
 def compiled_solver(
     cfg: MaximizerConfig, normalize: bool = False, fused_oracle: bool = False
 ):
@@ -169,8 +217,13 @@ def compiled_solver(
     key = (cfg, normalize, fused_oracle)
     fn = _SINGLE.get(key)
     if fn is None:
-        fn = jax.jit(
-            lambda inst, lam0: _raw_solve(inst, lam0, cfg, normalize, fused_oracle)
+        fn = _instrument(
+            jax.jit(
+                lambda inst, lam0: _raw_solve(
+                    inst, lam0, cfg, normalize, fused_oracle
+                )
+            ),
+            "single",
         )
         _SINGLE[key] = fn
     return fn
@@ -191,10 +244,13 @@ def compiled_solver_fixed_sigma(
     key = (cfg, normalize, fused_oracle)
     fn = _SINGLE_SIGMA.get(key)
     if fn is None:
-        fn = jax.jit(
-            lambda inst, lam0, sigma_sq: _raw_solve(
-                inst, lam0, cfg, normalize, fused_oracle, sigma_sq=sigma_sq
-            )
+        fn = _instrument(
+            jax.jit(
+                lambda inst, lam0, sigma_sq: _raw_solve(
+                    inst, lam0, cfg, normalize, fused_oracle, sigma_sq=sigma_sq
+                )
+            ),
+            "single_sigma",
         )
         _SINGLE_SIGMA[key] = fn
     return fn
@@ -211,10 +267,15 @@ def compiled_batch_solver(
     key = (cfg, normalize, fused_oracle)
     fn = _BATCH.get(key)
     if fn is None:
-        fn = jax.jit(
-            jax.vmap(
-                lambda inst, lam0: _raw_solve(inst, lam0, cfg, normalize, fused_oracle)
-            )
+        fn = _instrument(
+            jax.jit(
+                jax.vmap(
+                    lambda inst, lam0: _raw_solve(
+                        inst, lam0, cfg, normalize, fused_oracle
+                    )
+                )
+            ),
+            "batch",
         )
         _BATCH[key] = fn
     return fn

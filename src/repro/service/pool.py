@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core.maximizer import MaximizerConfig, SolveResult
 from repro.instances.buckets import BucketedInstance
 from repro.service.engine import (
@@ -120,6 +121,18 @@ class BatchedSolvePool:
                 raise ValueError(
                     f"lam0s[{i}] has shape {r.shape}, expected ({dual_dim},)"
                 )
+        reg = telemetry.get_registry()
+        reg.inc("pool_batched_solves_total", 1)
+        reg.inc("pool_tenant_solves_total", batch)
+        reg.observe("pool_batch_size", batch)
+        # Padded slab cells per tenant in this batch's shape group — the
+        # denominator of padding-waste ratios (the scheduler supplies the
+        # nnz numerator; computing active cells here would force a device
+        # sync on the mask leaves mid-dispatch).
+        cells = sum(
+            int(np.prod(b.idx.shape)) for b in instances[0].buckets
+        )
+        reg.set_gauge("pool_padded_cells", cells * batch)
         return compiled_batch_solver(self.config, self.normalize, self.fused_oracle)(
             stacked, jnp.stack(rows)
         )

@@ -37,10 +37,13 @@ Fencing invariants of the overlap:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Optional, Sequence
 
 import jax
+import numpy as np
 
+from repro import telemetry
 from repro.instances.deltas import DeltaReport, InstanceDelta
 from repro.instances.generator import EdgeListInstance
 from repro.service.engine import (
@@ -155,6 +158,7 @@ class Scheduler:
                     [self.sessions[n].device_instance() for n in names],
                     [starts[n][2] for n in names],
                 )
+                self._record_group_padding(names)
                 batched.append((list(names), cold, raw))
             else:
                 for name in names:
@@ -166,6 +170,29 @@ class Scheduler:
                     )
                     solo.append((name, cold, raw, reuse))
         return batched, solo, starts
+
+    def _record_group_padding(self, names: Sequence[str]) -> None:
+        """Padding waste of one vmapped group, from host-side occupancy.
+
+        The pool itself records batch sizes and padded-cell counts; active
+        cells per tenant are only known host-side (`DeltaIngestor.deg`), so
+        the nnz-based waste fraction is recorded here without touching the
+        device-resident slabs.
+        """
+        reg = telemetry.get_registry()
+        cells = active = 0
+        for n in names:
+            ing = self.sessions[n].ingestor
+            cells += sum(
+                int(np.prod(b.idx.shape)) for b in ing.instance().buckets
+            )
+            active += ing.nnz
+        if cells:
+            reg.set_gauge(
+                "pool_padding_waste",
+                1.0 - active / cells,
+                group=",".join(sorted(names)[:4]),
+            )
 
     @staticmethod
     def _fence(dispatched) -> None:
@@ -216,9 +243,17 @@ class Scheduler:
         force_cold: bool = False,
     ) -> CadenceReport:
         """Ingest deltas and solve every tenant once (synchronous driver)."""
-        ingest, _ = self._ingest_all(deltas, strict=True)
-        dispatched = self._dispatch(force_cold)
-        reports, batched_groups, solo = self._absorb(dispatched)
+        t0 = time.perf_counter()
+        with telemetry.span("cadence", driver="sync", tenants=len(self.sessions)):
+            with telemetry.span("ingest"):
+                ingest, _ = self._ingest_all(deltas, strict=True)
+            with telemetry.span("dispatch"):
+                dispatched = self._dispatch(force_cold)
+            with telemetry.span("solve_fence"):
+                self._fence(dispatched)
+            with telemetry.span("absorb"):
+                reports, batched_groups, solo = self._absorb(dispatched)
+        self._record_cadence(time.perf_counter() - t0, overlapped=False)
         return CadenceReport(
             reports=reports,
             ingest=ingest,
@@ -244,22 +279,53 @@ class Scheduler:
         wall time.
         """
         deltas = list(cadence_deltas)
+        reg = telemetry.get_registry()
         out: list[CadenceReport] = []
-        ingest, errors = self._ingest_all(
-            deltas[0] if deltas else None, strict=False
-        )
+        with telemetry.span("pipeline_ingest", cadence_index=0):
+            ingest, errors = self._ingest_all(
+                deltas[0] if deltas else None, strict=False
+            )
+        if errors:
+            reg.inc("scheduler_ingest_errors_total", len(errors))
         for t in range(len(deltas)):
-            dispatched = self._dispatch(force_cold)
-            if t + 1 < len(deltas):
-                # the overlap: host-side validation + slab surgery + plan
-                # construction for cadence t+1 while cadence t solves
-                next_ingest, next_errors = self._ingest_all(
-                    deltas[t + 1], strict=False
-                )
-            else:
-                next_ingest, next_errors = {}, {}
-            self._fence(dispatched)
-            reports, batched_groups, solo = self._absorb(dispatched)
+            # cadences not yet dispatched, including this one — the host-side
+            # backlog a stuck device solve would grow
+            reg.set_gauge("scheduler_queue_depth", len(deltas) - t)
+            t0 = time.perf_counter()
+            with telemetry.span("cadence", driver="pipeline", index=t):
+                with telemetry.span("dispatch"):
+                    dispatched = self._dispatch(force_cold)
+                t_dispatched = time.perf_counter()
+                if t + 1 < len(deltas):
+                    # the overlap: host-side validation + slab surgery + plan
+                    # construction for cadence t+1 while cadence t solves
+                    with telemetry.span("overlap_ingest", cadence_index=t + 1):
+                        next_ingest, next_errors = self._ingest_all(
+                            deltas[t + 1], strict=False
+                        )
+                else:
+                    next_ingest, next_errors = {}, {}
+                t_ingested = time.perf_counter()
+                with telemetry.span("solve_fence"):
+                    self._fence(dispatched)
+                t_fenced = time.perf_counter()
+                with telemetry.span("absorb"):
+                    reports, batched_groups, solo = self._absorb(dispatched)
+            # Overlap efficiency: what fraction of the device-solve window
+            # (dispatch -> fence completion) the host spent doing next-cadence
+            # ingest work.  1.0 means ingest was entirely hidden; ~0 means the
+            # host sat idle (or there was nothing to ingest).
+            solve_window = max(t_fenced - t_dispatched, 1e-9)
+            overlap = min((t_ingested - t_dispatched) / solve_window, 1.0)
+            reg.set_gauge("scheduler_overlap_efficiency", overlap)
+            reg.inc(
+                "scheduler_overlap_ingest_seconds_total",
+                t_ingested - t_dispatched,
+            )
+            reg.inc("scheduler_solve_window_seconds_total", solve_window)
+            if next_errors:
+                reg.inc("scheduler_ingest_errors_total", len(next_errors))
+            self._record_cadence(time.perf_counter() - t0, overlapped=t > 0)
             out.append(
                 CadenceReport(
                     reports=reports,
@@ -272,12 +338,29 @@ class Scheduler:
                 )
             )
             ingest, errors = next_ingest, next_errors
+        reg.set_gauge("scheduler_queue_depth", 0)
         return out
+
+    def _record_cadence(self, wall_seconds: float, *, overlapped: bool) -> None:
+        reg = telemetry.get_registry()
+        reg.inc("scheduler_cadences_total", 1)
+        reg.set_gauge("scheduler_tenants", len(self.sessions))
+        reg.observe(
+            "scheduler_cadence_seconds",
+            wall_seconds,
+            overlapped=str(overlapped).lower(),
+        )
 
     # -- checkpointing -------------------------------------------------------
 
     def state_dict(self) -> tuple[dict[str, Any], dict]:
-        """(arrays, meta) of every tenant session, namespaced by tenant name."""
+        """(arrays, meta) of every tenant session, namespaced by tenant name.
+
+        ``meta["telemetry"]`` carries the registry's cumulative counters
+        (cadence totals, upload-bytes totals, rejection counts, ...), so a
+        restarted service resumes its monotone series instead of silently
+        resetting them to zero — restart-invariant rate queries downstream.
+        """
         arrays: dict[str, Any] = {}
         meta: dict = {"tenants": {}}
         for name, s in self.sessions.items():
@@ -285,6 +368,7 @@ class Scheduler:
             for k, v in s_arrays.items():
                 arrays[f"{name}/{k}"] = v
             meta["tenants"][name] = s_meta
+        meta["telemetry"] = telemetry.get_registry().state_dict()
         return arrays, meta
 
     def load_state(self, arrays: dict[str, Any], meta: dict) -> None:
@@ -300,6 +384,9 @@ class Scheduler:
             self.sessions[name] = SolveSession.from_state(
                 self.config, s_arrays, s_meta
             )
+        # older checkpoints (pre-telemetry) carry no counter state: keep zeros
+        if "telemetry" in meta:
+            telemetry.get_registry().load_state(meta["telemetry"])
 
     def save_checkpoint(self, manager, step: int, *, block: bool = False) -> None:
         """Persist every session through a `checkpoint.CheckpointManager`.

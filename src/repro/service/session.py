@@ -39,8 +39,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core.maximizer import MaximizerConfig, SolveResult
 from repro.core.stability import drift_bound
+from repro.telemetry import ConvergenceTrace, StallDetector
 from repro.instances.deltas import (
     DeltaIngestor,
     DeltaReport,
@@ -131,6 +133,10 @@ class SolveSession:
             min_length=config.min_length,
             row_headroom=config.row_headroom,
         )
+        self.ingestor.telemetry_tenant = tenant
+        # per-tenant stall detection over the ConvergenceTraces absorb builds
+        self._stall = StallDetector()
+        self.last_convergence: Optional[ConvergenceTrace] = None
         self.lam_prev: Optional[jax.Array] = None
         # previous primal in edge space: (sorted edge keys, values) — robust
         # to row relocations and re-bucketizes, unlike slab positions
@@ -299,13 +305,16 @@ class SolveSession:
         cfg = self.config.cold if cold else self.config.warm
         dc_norm = self.ingestor.drain_cost_drift()
         dirty_count = self._dirty_count  # A-state the solve runs against
-        raw, reuse_sigma = self.dispatch_raw(cfg, lam0, dc_norm, cold=cold)
-        res = to_solve_result(raw)
-        report = self.absorb(
-            res, cold=cold, cold_reason=reason, batched=False,
-            dc_norm=dc_norm, sigma_reused=reuse_sigma,
-            dirty_count=dirty_count,
-        )
+        with telemetry.span(
+            "tenant_solve", tenant=self.tenant, mode="cold" if cold else "warm"
+        ):
+            raw, reuse_sigma = self.dispatch_raw(cfg, lam0, dc_norm, cold=cold)
+            res = to_solve_result(raw)
+            report = self.absorb(
+                res, cold=cold, cold_reason=reason, batched=False,
+                dc_norm=dc_norm, sigma_reused=reuse_sigma,
+                dirty_count=dirty_count,
+            )
         return res, report
 
     def absorb(
@@ -329,6 +338,35 @@ class SolveSession:
         both at dispatch time, or the next cadence's in-flight ingest would
         corrupt this one's drift metering (see `Scheduler._dispatch`).
         """
+        with telemetry.span(
+            "tenant_absorb",
+            tenant=self.tenant,
+            mode="cold" if cold else "warm",
+            batched=batched,
+        ):
+            return self._absorb(
+                res,
+                cold=cold,
+                cold_reason=cold_reason,
+                batched=batched,
+                dc_norm=dc_norm,
+                unpack=unpack,
+                sigma_reused=sigma_reused,
+                dirty_count=dirty_count,
+            )
+
+    def _absorb(
+        self,
+        res: SolveResult,
+        *,
+        cold: bool,
+        cold_reason: Optional[str],
+        batched: bool,
+        dc_norm: Optional[float] = None,
+        unpack=None,
+        sigma_reused: bool = False,
+        dirty_count: Optional[int] = None,
+    ) -> dict[str, Any]:
         cfg = self.config.cold if cold else self.config.warm
         gamma_floor = cfg.gammas[-1]
         if dc_norm is None:
@@ -380,6 +418,7 @@ class SolveSession:
                 report["sla_ok"] = bool(
                     report["drift_rel"] <= self.config.drift_sla_rel
                 )
+        self._record_telemetry(res, report)
         self.lam_prev = res.lam
         self.prev_primal = (keys, x)
         # The solve's sigma estimate (recomputed or echoed) corresponds to
@@ -394,6 +433,55 @@ class SolveSession:
         self.cadence += 1
         self.last_report = report
         return report
+
+    def _record_telemetry(
+        self, res: SolveResult, report: dict[str, Any]
+    ) -> None:
+        """Route the finished solve into the metrics registry + stall detector.
+
+        Builds the per-solve `ConvergenceTrace` from the already-returned
+        `SolveResult.stats` (one host copy of trace arrays after the fence —
+        never a per-iteration sync) and attaches its summary + stall flags to
+        the report, so every exporter sees one self-contained record.
+        """
+        trace = ConvergenceTrace.from_result(
+            res,
+            tenant=self.tenant,
+            cadence=self.cadence,
+            engine="agd",
+            mode=report["mode"],
+        )
+        self.last_convergence = trace
+        report["convergence"] = trace.summary()
+        report["stalled"] = trace.stalled
+        trace.record()
+        report["stall_flagged"] = self._stall.observe(trace)
+
+        reg = telemetry.get_registry()
+        labels = dict(tenant=self.tenant, mode=report["mode"])
+        reg.inc("service_solves_total", 1, **labels)
+        reg.inc("service_iters_total", report["iters_used"], **labels)
+        reg.inc(
+            "service_upload_bytes_total",
+            report["upload_bytes"] or 0,
+            tenant=self.tenant,
+        )
+        if report["sigma_reused"]:
+            reg.inc("service_sigma_reuse_total", 1, tenant=self.tenant)
+        reg.observe("service_solve_iters", report["iters_used"], mode=report["mode"])
+        reg.set_gauge("service_last_g", report["g"], tenant=self.tenant)
+        reg.set_gauge(
+            "service_last_max_violation",
+            report["max_violation"],
+            tenant=self.tenant,
+        )
+        reg.set_gauge("service_cadence", self.cadence, tenant=self.tenant)
+        if report["drift_rel"] is not None:
+            reg.set_gauge(
+                "service_drift_rel", report["drift_rel"], tenant=self.tenant
+            )
+        if report["sla_ok"] is False:
+            reg.inc("service_sla_violations_total", 1, tenant=self.tenant)
 
     # -- checkpointing -------------------------------------------------------
 
@@ -444,6 +532,9 @@ class SolveSession:
             },
             meta["ingestor"],
         )
+        self.ingestor.telemetry_tenant = self.tenant
+        self._stall = StallDetector()
+        self.last_convergence = None
         self.lam_prev = (
             jnp.asarray(arrays["lam_prev"]) if meta["has_lam"] else None
         )

@@ -1,0 +1,69 @@
+"""Telemetry: metrics registry, span tracing, convergence telemetry, export.
+
+The observability layer of the recurring-solve service (and of one-shot
+solves).  Four pieces, one import:
+
+  * `MetricsRegistry` (`registry.py`) — thread-safe labelled counters /
+    gauges / histograms; `get_registry()` is the process default every
+    subsystem records into.
+  * `span` (`tracing.py`) — nested wall-clock spans with Chrome-trace
+    (Perfetto) export and optional `jax.profiler.TraceAnnotation`
+    pass-through into XLA profiles.
+  * `ConvergenceTrace` / `StallDetector` (`convergence.py`) — per-solve
+    iteration traces lifted from the already-returned `SolveResult.stats`
+    (no per-iteration host syncs), with budget-exhaustion stall flagging.
+  * `JsonlSink` / `write_prometheus` (`export.py`) — the JSONL record schema
+    (validated by `tools/check_metrics.py`) and Prometheus text exposition.
+
+Instrumentation sites across the stack (see docs/observability.md for the
+metric catalog): `service.session` (solve reports, convergence),
+`service.scheduler` (cadence spans, overlap efficiency, queue depth),
+`service.engine` (compile cache hits/misses, compile seconds),
+`service.pool` (batch sizes, padding), `instances.deltas` (delta counts,
+scatter bytes, rejections), `core.sharding` (psum early-stop checks),
+`core.maximizer` (solve/stage spans).
+"""
+from repro.telemetry.convergence import (
+    ConvergenceTrace,
+    StageTrace,
+    StallDetector,
+)
+from repro.telemetry.export import (
+    SCHEMA,
+    JsonlSink,
+    jsonable,
+    prometheus_text,
+    validate_jsonl,
+    validate_record,
+    write_prometheus,
+)
+from repro.telemetry.registry import (
+    DEFAULT_BUCKETS,
+    HistogramData,
+    MetricsRegistry,
+    get_registry,
+    set_registry,
+)
+from repro.telemetry.tracing import Tracer, get_tracer, set_tracer, span
+
+__all__ = [
+    "ConvergenceTrace",
+    "StageTrace",
+    "StallDetector",
+    "SCHEMA",
+    "JsonlSink",
+    "jsonable",
+    "prometheus_text",
+    "validate_jsonl",
+    "validate_record",
+    "write_prometheus",
+    "DEFAULT_BUCKETS",
+    "HistogramData",
+    "MetricsRegistry",
+    "get_registry",
+    "set_registry",
+    "Tracer",
+    "get_tracer",
+    "set_tracer",
+    "span",
+]

@@ -1,0 +1,493 @@
+"""Telemetry subsystem: registry, spans, convergence traces, exporters."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro import telemetry
+from repro.core import Maximizer, MaximizerConfig, MatchingObjective
+from repro.instances import (
+    DeltaIngestor,
+    InstanceDelta,
+    MatchingInstanceSpec,
+    bucketize,
+    generate_matching_instance,
+)
+from repro.service import Scheduler, ServiceConfig, compiled_solver
+from repro.telemetry import (
+    SCHEMA,
+    ConvergenceTrace,
+    JsonlSink,
+    MetricsRegistry,
+    StallDetector,
+    Tracer,
+    prometheus_text,
+    validate_jsonl,
+)
+
+SPEC = MatchingInstanceSpec(
+    num_sources=120, num_destinations=10, avg_degree=4.0, seed=21
+)
+BASE = generate_matching_instance(SPEC)
+
+COLD = MaximizerConfig(iters_per_stage=120, tol_grad=1e-4, tol_viol=1e-4)
+SERVICE = ServiceConfig(
+    cold=COLD, warm_gammas=(0.1, 0.01), drift_sla_rel=0.5, row_headroom=4
+)
+
+
+@pytest.fixture(autouse=True)
+def fresh_telemetry():
+    """Isolate every test behind its own registry + tracer."""
+    prev_reg = telemetry.set_registry(MetricsRegistry())
+    prev_tr = telemetry.set_tracer(Tracer())
+    yield
+    telemetry.set_registry(prev_reg)
+    telemetry.set_tracer(prev_tr)
+
+
+def _perturb_delta(edge_list, rng, frac=0.1):
+    n = max(1, int(frac * edge_list.nnz))
+    idx = rng.permutation(edge_list.nnz)[:n]
+    return InstanceDelta(
+        update_src=edge_list.src[idx],
+        update_dst=edge_list.dst[idx],
+        update_values=edge_list.values[idx] * rng.uniform(0.9, 1.1, n),
+    )
+
+
+# -- JSONL schema stability (golden keys) -------------------------------------
+
+
+def test_jsonl_schema_golden_keys():
+    """The exported record schema is a contract with downstream tooling
+    (tools/check_metrics.py, the bench-history artifact, dashboards).
+    Removing or renaming a required key is a schema break: update BOTH this
+    golden set and docs/observability.md in the same change."""
+    golden = {
+        "solve_report": {
+            "tenant", "cadence", "mode", "iters_used", "iter_budget", "g",
+            "max_violation", "dc_norm", "upload_mode", "upload_bytes",
+            "drift_rel", "drift_bound", "sla_ok",
+        },
+        "convergence": {
+            "tenant", "cadence", "engine", "iters_used", "stage_budgets",
+            "total_iters_used", "total_budget", "stalled", "g_final",
+            "max_violation_final",
+        },
+        "cadence": {
+            "cadence", "tenants", "batched_fraction", "upload_bytes",
+            "overlapped", "wall_seconds",
+        },
+        "ingest": {"tenant", "in_place", "n_insert", "n_delete", "n_update"},
+        "counters": {"counters", "gauges", "histograms"},
+        "bench": {"suite", "quick", "results"},
+    }
+    assert set(SCHEMA) == set(golden)
+    for kind, keys in golden.items():
+        assert set(SCHEMA[kind]) == keys, f"schema drift in kind {kind!r}"
+
+
+def test_jsonl_sink_roundtrip_and_validation(tmp_path):
+    path = str(tmp_path / "m.jsonl")
+    with JsonlSink(path) as sink:
+        sink.emit("ingest", {
+            "tenant": "t0", "in_place": True,
+            "n_insert": 1, "n_delete": 0, "n_update": np.int64(3),
+        })
+        sink.emit_counters()
+    n, errors = validate_jsonl(path)
+    assert (n, errors) == (2, [])
+    records = [json.loads(l) for l in open(path)]
+    assert [r["kind"] for r in records] == ["ingest", "counters"]
+    assert records[0]["payload"]["n_update"] == 3  # numpy scalar serialized
+    with JsonlSink(path) as sink:  # append mode: prior records survive
+        sink.emit("ingest", {
+            "tenant": "t1", "in_place": False,
+            "n_insert": 0, "n_delete": 0, "n_update": 0,
+        })
+    assert validate_jsonl(path)[0] == 3
+
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"ts": 1.0, "kind": "ingest", "payload": {"tenant": "x"}}\n')
+    n, errors = validate_jsonl(str(bad))
+    assert n == 1 and len(errors) == 4  # four missing required keys
+
+    with pytest.raises(ValueError):
+        JsonlSink(str(tmp_path / "x.jsonl")).emit("nope", {})
+
+
+# -- registry ------------------------------------------------------------------
+
+
+def test_registry_labels_and_snapshot():
+    reg = telemetry.get_registry()
+    reg.inc("solves_total", 2, tenant="a", mode="cold")
+    reg.inc("solves_total", 3, tenant="b", mode="warm")
+    reg.set_gauge("queue_depth", 7)
+    reg.observe("batch_size", 4)
+    reg.observe("batch_size", 4)
+    assert reg.counter_value("solves_total", tenant="a", mode="cold") == 2
+    assert reg.counter_total("solves_total") == 5
+    snap = reg.snapshot()
+    assert snap["counters"]["solves_total{mode=cold,tenant=a}"] == 2
+    assert snap["gauges"]["queue_depth"] == 7
+    h = snap["histograms"]["batch_size"]
+    assert h["count"] == 2 and h["sum"] == 8 and h["min"] == h["max"] == 4
+
+
+def test_registry_thread_safety_under_hammer():
+    """N writer threads + a concurrent snapshot reader: totals must be exact
+    (no lost updates) and snapshots must never crash mid-mutation."""
+    reg = telemetry.get_registry()
+    threads, iters = 8, 500
+    stop = threading.Event()
+    snaps = []
+
+    def writer(t):
+        for i in range(iters):
+            reg.inc("hammer_total", 1, thread=t % 2)
+            reg.observe("hammer_obs", i)
+            reg.set_gauge("hammer_gauge", i, thread=t)
+
+    def reader():
+        while not stop.is_set():
+            snaps.append(reg.snapshot())
+
+    r = threading.Thread(target=reader)
+    r.start()
+    ws = [threading.Thread(target=writer, args=(t,)) for t in range(threads)]
+    for w in ws:
+        w.start()
+    for w in ws:
+        w.join()
+    stop.set()
+    r.join()
+    assert reg.counter_total("hammer_total") == threads * iters
+    snap = reg.snapshot()
+    assert snap["histograms"]["hammer_obs"]["count"] == threads * iters
+    assert snaps  # the reader actually raced the writers
+
+
+def test_registry_counter_state_roundtrip():
+    reg = MetricsRegistry()
+    reg.inc("a_total", 5, tenant="x")
+    reg.inc("b_total", 2.5)
+    reg.set_gauge("g", 1)  # gauges intentionally NOT checkpointed
+    state = json.loads(json.dumps(reg.state_dict()))  # must be JSON-able
+    fresh = MetricsRegistry()
+    fresh.load_state(state)
+    assert fresh.counter_value("a_total", tenant="x") == 5
+    assert fresh.counter_value("b_total") == 2.5
+    assert fresh.gauge_value("g") is None
+
+
+# -- spans / chrome trace ------------------------------------------------------
+
+
+def test_span_nesting_and_chrome_trace(tmp_path):
+    tr = telemetry.get_tracer()
+    with telemetry.span("cadence", index=0):
+        with telemetry.span("solve", tenant="t0"):
+            pass
+        with telemetry.span("solve", tenant="t1"):
+            pass
+    events = tr.events()
+    assert [e["name"] for e in events] == ["solve", "solve", "cadence"]
+    cad = events[2]
+    for child in events[:2]:
+        assert cad["ts"] <= child["ts"]
+        assert child["ts"] + child["dur"] <= cad["ts"] + cad["dur"] + 1e-6
+    path = str(tmp_path / "t.json")
+    tr.export_chrome_trace(path)
+    doc = json.loads(open(path).read())
+    assert {e["name"] for e in doc["traceEvents"]} == {"cadence", "solve"}
+    for e in doc["traceEvents"]:  # Perfetto-required complete-event fields
+        assert e["ph"] == "X"
+        assert {"name", "ts", "dur", "pid", "tid", "args"} <= set(e)
+    assert doc["traceEvents"][0]["args"] == {"tenant": "t0"}
+
+
+def test_span_buffer_bound():
+    tr = telemetry.set_tracer(Tracer(max_events=3))
+    try:
+        for i in range(5):
+            with telemetry.span("s", i=i):
+                pass
+        got = telemetry.get_tracer()
+        assert len(got.events()) == 3
+        assert got.dropped == 2
+    finally:
+        telemetry.set_tracer(tr)
+
+
+# -- convergence traces + stall detection --------------------------------------
+
+
+def _packed_objective():
+    return MatchingObjective(bucketize(BASE))
+
+
+def test_convergence_trace_from_solve():
+    cfg = MaximizerConfig(iters_per_stage=120, tol_grad=1e-4, tol_viol=1e-4)
+    res = Maximizer(_packed_objective(), cfg).solve()
+    trace = ConvergenceTrace.from_result(res, tenant="t0", engine="agd")
+    s = trace.summary()
+    assert s["iters_used"] == list(res.iters_used)
+    assert s["total_iters_used"] == sum(res.iters_used)
+    assert len(trace.stages) == len(cfg.gammas)
+    for st, used in zip(trace.stages, res.iters_used):
+        assert st.g.shape == (used,)
+        assert st.budget == cfg.stage_iter_budget
+    # JSONL-exportable and schema-complete
+    assert set(SCHEMA["convergence"]) <= set(s)
+    trace.record()
+    reg = telemetry.get_registry()
+    assert reg.counter_value(
+        "convergence_solves_total", tenant="t0", engine="agd", mode="oneshot"
+    ) == 1
+    assert reg.counter_total("convergence_iters_total") == sum(res.iters_used)
+
+
+def test_stall_detector_flags_budget_exhaustion():
+    """An impossible tolerance on a tiny budget exhausts every stage: the
+    gamma-floor stage never converges -> the solve is stalled and the tenant
+    is flagged; a healthy solve then clears the flag."""
+    stalled_cfg = MaximizerConfig(
+        gammas=(1.0, 0.01), iters_per_stage=10, check_every=5,
+        tol_grad=1e-12, tol_viol=1e-12,
+    )
+    res = Maximizer(_packed_objective(), stalled_cfg).solve()
+    trace = ConvergenceTrace.from_result(res, tenant="t0")
+    assert res.iters_used == (10, 10)  # budget exhausted everywhere
+    assert not trace.stages[-1].converged
+    assert trace.stalled
+
+    det = StallDetector()
+    assert det.observe(trace) is True
+    assert det.flagged == {"t0"}
+    reg = telemetry.get_registry()
+    assert reg.counter_value(
+        "convergence_stalled_solves_total", tenant="t0"
+    ) == 1
+
+    ok_cfg = MaximizerConfig(
+        gammas=(1.0,), iters_per_stage=300, tol_grad=1e-3, tol_viol=1e-3
+    )
+    ok_res = Maximizer(_packed_objective(), ok_cfg).solve()
+    ok_trace = ConvergenceTrace.from_result(ok_res, tenant="t0")
+    assert not ok_trace.stalled
+    assert det.observe(ok_trace) is False
+    assert det.flagged == set()
+
+
+def test_pdhg_stats_parity():
+    """PDHG emits the same stats/iters_used shape as AGD, so one
+    ConvergenceTrace covers both engines."""
+    from repro.core.pdhg import PDHGConfig, from_edge_list, solve_pdhg
+
+    cfg = PDHGConfig(max_iters=400, check_every=50, tol=1e-3)
+    res = solve_pdhg(from_edge_list(BASE), cfg)
+    assert len(res.stats) == 1
+    n_checks = cfg.max_iters // cfg.check_every
+    assert res.stats[0].g.shape == (n_checks,)
+    assert res.iters_used == (int(res.iters),)
+    trace = ConvergenceTrace.from_result(
+        res, engine="pdhg", trace_stride=cfg.check_every,
+        stage_budget=cfg.max_iters,
+    )
+    st = trace.stages[0]
+    assert st.iters_used == int(res.iters)
+    assert st.budget == cfg.max_iters
+    assert st.trace_stride == cfg.check_every
+    assert st.g.shape == (-(-st.iters_used // cfg.check_every),)
+    assert st.converged == bool(res.converged)
+    assert set(SCHEMA["convergence"]) <= set(trace.summary())
+
+
+def test_pdhg_stall_on_budget_exhaustion():
+    from repro.core.pdhg import PDHGConfig, from_edge_list, solve_pdhg
+
+    cfg = PDHGConfig(max_iters=100, check_every=50, tol=1e-12)
+    res = solve_pdhg(from_edge_list(BASE), cfg)
+    assert not bool(res.converged)
+    trace = ConvergenceTrace.from_result(
+        res, engine="pdhg", trace_stride=cfg.check_every,
+        stage_budget=cfg.max_iters,
+    )
+    assert trace.stalled
+
+
+# -- service instrumentation ---------------------------------------------------
+
+
+def _fresh_sched(n=3):
+    sched = Scheduler(SERVICE)
+    for t in range(n):
+        sched.add_tenant(f"t{t}", BASE)
+    return sched
+
+
+def _cadence_deltas(n_tenants=3, cadences=2, seed=43):
+    out = [None]
+    for c in range(cadences):
+        rng = np.random.default_rng(seed + c)
+        out.append(
+            {f"t{t}": _perturb_delta(BASE, rng) for t in range(n_tenants)}
+        )
+    return out
+
+
+def test_pipelined_scheduler_records_consistent_metrics():
+    """A pipelined two-cadence run (ingest thread overlapping the in-flight
+    solve) must leave exact counter totals, and concurrent snapshots taken
+    WHILE it runs must stay internally consistent."""
+    sched = _fresh_sched()
+    reg = telemetry.get_registry()
+    snaps, stop = [], threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            snaps.append(reg.snapshot())
+
+    r = threading.Thread(target=reader)
+    r.start()
+    try:
+        outs = sched.run_pipeline(_cadence_deltas())
+    finally:
+        stop.set()
+        r.join()
+
+    n_solves = sum(len(o.reports) for o in outs)
+    assert reg.counter_total("service_solves_total") == n_solves
+    assert reg.counter_value("scheduler_cadences_total") == len(outs)
+    assert reg.counter_total("deltas_applied_total") == 6  # 3 tenants x 2
+    assert reg.counter_value("convergence_solves_total",
+                             tenant="t0", engine="agd", mode="cold") == 1
+    assert reg.counter_value("convergence_solves_total",
+                             tenant="t0", engine="agd", mode="warm") == 2
+    # iters totals agree with the per-solve reports
+    want_iters = sum(r_["iters_used"] for o in outs for r_ in o.reports.values())
+    assert reg.counter_total("service_iters_total") == want_iters
+    # overlap accounting exists for the overlapped cadences
+    assert reg.counter_value("scheduler_overlap_ingest_seconds_total") > 0
+    for snap in snaps:  # every concurrent snapshot was a consistent view
+        assert set(snap) == {"counters", "gauges", "histograms"}
+    # spans: cadence spans with nested dispatch/absorb
+    names = [e["name"] for e in telemetry.get_tracer().events()]
+    assert names.count("cadence") == len(outs)
+    assert "dispatch" in names and "tenant_absorb" in names
+
+
+def test_solve_reports_carry_convergence_and_stall_fields():
+    sched = _fresh_sched(n=2)
+    out = sched.run_cadence(None)
+    for name, rep in out.reports.items():
+        conv = rep["convergence"]
+        assert set(SCHEMA["convergence"]) <= set(conv)
+        assert conv["tenant"] == name
+        assert rep["stalled"] == conv["stalled"]
+        assert isinstance(rep["stall_flagged"], bool)
+
+
+def test_scheduler_checkpoint_preserves_counters(tmp_path):
+    """Cumulative counters ride Scheduler.save_checkpoint: after a restore
+    into a fresh process-state, totals continue instead of resetting."""
+    from repro.checkpoint import CheckpointManager
+
+    sched = _fresh_sched(n=2)
+    sched.run_cadence(None)
+    reg = telemetry.get_registry()
+    before = reg.counter_total("service_solves_total")
+    assert before == 2
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=2)
+    sched.save_checkpoint(mgr, 0)
+    mgr.wait()
+
+    # simulated restart: fresh registry, fresh scheduler
+    telemetry.set_registry(MetricsRegistry())
+    sched2 = Scheduler(SERVICE)
+    sched2.restore_checkpoint(mgr, 0)
+    reg2 = telemetry.get_registry()
+    assert reg2.counter_total("service_solves_total") == before
+    rng = np.random.default_rng(7)
+    sched2.run_cadence({n: _perturb_delta(BASE, rng) for n in sched2.sessions})
+    assert reg2.counter_total("service_solves_total") == before + 2
+
+
+def test_engine_compile_cache_metrics():
+    reg = telemetry.get_registry()
+    cfg = MaximizerConfig(gammas=(0.1,), iters_per_stage=10)
+    inst = bucketize(BASE)
+    fn = compiled_solver(cfg)
+    lam0 = np.zeros(inst.dual_dim, np.float32)
+    base = reg.counter_value("engine_compiles_total", entry="single")
+    fn(inst, lam0)  # first call on this shape key: compile
+    assert reg.counter_value("engine_compiles_total", entry="single") == base + 1
+    assert reg.counter_total("engine_compile_seconds_total") > 0
+    hits = reg.counter_value("engine_cache_hits_total", entry="single")
+    fn(inst, lam0)  # same shapes: cache hit
+    assert reg.counter_value("engine_cache_hits_total", entry="single") == hits + 1
+    assert reg.counter_value("engine_compiles_total", entry="single") == base + 1
+
+
+def test_delta_ingest_metrics_and_rejections():
+    reg = telemetry.get_registry()
+    ing = DeltaIngestor(BASE, row_headroom=4)
+    ing.telemetry_tenant = "t9"
+    rng = np.random.default_rng(3)
+    rep = ing.apply(_perturb_delta(BASE, rng))
+    assert rep.in_place
+    assert reg.counter_value(
+        "deltas_applied_total", tenant="t9", path="in_place"
+    ) == 1
+    assert reg.counter_value("delta_edits_total", op="update") == rep.n_update
+    assert reg.counter_value(
+        "scatter_bytes_total", tenant="t9"
+    ) == rep.plan.nbytes
+    assert reg.counter_value(
+        "scatter_cells_total", tenant="t9"
+    ) == rep.plan.num_cells
+    with pytest.raises(ValueError):
+        ing.apply(
+            InstanceDelta(delete_src=[SPEC.num_sources + 1], delete_dst=[0])
+        )
+    assert reg.counter_value("delta_rejections_total", tenant="t9") == 1
+    # the rejected delta must not have advanced any applied counters
+    assert reg.counter_value(
+        "deltas_applied_total", tenant="t9", path="in_place"
+    ) == 1
+
+
+# -- prometheus exposition -----------------------------------------------------
+
+
+def test_prometheus_text_exposition():
+    reg = telemetry.get_registry()
+    reg.inc("solves_total", 3, tenant="a")
+    reg.set_gauge("depth", 2)
+    reg.observe("lat_seconds", 0.2)
+    text = prometheus_text(reg)
+    assert '# TYPE solves_total counter' in text
+    assert 'solves_total{tenant="a"} 3' in text
+    assert '# TYPE depth gauge' in text
+    assert '# TYPE lat_seconds histogram' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 1' in text
+    assert 'lat_seconds_count 1' in text
+    # cumulative bucket semantics: counts never decrease with rising le
+    counts = [
+        int(l.rsplit(" ", 1)[1])
+        for l in text.splitlines()
+        if l.startswith("lat_seconds_bucket")
+    ]
+    assert counts == sorted(counts)
+
+
+def test_write_prometheus_atomic(tmp_path):
+    reg = telemetry.get_registry()
+    reg.inc("x_total", 1)
+    path = str(tmp_path / "m.prom")
+    telemetry.write_prometheus(path, reg)
+    assert "x_total 1" in open(path).read()
+    assert list(tmp_path.iterdir()) == [tmp_path / "m.prom"]  # no tmp litter

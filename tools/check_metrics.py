@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Telemetry JSONL validator — CI gate on the metrics export schema.
+
+Validates every record of one or more telemetry JSONL files against
+`repro.telemetry.SCHEMA` (each line must be a JSON object with numeric
+``ts``, a known ``kind`` and all of that kind's required payload keys).
+
+Usage:
+    python tools/check_metrics.py m.jsonl [more.jsonl ...]
+    python tools/check_metrics.py --require-kinds ingest,counters m.jsonl
+
+``--require-kinds`` additionally fails unless every listed kind appears at
+least once across the validated files — CI uses it to assert the service
+dry-run actually exported something, not just an empty-but-valid file.
+Exits non-zero listing every schema error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# runnable from a repo checkout without an installed package
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.telemetry import SCHEMA, validate_record  # noqa: E402
+
+
+def check(paths: list[str], require_kinds: set[str]) -> list[str]:
+    errors: list[str] = []
+    seen_kinds: set[str] = set()
+    total = 0
+    for name in paths:
+        p = Path(name)
+        if not p.exists():
+            errors.append(f"{name}: file not found")
+            continue
+        n = 0
+        for lineno, line in enumerate(p.read_text().splitlines(), start=1):
+            line = line.strip()
+            if not line:
+                continue
+            n += 1
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                errors.append(f"{name}:{lineno}: invalid JSON ({e})")
+                continue
+            errors.extend(
+                f"{name}:{lineno}: {e}" for e in validate_record(obj)
+            )
+            if isinstance(obj, dict) and obj.get("kind") in SCHEMA:
+                seen_kinds.add(obj["kind"])
+        if n == 0:
+            errors.append(f"{name}: no records")
+        total += n
+    for kind in sorted(require_kinds - seen_kinds):
+        errors.append(f"required kind {kind!r} never appeared")
+    if not errors:
+        print(
+            f"check_metrics: {total} record(s) across {len(paths)} file(s), "
+            f"kinds: {sorted(seen_kinds)} — OK"
+        )
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+", help="telemetry JSONL file(s)")
+    ap.add_argument(
+        "--require-kinds",
+        default="",
+        help="comma-separated record kinds that must each appear at least once",
+    )
+    args = ap.parse_args()
+    require = {k.strip() for k in args.require_kinds.split(",") if k.strip()}
+    unknown = require - set(SCHEMA)
+    if unknown:
+        print(f"unknown kinds in --require-kinds: {sorted(unknown)}")
+        return 2
+    errors = check(args.paths, require)
+    for e in errors:
+        print(e)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
