@@ -22,6 +22,15 @@ fused dual-oracle kernel (kernels/dual_oracle.py): one launch per bucket
 emits the primal slab plus this bucket's A x histogram and (c'x, ||x||^2)
 partials from a single slab read, instead of the ~3 passes the unfused
 composition pays (docs/architecture.md "one-pass dual oracle").
+
+`MatchingObjective` is a thin shim over the operator-centric formulation
+layer (repro.formulation, docs/formulation.md): when the instance carries a
+compiled `FormulationSpec` (a static pytree field), `__post_init__` resolves
+it into per-bucket projections and the lowered term scales, so any
+composition of feasible-set/term/coupling primitives dispatches through this
+same oracle — and through every solver/service layer built on it — without
+solve-loop changes.  A spec-free instance with default parameters is the
+legacy ridge-regularized matching formulation, bit-for-bit.
 """
 from __future__ import annotations
 
@@ -113,10 +122,61 @@ class MatchingObjective:
     # oracle").  Subsumes fused_kernel; simplex feasible sets only.
     fused_oracle: bool = False
     kernel_interpret: bool | None = None
+    # Lowered objective-term scales (repro.formulation.terms):
+    #   g = cost_scale * c'x + ridge_weight * (gamma/2)||x||^2 + lam'(Ax - b)
+    #   x* = Pi_C( -(A^T lam + cost_scale * c) / (ridge_weight * gamma) )
+    # Defaults reproduce the legacy matching objective bit-for-bit (the
+    # scale-application branches below are host-level, so the jaxpr is
+    # unchanged when both scales are exactly 1.0).
+    cost_scale: float = 1.0
+    ridge_weight: float = 1.0
+
+    def __post_init__(self):
+        # Formulation shim: a compiled FormulationSpec riding the instance's
+        # static `formulation` field carries the per-bucket feasible sets and
+        # term scales; resolve them here (trace-time host logic only), so
+        # every caller that constructs a MatchingObjective from the instance
+        # — Maximizer, core.sharding, the whole service engine — dispatches
+        # compiled formulations with zero changes.
+        self._projections: Optional[tuple[ProjectionMap, ...]] = None
+        spec = getattr(self.instance, "formulation", None)
+        if spec is None:
+            return
+        from repro.formulation.spec import lower_spec
+
+        lowered = lower_spec(spec, self.instance)
+        self.cost_scale = self.cost_scale * lowered.cost_scale
+        self.ridge_weight = self.ridge_weight * lowered.ridge_weight
+        # An explicitly passed non-default projection (e.g. the distributed
+        # layer's `projection=` argument) wins over the spec's lowering.
+        if self.projection == UnitSimplexProjection():
+            self._projections = lowered.projections
+            if len(set(lowered.projections)) == 1:
+                self.projection = lowered.projections[0]
 
     @property
     def dual_dim(self) -> int:
         return self.instance.dual_dim
+
+    def _proj(self, i: int) -> ProjectionMap:
+        return self._projections[i] if self._projections else self.projection
+
+    def _scaled_cost(self, b: Bucket) -> jax.Array:
+        return b.cost if self.cost_scale == 1.0 else self.cost_scale * b.cost
+
+    def _scaled_gamma(self, gamma):
+        return gamma if self.ridge_weight == 1.0 else self.ridge_weight * gamma
+
+    def _assert_fused_ok(self, kind: str) -> UnitSimplexProjection:
+        assert self.cost_scale == 1.0 and self.ridge_weight == 1.0, (
+            f"{kind} implements unit term scales; lower non-unit "
+            "LinearCost/RidgeSmoothing through the unfused oracle"
+        )
+        projs = {self._proj(i) for i in range(len(self.instance.buckets))}
+        assert len(projs) == 1 and isinstance(
+            next(iter(projs)), UnitSimplexProjection
+        ), f"{kind} implements the simplex feasible set"
+        return next(iter(projs))
 
     def primal_candidate(self, lam: jax.Array, gamma) -> tuple[jax.Array, ...]:
         """x*_gamma(lam) per bucket (eq. 3)."""
@@ -124,10 +184,7 @@ class MatchingObjective:
         if self.fused_kernel:
             from repro.kernels import ops as kops
 
-            proj = self.projection
-            assert isinstance(proj, UnitSimplexProjection), (
-                "fused dual-primal kernel implements the simplex feasible set"
-            )
+            proj = self._assert_fused_ok("fused dual-primal kernel")
             gamma = jnp.asarray(gamma, jnp.float32)
             return tuple(
                 kops.fused_dual_primal(
@@ -140,10 +197,11 @@ class MatchingObjective:
                 for b in inst.buckets
             )
         lam2 = lam.reshape(inst.num_families, inst.num_destinations)
+        gamma_eff = self._scaled_gamma(gamma)
         slabs = []
-        for b in inst.buckets:
-            z = -(_gather_at_lam(b, lam2) + b.cost) / gamma
-            slabs.append(self.projection(z, b.mask))
+        for i, b in enumerate(inst.buckets):
+            z = -(_gather_at_lam(b, lam2) + self._scaled_cost(b)) / gamma_eff
+            slabs.append(self._proj(i)(z, b.mask))
         return tuple(slabs)
 
     def apply_A(self, x_slabs: Sequence[jax.Array]) -> jax.Array:
@@ -170,8 +228,14 @@ class MatchingObjective:
         gamma = jnp.asarray(gamma, lam.dtype)
         x_slabs = self.primal_candidate(lam, gamma)
         ax = self.apply_A(x_slabs)
-        lin = sum(jnp.vdot(b.cost, x) for b, x in zip(inst.buckets, x_slabs))
-        ridge = 0.5 * gamma * sum(jnp.vdot(x, x) for x in x_slabs)
+        lin = sum(
+            jnp.vdot(self._scaled_cost(b), x)
+            for b, x in zip(inst.buckets, x_slabs)
+        )
+        ridge = (
+            0.5 * self._scaled_gamma(gamma)
+            * sum(jnp.vdot(x, x) for x in x_slabs)
+        )
         return self._finish_eval(lam, ax, lin, ridge, x_slabs)
 
     def _finish_eval(
@@ -204,10 +268,7 @@ class MatchingObjective:
         from repro.kernels import ops as kops
 
         inst = self.instance
-        proj = self.projection
-        assert isinstance(proj, UnitSimplexProjection), (
-            "fused dual-oracle kernel implements the simplex feasible set"
-        )
+        proj = self._assert_fused_ok("fused dual-oracle kernel")
         gamma = jnp.asarray(gamma, jnp.float32)
         ax2 = jnp.zeros(
             (inst.num_families, inst.num_destinations), jnp.float32
@@ -235,8 +296,14 @@ class MatchingObjective:
 
     def primal_objective(self, x_slabs: Sequence[jax.Array], gamma) -> jax.Array:
         inst = self.instance
-        lin = sum(jnp.vdot(b.cost, x) for b, x in zip(inst.buckets, x_slabs))
-        ridge = 0.5 * gamma * sum(jnp.vdot(x, x) for x in x_slabs)
+        lin = sum(
+            jnp.vdot(self._scaled_cost(b), x)
+            for b, x in zip(inst.buckets, x_slabs)
+        )
+        ridge = (
+            0.5 * self._scaled_gamma(gamma)
+            * sum(jnp.vdot(x, x) for x in x_slabs)
+        )
         return lin + ridge
 
     def max_violation(self, x_slabs: Sequence[jax.Array]) -> jax.Array:
@@ -296,12 +363,11 @@ def normalize_rows_traced(
         )
         for b in inst.buckets
     )
-    scaled = BucketedInstance(
-        buckets=buckets,
-        rhs=jnp.asarray(inst.rhs) * d2.reshape(-1),
-        num_sources=inst.num_sources,
-        num_destinations=inst.num_destinations,
-        num_families=inst.num_families,
+    # dataclasses.replace keeps the static fields — including an attached
+    # FormulationSpec, so compiled formulations survive the device-side
+    # normalization inside the service engine's solves
+    scaled = dataclasses.replace(
+        inst, buckets=buckets, rhs=jnp.asarray(inst.rhs) * d2.reshape(-1)
     )
     return scaled, d2.reshape(-1)
 
@@ -333,11 +399,9 @@ def normalize_rows(
                 length=b.length,
             )
         )
-    scaled = BucketedInstance(
+    scaled = dataclasses.replace(
+        inst,
         buckets=tuple(buckets),
         rhs=(np.asarray(inst.rhs) * d).astype(inst.rhs.dtype),
-        num_sources=inst.num_sources,
-        num_destinations=inst.num_destinations,
-        num_families=inst.num_families,
     )
     return scaled, d

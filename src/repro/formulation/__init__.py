@@ -1,0 +1,68 @@
+"""Operator-centric formulation layer (the paper's third pillar).
+
+Composable problem descriptions over one dual oracle:
+
+    from repro.formulation import Formulation, CappedSimplex
+
+    comp = Formulation(feasible_sets=CappedSimplex(cap=0.5)).compile(packed)
+    res = comp.solve(MaximizerConfig())              # unchanged Maximizer
+    raw = compiled_solver(cfg)(comp.instance, lam0)  # unchanged service engine
+
+A `Formulation(feasible_sets, terms, couplings)` lowers via `.compile` onto
+the existing oracle/kernels: feasible sets to `ProjectionMap`s
+(`FeasibleSet.lower()`), terms to oracle scales, couplings to an rhs
+transform — packaged as a static `FormulationSpec` the `MatchingObjective`
+shim resolves at trace time.  New constraint families need no solve-loop
+changes; see docs/formulation.md for the catalog, lowering rules and worked
+capacity-cap / fairness-floor examples.
+"""
+from repro.formulation.couplings import Coupling, PackedCoupling
+from repro.formulation.feasible import (
+    Box,
+    BudgetPacedBox,
+    CappedSimplex,
+    FairnessFloor,
+    FeasibleSet,
+    Simplex,
+)
+from repro.formulation.formulation import (
+    SCENARIOS,
+    CompiledFormulation,
+    Formulation,
+    attach,
+    budget_pacing_formulation,
+    capacity_cap_formulation,
+    fairness_floor_formulation,
+    matching_formulation,
+    scenario_formulation,
+    strip,
+)
+from repro.formulation.spec import FormulationSpec, LoweredFormulation, lower_spec
+from repro.formulation.terms import LinearCost, RidgeSmoothing, Term
+
+__all__ = [
+    "Coupling",
+    "PackedCoupling",
+    "Box",
+    "BudgetPacedBox",
+    "CappedSimplex",
+    "FairnessFloor",
+    "FeasibleSet",
+    "Simplex",
+    "SCENARIOS",
+    "CompiledFormulation",
+    "Formulation",
+    "attach",
+    "budget_pacing_formulation",
+    "capacity_cap_formulation",
+    "fairness_floor_formulation",
+    "matching_formulation",
+    "scenario_formulation",
+    "strip",
+    "FormulationSpec",
+    "LoweredFormulation",
+    "lower_spec",
+    "LinearCost",
+    "RidgeSmoothing",
+    "Term",
+]

@@ -62,6 +62,15 @@ class BucketedInstance:
     num_sources: int = dataclasses.field(metadata=dict(static=True))
     num_destinations: int = dataclasses.field(metadata=dict(static=True))
     num_families: int = dataclasses.field(metadata=dict(static=True))
+    # Optional compiled-formulation metadata (repro.formulation.FormulationSpec,
+    # hashable+frozen).  Static: it is part of the treedef, so the shape-keyed
+    # jit caches in service/engine.py key executables on the formulation too,
+    # and MatchingObjective (the shim) resolves it at trace time — which is how
+    # a compiled formulation dispatches through the solve/service layers with
+    # zero edits to maximizer/sharding/service.  None = legacy matching.
+    formulation: Optional[object] = dataclasses.field(
+        default=None, metadata=dict(static=True)
+    )
 
     @property
     def dual_dim(self) -> int:

@@ -154,14 +154,23 @@ def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
                     fused_kernel: bool = False,
                     fused_oracle: bool = False,
                     tol_grad: Optional[float] = None,
-                    tol_viol: Optional[float] = None) -> dict:
+                    tol_viol: Optional[float] = None,
+                    formulation: str = "matching") -> dict:
     from repro.analysis.hlo_stats import collective_stats
     from repro.configs import LP_INSTANCES
     from repro.core.maximizer import MaximizerConfig
     from repro.core.sharding import DistConfig, DistributedMaximizer
+    from repro.formulation import scenario_formulation
     from repro.instances.specs import solver_input_specs
     from repro.launch.mesh import solver_axes
 
+    if formulation != "matching" and (fused_kernel or fused_oracle):
+        raise ValueError("fused kernels implement the simplex feasible set; "
+                         "only the matching formulation can use them")
+    # The spec-shaped dry-run has no concrete instance to attach a spec to,
+    # so lower the feasible set directly and hand the DistributedMaximizer
+    # its projection (the supported zero-sharding-edits path).
+    projection = scenario_formulation(formulation).shared_projection()
     mesh = _mesh(mesh_name)
     axes = solver_axes(mesh)
     n_shards = int(mesh.size)
@@ -181,6 +190,7 @@ def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
         DistConfig(axes=axes, comm_mode=comm_mode, compress=compress,
                    fused_kernel=fused_kernel, fused_oracle=fused_oracle,
                    kernel_interpret=True),
+        projection=projection,
     )
     t0 = time.time()
     lowered = dm.lower_stage()
@@ -200,8 +210,10 @@ def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
     # useful work per stage: 2 SpMVs (2 flops/nnz each) per iteration
     model_flops = 4.0 * nnz * iters
     return {
-        "cell": f"solver-{inst_name}/{comm_mode}+{compress}/{mesh_name}",
+        "cell": f"solver-{inst_name}/{comm_mode}+{compress}/{mesh_name}"
+                + ("" if formulation == "matching" else f"/{formulation}"),
         "arch": f"solver-{inst_name}",
+        "formulation": formulation,
         "shape": f"stage{iters}",
         "kind": "solver",
         "mesh": mesh_name,
@@ -338,6 +350,11 @@ def main(argv: Optional[list[str]] = None) -> int:
     ap.add_argument("--fused-oracle", action="store_true")
     ap.add_argument("--tol-grad", type=float, default=None)
     ap.add_argument("--tol-viol", type=float, default=None)
+    ap.add_argument("--formulation", default="matching",
+                    choices=["matching", "capacity-cap", "fairness-floor",
+                             "budget-pacing"],
+                    help="scenario formulation; lowers to the projection "
+                         "handed to the distributed stage (solver cells only)")
     ap.add_argument("--tag", default="", help="suffix for the output json")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--all", action="store_true")
@@ -357,7 +374,8 @@ def main(argv: Optional[list[str]] = None) -> int:
                                   fused_kernel=args.fused_kernel,
                                   fused_oracle=args.fused_oracle,
                                   tol_grad=args.tol_grad,
-                                  tol_viol=args.tol_viol)
+                                  tol_viol=args.tol_viol,
+                                  formulation=args.formulation)
             tag = f"solver-{args.solver}__{args.mesh}"
             if args.comm_mode != "psum" or args.compress != "none":
                 tag += f"__{args.comm_mode}-{args.compress}"
@@ -365,6 +383,8 @@ def main(argv: Optional[list[str]] = None) -> int:
                 tag += "__fusedoracle"
             if args.tol_grad is not None or args.tol_viol is not None:
                 tag += "__earlystop"
+            if args.formulation != "matching":
+                tag += f"__{args.formulation}"
             if args.tag:
                 tag += "__" + args.tag
         else:

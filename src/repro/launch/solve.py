@@ -28,6 +28,14 @@ def main() -> int:
                     help="relative gradient-norm tolerance (enables early stop)")
     ap.add_argument("--tol-viol", type=float, default=None,
                     help="max-violation tolerance (enables early stop)")
+    ap.add_argument("--formulation", default="matching",
+                    choices=["matching", "capacity-cap", "fairness-floor",
+                             "budget-pacing"],
+                    help="scenario formulation compiled through "
+                         "repro.formulation (docs/formulation.md)")
+    ap.add_argument("--formulation-param", type=float, default=None,
+                    help="primary scenario knob: simplex radius / cap / "
+                         "floor / pace (scenario default when omitted)")
     args = ap.parse_args()
 
     import jax
@@ -37,12 +45,17 @@ def main() -> int:
     from repro import compat
     from repro.core import (
         DistConfig, DistributedMaximizer, Maximizer, MaximizerConfig,
-        MatchingObjective, normalize_rows,
+        normalize_rows,
     )
+    from repro.formulation import scenario_formulation
     from repro.instances import (
         MatchingInstanceSpec, bucketize, generate_matching_instance,
         unpack_primal,
     )
+
+    if args.formulation != "matching" and (args.fused_kernel or args.fused_oracle):
+        ap.error("--fused-kernel/--fused-oracle implement the simplex "
+                 "feasible set; only --formulation matching can use them")
 
     n = args.shards or len(jax.devices())
     spec = MatchingInstanceSpec(
@@ -53,7 +66,11 @@ def main() -> int:
     inst = generate_matching_instance(spec)
     packed = bucketize(inst, shard_multiple=n)
     scaled, _ = normalize_rows(packed)
-    print(f"generated {inst.nnz} nnz in {time.time() - t0:.1f}s; shards={n}")
+    comp = scenario_formulation(
+        args.formulation, args.formulation_param
+    ).compile(scaled)
+    print(f"generated {inst.nnz} nnz in {time.time() - t0:.1f}s; shards={n}; "
+          f"formulation={args.formulation}")
 
     cfg = MaximizerConfig(iters_per_stage=args.iters_per_stage,
                           tol_grad=args.tol_grad, tol_viol=args.tol_viol)
@@ -61,16 +78,17 @@ def main() -> int:
     if n > 1:
         mesh = compat.make_mesh((n,), ("data",))
         dm = DistributedMaximizer(
-            scaled, mesh, cfg,
+            comp.sharded_instance(), mesh, cfg,
             DistConfig(axes="data", comm_mode=args.comm_mode,
                        compress=args.compress, fused_kernel=args.fused_kernel,
                        fused_oracle=args.fused_oracle),
+            projection=comp.projection,
         )
         dm.place()
         res = dm.solve()
     else:
-        obj = MatchingObjective(scaled, fused_kernel=args.fused_kernel,
-                                fused_oracle=args.fused_oracle)
+        obj = comp.objective(fused_kernel=args.fused_kernel,
+                             fused_oracle=args.fused_oracle)
         res = Maximizer(obj, cfg).solve()
     dt = time.time() - t0
     total_iters = res.total_iters_used or cfg.total_iters

@@ -1,0 +1,139 @@
+"""Property suite for every `FeasibleSet.lower()` projection.
+
+For each set in the catalog the lowered `ProjectionMap` must satisfy the
+three properties that make the dual oracle sound (paper §4.2):
+
+  idempotence        P(P(z)) == P(z)          (P lands *on* the set)
+  non-expansiveness  ||P(a)-P(b)|| <= ||a-b|| (AGD step-size analysis)
+  membership         P(z) in C                (via `FeasibleSet.contains`,
+                                               incl. pads-stay-zero)
+
+Runs under hypothesis when available; falls back to a fixed sample grid
+otherwise (the pattern from tests/test_deltas.py), so the suite is never
+silently skipped.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.formulation import (
+    Box,
+    BudgetPacedBox,
+    CappedSimplex,
+    FairnessFloor,
+    Simplex,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dep; the fixed-sample fallback below runs
+    HAVE_HYPOTHESIS = False
+
+ATOL = 2e-5
+
+# Feasibility-safe parameters: rows have at most L_MAX real entries, and
+# every set below is non-empty at that degree (FairnessFloor needs
+# floor * L_MAX <= radius: 0.05 * 16 = 0.8 <= 1.0).
+L_MAX = 16
+CATALOG = [
+    Box(lo=0.0, hi=0.7),
+    Box(lo=-0.5, hi=0.5),
+    Simplex(),
+    Simplex(radius=2.5),
+    Simplex(radius=1.0, inequality=False),
+    CappedSimplex(cap=0.4),
+    CappedSimplex(cap=0.15, radius=0.8),
+    FairnessFloor(floor=0.05, hi=1.0, radius=1.0),
+    BudgetPacedBox(pace=0.3, budget=1.5),
+]
+IDS = [
+    "box", "box-neg", "simplex", "simplex-r2.5", "simplex-eq",
+    "cap-0.4", "cap-0.15", "floor-0.05", "pace-0.3",
+]
+
+
+def _sample(rng, n, L, scale=3.0):
+    v = rng.normal(size=(n, L)).astype(np.float32) * scale
+    mask = (rng.random((n, L)) < 0.8).astype(np.float32)
+    mask[:, 0] = 1.0  # at least one real entry per row
+    return jnp.asarray(v), jnp.asarray(mask)
+
+
+def _check_properties(fs, seed, n, L):
+    rng = np.random.default_rng(seed)
+    proj = fs.lower()
+    v, mask = _sample(rng, n, L)
+
+    w = proj(v, mask)
+    # membership (includes pads-stay-zero)
+    assert fs.contains(w, mask), (
+        f"{fs} projection output left the set:\n{np.asarray(w)}"
+    )
+    # idempotence
+    w2 = proj(w, mask)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w), atol=ATOL)
+    # non-expansiveness
+    v2 = v + jnp.asarray(rng.normal(size=v.shape).astype(np.float32)) * mask
+    w_b = proj(v2, mask)
+    d_in = np.linalg.norm(np.asarray((v - v2) * mask))
+    d_out = np.linalg.norm(np.asarray(w - w_b))
+    assert d_out <= d_in + 1e-4, f"{fs} projection expanded: {d_out} > {d_in}"
+
+
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.parametrize("fs", CATALOG, ids=IDS)
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n=st.integers(1, 6),
+        L=st.integers(1, L_MAX),
+    )
+    def test_projection_properties(fs, seed, n, L):
+        _check_properties(fs, seed, n, L)
+
+else:
+
+    @pytest.mark.parametrize("fs", CATALOG, ids=IDS)
+    @pytest.mark.parametrize("seed", range(8))
+    @pytest.mark.parametrize("shape", [(1, 1), (2, 5), (3, 8), (4, L_MAX)])
+    def test_projection_properties(fs, seed, shape):
+        _check_properties(fs, seed, *shape)
+
+
+@pytest.mark.parametrize("fs", CATALOG, ids=IDS)
+def test_feasible_point_is_fixed(fs):
+    """A point already in C must be (nearly) fixed by the projection."""
+    rng = np.random.default_rng(0)
+    proj = fs.lower()
+    v, mask = _sample(rng, 4, 8)
+    w = proj(v, mask)  # in C by membership above
+    w2 = proj(w, mask)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w), atol=ATOL)
+
+
+def test_contains_rejects_out_of_set_points():
+    """The membership predicates themselves must not be vacuous."""
+    mask = np.ones((1, 4), np.float32)
+    assert not Box(lo=0.0, hi=0.5).contains([[0.9, 0, 0, 0]], mask)
+    assert not Simplex().contains([[0.9, 0.9, 0, 0]], mask)
+    assert not Simplex(inequality=False).contains([[0.2, 0.2, 0, 0]], mask)
+    assert not CappedSimplex(cap=0.3).contains([[0.5, 0, 0, 0]], mask)
+    assert not FairnessFloor(floor=0.1).contains([[0.01, 0.2, 0.2, 0.2]], mask)
+    assert not BudgetPacedBox(pace=0.2, budget=1.0).contains(
+        [[0.4, 0, 0, 0]], mask
+    )
+    # pad leak: masked-out entries must be exactly zero
+    assert not Simplex().contains(
+        [[0.5, 0.0, 0.0, 0.1]], [[1.0, 1.0, 1.0, 0.0]]
+    )
+
+
+def test_equality_simplex_lands_on_boundary():
+    rng = np.random.default_rng(1)
+    v, mask = _sample(rng, 5, 6)
+    w = np.asarray(Simplex(radius=1.0, inequality=False).lower()(v, mask))
+    sums = (w * np.asarray(mask)).sum(-1)
+    np.testing.assert_allclose(sums, 1.0, atol=1e-4)

@@ -1,0 +1,340 @@
+"""Formulation layer: primitives lower onto the untouched oracle stack.
+
+Parity pins: matching-expressed-as-primitives must reproduce the legacy
+`MatchingObjective` (duals rel-L2 <= 1e-6, identical per-stage iters_used)
+on both the fallback and fused-oracle paths.  Scenario pins: capacity caps,
+fairness floors and budget pacing solve end-to-end through
+`Formulation.compile` — including the untouched service engine and the
+distributed layer over every local device.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat, telemetry
+from repro.core import (
+    DistConfig,
+    DistributedMaximizer,
+    MatchingObjective,
+    Maximizer,
+    MaximizerConfig,
+    normalize_rows,
+)
+from repro.core.projections import BoxCutProjection, UnitSimplexProjection
+from repro.formulation import (
+    Box,
+    CappedSimplex,
+    FairnessFloor,
+    Formulation,
+    FormulationSpec,
+    LinearCost,
+    PackedCoupling,
+    RidgeSmoothing,
+    Simplex,
+    budget_pacing_formulation,
+    capacity_cap_formulation,
+    fairness_floor_formulation,
+    lower_spec,
+    matching_formulation,
+    scenario_formulation,
+)
+from repro.instances import (
+    MatchingInstanceSpec,
+    bucketize,
+    generate_matching_instance,
+)
+from repro.service import compiled_solver
+
+
+def _scaled(seed=7, I=400, J=23, m=2, shard_multiple=1):
+    spec = MatchingInstanceSpec(
+        num_sources=I, num_destinations=J, avg_degree=4.0,
+        num_families=m, seed=seed,
+    )
+    packed = bucketize(generate_matching_instance(spec),
+                       shard_multiple=shard_multiple)
+    scaled, _ = normalize_rows(packed)
+    return scaled
+
+
+def _rel_l2(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return float(np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-12))
+
+
+EARLY_CFG = MaximizerConfig(iters_per_stage=60, tol_grad=1e-3, tol_viol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# parity: matching-as-primitives == legacy MatchingObjective
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fused_oracle", [False, True])
+def test_matching_primitives_parity(fused_oracle):
+    scaled = _scaled()
+    legacy = Maximizer(
+        MatchingObjective(scaled, fused_oracle=fused_oracle), EARLY_CFG
+    ).solve()
+    comp = matching_formulation().compile(scaled)
+    prim = comp.solve(EARLY_CFG, fused_oracle=fused_oracle)
+    assert _rel_l2(prim.lam, legacy.lam) <= 1e-6
+    assert prim.iters_used == legacy.iters_used
+    assert np.isclose(float(prim.g), float(legacy.g), rtol=1e-6)
+
+
+def test_matching_primitives_parity_is_bitwise():
+    """The default composition must not even perturb the jaxpr: same
+    projection object, unit scales, untouched rhs -> identical arrays."""
+    scaled = _scaled(seed=3)
+    cfg = MaximizerConfig(iters_per_stage=30)
+    legacy = Maximizer(MatchingObjective(scaled), cfg).solve()
+    prim = matching_formulation().compile(scaled).solve(cfg)
+    assert np.array_equal(np.asarray(prim.lam), np.asarray(legacy.lam))
+
+
+def test_formulation_objective_matches_dense_scales():
+    """Non-unit term scales lower into the oracle: g uses scaled c and gamma."""
+    scaled = _scaled(seed=11, I=80, J=9, m=1)
+    form = Formulation(
+        terms=(LinearCost(scale=2.0), RidgeSmoothing(weight=0.5)),
+        name="scaled_terms",
+    )
+    obj = form.compile(scaled).objective()
+    base = MatchingObjective(scaled)
+    lam = jnp.asarray(
+        np.random.default_rng(0).random(base.dual_dim).astype(np.float32)
+    )
+    ev = obj.calculate(lam, 1.0)
+    # same point evaluated through the unscaled oracle at the equivalent
+    # (cost*2, gamma*0.5) parameters
+    ref = MatchingObjective(
+        dataclasses.replace(
+            scaled,
+            buckets=tuple(
+                dataclasses.replace(b, cost=2.0 * b.cost)
+                for b in scaled.buckets
+            ),
+        )
+    ).calculate(lam, 0.5)
+    assert _rel_l2(ev.grad, ref.grad) <= 1e-6
+    assert np.isclose(float(ev.g), float(ref.g), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# scenarios end-to-end (zero edits to maximizer/sharding/service)
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_cap_end_to_end():
+    scaled = _scaled(seed=5)
+    comp = capacity_cap_formulation(cap=0.4).compile(scaled)
+    res = comp.solve(MaximizerConfig(iters_per_stage=40))
+    for s, b in zip(res.x_slabs, comp.instance.buckets):
+        x = np.asarray(s)
+        assert x.max() <= 0.4 + 1e-5
+        assert x.min() >= -1e-6
+        rows = (x * np.asarray(b.mask)).sum(-1)
+        assert rows.max() <= 1.0 + 1e-4
+    assert np.isfinite(float(res.g))
+
+
+def test_fairness_floor_end_to_end():
+    scaled = _scaled(seed=6)
+    comp = fairness_floor_formulation(floor=0.05).compile(scaled)
+    res = comp.solve(MaximizerConfig(iters_per_stage=40))
+    for s, b in zip(res.x_slabs, comp.instance.buckets):
+        x, mask = np.asarray(s), np.asarray(b.mask)
+        real = x[mask > 0]
+        if real.size:
+            assert real.min() >= 0.05 - 1e-5
+        assert (np.abs(x[mask == 0]) == 0).all(), "pad leaked"
+
+
+def test_budget_pacing_end_to_end():
+    scaled = _scaled(seed=8)
+    comp = budget_pacing_formulation(pace=0.3, budget=1.5).compile(scaled)
+    res = comp.solve(MaximizerConfig(iters_per_stage=40))
+    for s, b in zip(res.x_slabs, comp.instance.buckets):
+        x = np.asarray(s)
+        assert x.max() <= 0.3 + 1e-5
+        rows = (x * np.asarray(b.mask)).sum(-1)
+        assert rows.max() <= 1.5 + 1e-4
+
+
+def test_rhs_scale_coupling_lowered_once():
+    scaled = _scaled(seed=9, I=60, J=7, m=1)
+    comp = capacity_cap_formulation(cap=0.9, rhs_scale=0.5).compile(scaled)
+    np.testing.assert_allclose(
+        np.asarray(comp.instance.rhs), 0.5 * np.asarray(scaled.rhs), rtol=1e-6
+    )
+    # the oracle's gradient uses the transformed rhs
+    obj = comp.objective()
+    ev = obj.calculate(jnp.zeros(obj.dual_dim), 1.0)
+    np.testing.assert_allclose(
+        np.asarray(ev.grad),
+        np.asarray(ev.ax) - 0.5 * np.asarray(scaled.rhs).reshape(-1),
+        atol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# service-engine dispatch: the spec rides the instance treedef
+# ---------------------------------------------------------------------------
+
+
+def test_engine_dispatches_formulation_without_service_edits():
+    scaled = _scaled(seed=12, I=200, J=11, m=1)
+    cfg = MaximizerConfig(iters_per_stage=30)
+    solver = compiled_solver(cfg)
+    lam0 = jnp.zeros(scaled.dual_dim)
+
+    legacy_raw = solver(scaled, lam0)
+    match_comp = matching_formulation().compile(scaled)
+    match_raw = solver(match_comp.instance, lam0)
+    assert _rel_l2(match_raw.lam, legacy_raw.lam) <= 1e-6
+
+    cap_comp = capacity_cap_formulation(cap=0.4).compile(scaled)
+    cap_raw = solver(cap_comp.instance, lam0)
+    for s in cap_raw.x_slabs:
+        assert np.asarray(s).max() <= 0.4 + 1e-5
+    # distinct formulations must not share an executable: the spec is part
+    # of the treedef, so the shape-keyed cache re-keys automatically and the
+    # capped solve genuinely differs from the legacy one.
+    assert not np.array_equal(
+        np.asarray(cap_raw.lam), np.asarray(legacy_raw.lam)
+    )
+
+    # direct CompiledFormulation.solve agrees with the engine path
+    direct = cap_comp.solve(cfg)
+    assert _rel_l2(cap_raw.lam, direct.lam) <= 1e-6
+
+
+def test_normalize_preserves_formulation_spec():
+    packed = bucketize(generate_matching_instance(MatchingInstanceSpec(
+        num_sources=50, num_destinations=5, avg_degree=3.0,
+        num_families=1, seed=0,
+    )))
+    comp = capacity_cap_formulation(cap=0.3).compile(packed)
+    renorm, _ = normalize_rows(comp.instance)
+    assert renorm.formulation == comp.spec
+
+
+# ---------------------------------------------------------------------------
+# distributed parity over every local device (CI runs this file under
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 -> shard count > 1)
+# ---------------------------------------------------------------------------
+
+
+def test_distributed_formulation_parity():
+    n = len(jax.devices())
+    scaled = _scaled(seed=13, shard_multiple=n)
+    cfg = MaximizerConfig(iters_per_stage=40)
+    comp = capacity_cap_formulation(cap=0.4).compile(scaled)
+
+    single = comp.solve(cfg)
+    mesh = compat.make_mesh((n,), ("data",))
+    dm = DistributedMaximizer(
+        comp.sharded_instance(), mesh, cfg, DistConfig(axes="data"),
+        projection=comp.projection,
+    )
+    dm.place()
+    dist = dm.solve()
+    assert _rel_l2(dist.lam, single.lam) <= 1e-5
+    for s in dist.x_slabs:
+        assert np.asarray(s).max() <= 0.4 + 1e-5
+
+
+def test_distributed_matching_primitives_parity():
+    """Primitives vs legacy on the *same* distributed path (same psum
+    reduction order), so any difference is the formulation layer's."""
+    n = len(jax.devices())
+    scaled = _scaled(seed=14, shard_multiple=n)
+    comp = matching_formulation().compile(scaled)
+    mesh = compat.make_mesh((n,), ("data",))
+
+    def run(inst, **kw):
+        dm = DistributedMaximizer(
+            inst, mesh, EARLY_CFG, DistConfig(axes="data"), **kw
+        )
+        dm.place()
+        return dm.solve()
+
+    legacy = run(scaled)
+    prim = run(comp.sharded_instance(), projection=comp.projection)
+    assert _rel_l2(prim.lam, legacy.lam) <= 1e-6
+    assert prim.iters_used == legacy.iters_used
+
+
+# ---------------------------------------------------------------------------
+# compile telemetry + validation
+# ---------------------------------------------------------------------------
+
+
+def test_compile_emits_telemetry():
+    scaled = _scaled(seed=15, I=40, J=5, m=1)
+    reg = telemetry.get_registry()
+
+    def counter(name):
+        return sum(
+            v for k, v in reg.snapshot()["counters"].items()
+            if k.startswith(name)
+        )
+
+    before = counter("formulation_compiles_total")
+    capacity_cap_formulation(cap=0.5).compile(scaled)
+    after = reg.snapshot()["counters"]
+    assert counter("formulation_compiles_total") == before + 1
+    assert any(
+        k.startswith("formulation_compiles_total")
+        and "capacity_cap" in k
+        for k in after
+    )
+    assert any(
+        k.startswith("formulation_primitives_total") for k in after
+    )
+
+
+def test_lowering_table():
+    assert Simplex().lower() == UnitSimplexProjection()
+    assert CappedSimplex(cap=0.4).lower() == BoxCutProjection(
+        lo=0.0, hi=0.4, radius=1.0
+    )
+    assert isinstance(FairnessFloor(floor=0.02).lower(), BoxCutProjection)
+
+
+def test_validation_errors():
+    scaled = _scaled(seed=16, I=40, J=5, m=1)
+    bad_count = len(scaled.buckets) + 2  # never 1 (shared) nor per-bucket
+    with pytest.raises(ValueError, match="feasible sets"):
+        spec = FormulationSpec(feasible=(Simplex(),) * bad_count)
+        lower_spec(spec, scaled)
+    with pytest.raises(ValueError):
+        Formulation(terms=(LinearCost(), LinearCost())).compile(scaled)
+    with pytest.raises(ValueError):
+        Formulation(couplings=()).compile(scaled)
+    with pytest.raises(ValueError):
+        Formulation(
+            couplings=(PackedCoupling(sense="ge"),)
+        ).compile(scaled)
+    with pytest.raises(ValueError):
+        scenario_formulation("nope")
+    with pytest.raises(ValueError):
+        CappedSimplex(cap=-0.1).validate()
+    with pytest.raises(ValueError):
+        Box(lo=1.0, hi=0.0).validate()
+    with pytest.raises(ValueError):
+        Formulation(
+            feasible_sets=(Simplex(), CappedSimplex())
+        ).shared_projection()
+
+
+def test_fused_paths_reject_non_simplex_formulations():
+    scaled = _scaled(seed=17, I=40, J=5, m=1)
+    comp = capacity_cap_formulation(cap=0.5).compile(scaled)
+    obj = comp.objective(fused_oracle=True)
+    with pytest.raises(AssertionError, match="simplex"):
+        obj.calculate(jnp.zeros(obj.dual_dim), 1.0)

@@ -1,0 +1,125 @@
+"""LP fidelity: the regularized solve tracks the true LP optimum.
+
+ROADMAP design caveat: the gamma-floor smoothing leaves a bias at the
+paper's production floor (1e-2), so LP-fidelity tests must extend the
+continuation schedule (to ~1e-3) and compare *objectives* against an exact
+small-instance reference (scipy linprog) — not assert tiny absolute
+constraint violations, which the smoothed solution never achieves.
+
+Covers the legacy matching formulation and the capacity-cap formulation
+(the LP reference simply tightens the variable bounds to (0, cap)).
+"""
+import numpy as np
+import pytest
+
+from repro.core import Maximizer, MaximizerConfig, MatchingObjective, normalize_rows
+from repro.formulation import capacity_cap_formulation
+from repro.instances import (
+    MatchingInstanceSpec,
+    bucketize,
+    generate_matching_instance,
+    unpack_primal,
+)
+
+scipy_opt = pytest.importorskip("scipy.optimize")
+
+pytestmark = pytest.mark.slow
+
+# paper schedule extended past the production gamma floor to ~1e-3
+EXTENDED_GAMMAS = (1e3, 1e2, 10.0, 1.0, 1e-1, 1e-2, 3e-3, 1e-3)
+
+
+def _instance(seed=2, I=60, J=8, m=1):
+    spec = MatchingInstanceSpec(
+        num_sources=I, num_destinations=J, avg_degree=3.0,
+        num_families=m, seed=seed,
+    )
+    inst = generate_matching_instance(spec)
+    packed = bucketize(inst)
+    scaled, _ = normalize_rows(packed)
+    return inst, packed, scaled
+
+
+def _lp_reference(inst, cap=None):
+    """Exact LP optimum over the edge variables via scipy linprog.
+
+    min c'x  s.t.  A x <= b,  per-source sum_j x_ij <= 1,  0 <= x <= cap.
+    """
+    J = inst.spec.num_destinations
+    A, b, c = inst.to_dense()
+    cols = inst.src * J + inst.dst
+    A_e = A[:, cols]
+    # per-source simplex rows over the edge set
+    sources = np.unique(inst.src)
+    S = np.zeros((sources.size, cols.size))
+    for r, i in enumerate(sources):
+        S[r, np.flatnonzero(inst.src == i)] = 1.0
+    res = scipy_opt.linprog(
+        c[cols],
+        A_ub=np.vstack([A_e, S]),
+        b_ub=np.concatenate([b, np.ones(sources.size)]),
+        bounds=(0, cap),
+        method="highs",
+    )
+    assert res.status == 0, res.message
+    return res
+
+
+def _primal_value(inst, packed, res):
+    x = unpack_primal(packed, [np.asarray(s) for s in res.x_slabs])
+    return float(np.dot(inst.cost, x)), x
+
+
+def test_matching_tracks_lp_optimum():
+    inst, packed, scaled = _instance()
+    ref = _lp_reference(inst)
+    cfg = MaximizerConfig(gammas=EXTENDED_GAMMAS, iters_per_stage=300)
+    res = Maximizer(MatchingObjective(scaled), cfg).solve()
+    val, x = _primal_value(inst, packed, res)
+    scale = max(abs(ref.fun), 1.0)
+    gap = (val - ref.fun) / scale
+    # smoothed objective upper-bounds the LP optimum and must be close;
+    # no absolute-violation assertion (see module docstring)
+    assert gap >= -1e-4, f"beat the LP optimum? gap={gap}"
+    assert gap <= 2e-2, f"objective gap vs linprog too large: {gap}"
+    # the dual objective brackets from below at the final gamma
+    assert float(res.g) <= ref.fun + 1e-2 * scale
+
+
+def test_gamma_floor_bias_shrinks_with_continuation():
+    """Extending the schedule below the production floor must tighten the
+    gap — the quantitative form of the ROADMAP caveat."""
+    inst, packed, scaled = _instance(seed=4)
+    ref = _lp_reference(inst)
+    scale = max(abs(ref.fun), 1.0)
+
+    def gap(gammas):
+        cfg = MaximizerConfig(gammas=gammas, iters_per_stage=300)
+        res = Maximizer(MatchingObjective(scaled), cfg).solve()
+        val, _ = _primal_value(inst, packed, res)
+        return (val - ref.fun) / scale
+
+    g_floor = gap(EXTENDED_GAMMAS[:6])  # production floor 1e-2
+    g_ext = gap(EXTENDED_GAMMAS)  # extended to 1e-3
+    assert g_ext <= g_floor + 1e-5
+    assert g_ext <= 2e-2
+
+
+def test_capacity_cap_tracks_lp_optimum():
+    """Capacity-cap formulation vs linprog with tightened bounds (0, cap)."""
+    inst, packed, scaled = _instance(seed=3)
+    cap = 0.4
+    ref = _lp_reference(inst, cap=cap)
+    ref_uncapped = _lp_reference(inst)
+    # the cap must actually bind on this instance, else the test is vacuous
+    assert ref.fun > ref_uncapped.fun + 1e-6
+
+    comp = capacity_cap_formulation(cap=cap).compile(scaled)
+    cfg = MaximizerConfig(gammas=EXTENDED_GAMMAS, iters_per_stage=300)
+    res = comp.solve(cfg)
+    val, x = _primal_value(inst, packed, res)
+    assert x.max() <= cap + 1e-5
+    scale = max(abs(ref.fun), 1.0)
+    gap = (val - ref.fun) / scale
+    assert gap >= -1e-4, f"beat the capped LP optimum? gap={gap}"
+    assert gap <= 2e-2, f"capacity-cap objective gap vs linprog: {gap}"

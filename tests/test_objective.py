@@ -1,4 +1,12 @@
-"""MatchingObjective vs dense-matrix formulas (eq. 2-4) on small instances."""
+"""MatchingObjective vs dense-matrix formulas (eq. 2-4) on small instances.
+
+Assertions are written against the public `DualEval` contract — every field
+(`g`, `grad`, `x_slabs`, `primal_linear`, `primal_ridge`, `ax`) is pinned to
+its dense definition, plus the two internal identities that tie them
+together (`grad == ax - b`, `g == primal_linear + primal_ridge + lam'grad`).
+The formulation layer's shim and the service engine both consume exactly
+this contract, so these pins are what "zero solver edits" rests on.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -41,17 +49,57 @@ def _dense_x_star(inst, lam, gamma):
 
 @pytest.mark.parametrize("gamma", [0.05, 1.0, 50.0])
 def test_calculate_matches_dense(small, gamma):
+    """Every public DualEval field against its dense definition."""
     inst, packed = small
     m, J = inst.spec.num_families, inst.spec.num_destinations
     lam = np.random.default_rng(0).random(m * J).astype(np.float32)
     ev = MatchingObjective(packed).calculate(jnp.asarray(lam), gamma)
     x_dense, A, b, c = _dense_x_star(inst, lam, gamma)
+
+    # x_slabs: the eq.-3 primal candidate
     x_ours = unpack_primal(packed, ev.x_slabs)
     np.testing.assert_allclose(x_ours, x_dense, atol=2e-5)
+    # ax: the raw matrix-vector product A x* (pre-rhs)
+    np.testing.assert_allclose(np.asarray(ev.ax), A @ x_dense, atol=1e-4)
+    # primal decomposition: c'x and (gamma/2)||x||^2
+    np.testing.assert_allclose(
+        float(ev.primal_linear), c @ x_dense, rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        float(ev.primal_ridge), gamma / 2 * (x_dense ** 2).sum(),
+        rtol=1e-4, atol=1e-6,
+    )
+    # grad: exactly ax - b (the contract distributed reductions rely on)
     grad_dense = A @ x_dense - b
     np.testing.assert_allclose(np.asarray(ev.grad), grad_dense, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(ev.grad), np.asarray(ev.ax) - b, atol=1e-6
+    )
+    # g: the eq.-2 dual objective, and its internal decomposition identity
     g_dense = c @ x_dense + gamma / 2 * (x_dense ** 2).sum() + lam @ grad_dense
     np.testing.assert_allclose(float(ev.g), g_dense, rtol=1e-5)
+    np.testing.assert_allclose(
+        float(ev.g),
+        float(ev.primal_linear) + float(ev.primal_ridge)
+        + float(lam @ np.asarray(ev.grad)),
+        rtol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("gamma", [0.05, 1.0])
+def test_primal_objective_matches_decomposition(small, gamma):
+    """primal_objective(x, gamma) == primal_linear + primal_ridge at x*."""
+    inst, packed = small
+    obj = MatchingObjective(packed)
+    lam = jnp.asarray(
+        np.random.default_rng(2).random(obj.dual_dim).astype(np.float32)
+    )
+    ev = obj.calculate(lam, gamma)
+    np.testing.assert_allclose(
+        float(obj.primal_objective(ev.x_slabs, gamma)),
+        float(ev.primal_linear) + float(ev.primal_ridge),
+        rtol=1e-5,
+    )
 
 
 def test_apply_A_and_AT_adjoint(small):
@@ -80,7 +128,15 @@ def test_power_iteration_matches_dense_sigma(small):
 
 
 def test_max_violation(small):
+    """max_violation == max(0, Ax - b) computed from the DualEval fields."""
     inst, packed = small
     obj = MatchingObjective(packed)
     ev = obj.calculate(jnp.zeros(obj.dual_dim), 1.0)
-    assert float(obj.max_violation(ev.x_slabs)) >= 0.0
+    viol = float(obj.max_violation(ev.x_slabs))
+    assert viol >= 0.0
+    _, b, _ = inst.to_dense()
+    np.testing.assert_allclose(
+        viol,
+        max(0.0, float((np.asarray(ev.ax) - b).max())),
+        atol=1e-6,
+    )
