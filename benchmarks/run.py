@@ -34,6 +34,7 @@ SUITES = [
     "fig4_preconditioning",
     "fig5_continuation",
     "service_cadence",
+    "serving_latency",
     "roofline_report",
 ]
 

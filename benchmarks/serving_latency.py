@@ -1,0 +1,366 @@
+"""Serving-latency benchmark: allocation queries from device-resident duals.
+
+Measures what the serving layer promises (see docs/serving.md): once a
+cadence solve has published its duals, answering "what is user u's
+allocation right now" is an O(degree) gather + projection — no solve at
+request time.  Three scenarios:
+
+  * ``single_tenant_sync``  — one tenant at 10^5+ simulated users (full
+    mode; ``--quick`` shrinks it), sequential query batches against a
+    static snapshot: per-batch p50/p99 latency and users/second.
+  * ``multi_tenant``        — the same request volume spread round-robin
+    over many tenants (distinct snapshots, shared kernel cache).
+  * ``pipelined_mid_solve`` — batches hammering the store WHILE the
+    scheduler's double-buffered pipeline swaps generations underneath;
+    every answered batch is then replayed post-hoc against the retained
+    snapshot of the generation it reported and checked BIT-identical
+    (``verified_bit_identical``) — the generation-fence acceptance test
+    at benchmark volume.
+
+Rows: ``serving_<scenario>,us_per_batch,derived``.  Standalone entry point
+writes the BENCH_serving.json perf record and (``--metrics-out``) one
+telemetry ``serving_query`` JSONL record per answered batch:
+
+    PYTHONPATH=src python -m benchmarks.serving_latency --quick \
+        --bench-out BENCH_serving.json --metrics-out serving.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit
+
+RESULTS: dict = {}
+
+_DEFAULT_BENCH_OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_serving.json",
+)
+
+
+def _solve_cfg():
+    from repro.core import MaximizerConfig
+
+    # Serving latency does not depend on solve quality — a short schedule
+    # just has to produce duals to publish.
+    return MaximizerConfig(
+        gammas=(1.0, 0.1), iters_per_stage=10, power_iters=5
+    )
+
+
+def _publish_tenant(store, name, num_sources, seed, *, destinations):
+    """Generate, solve and publish one tenant; returns its snapshot."""
+    from repro.instances import (
+        DeltaIngestor,
+        MatchingInstanceSpec,
+        generate_matching_instance,
+    )
+    from repro.service import (
+        compiled_solver,
+        device_put_instance,
+        to_solve_result,
+    )
+
+    spec = MatchingInstanceSpec(
+        num_sources=num_sources,
+        num_destinations=destinations,
+        avg_degree=8.0,
+        seed=seed,
+    )
+    ing = DeltaIngestor(generate_matching_instance(spec), row_headroom=4)
+    dev = device_put_instance(ing.instance())
+    cfg = _solve_cfg()
+    lam0 = jnp.zeros((dev.dual_dim,), jnp.float32)
+    res = to_solve_result(compiled_solver(cfg, True)(dev, lam0))
+    return store.publish_result(
+        name, dev, res.lam,
+        generation=ing.generation, gamma=cfg.gammas[-1],
+        bucket_of=ing.bucket_of, row_of=ing.row_of, deg=ing.deg,
+    )
+
+
+def _record(sink, result):
+    if sink is not None:
+        sink.emit("serving_query", {
+            "tenant": result.tenant,
+            "generation": result.generation,
+            "users": int(result.num_users),
+            "latency_seconds": result.latency_seconds,
+        })
+
+
+def _summarize(key, results, wall, extra=None):
+    lats = np.asarray([r.latency_seconds for r in results])
+    users = int(sum(r.num_users for r in results))
+    summary = {
+        "batches": len(results),
+        "users_served": users,
+        "p50_ms": float(np.percentile(lats, 50) * 1e3),
+        "p99_ms": float(np.percentile(lats, 99) * 1e3),
+        "qps_users": float(users / max(wall, 1e-9)),
+        "wall_seconds": float(wall),
+    }
+    summary.update(extra or {})
+    RESULTS[key] = summary
+    emit(
+        f"serving_{key}", float(np.median(lats) * 1e6),
+        f"users={users};p50_ms={summary['p50_ms']:.3f};"
+        f"p99_ms={summary['p99_ms']:.3f};"
+        f"qps={summary['qps_users']:.0f}",
+    )
+    return summary
+
+
+def _warm(store, tenant, users, batch):
+    """Pre-compile every pad shape the timed loop can dispatch.
+
+    A random batch splits across buckets data-dependently, so each bucket
+    can see any request count in [1, batch] — padded to the next power of
+    two before dispatch.  Query each bucket alone at every pow2 size up to
+    the batch so the timed loop (and its p99) measures steady-state
+    latency, never an XLA compile.
+    """
+    snap = store.snapshot(tenant)
+    b_of = snap.bucket_of[users]
+    top = 1
+    while top < batch:
+        top *= 2
+    for t in np.unique(b_of):
+        bu = users[b_of == t]
+        s = 1
+        while s <= top:
+            store.query(tenant, bu[np.arange(s) % bu.size])
+            s *= 2
+
+
+def _hammer(store, tenant, snap, batch, n_batches, sink, seed=0):
+    """Sequential query batches against the published snapshot."""
+    rng = np.random.default_rng(seed)
+    users = np.flatnonzero(snap.deg > 0)
+    _warm(store, tenant, users, batch)
+    results = []
+    t0 = time.perf_counter()
+    for _ in range(n_batches):
+        pick = rng.integers(0, users.size, size=batch)
+        r = store.query(tenant, users[pick])
+        _record(sink, r)
+        results.append(r)
+    return results, time.perf_counter() - t0
+
+
+def scenario_single_tenant(sink):
+    from repro.serving import DualStore
+
+    num_sources = 5_000 if common.QUICK else 100_000
+    destinations = 50 if common.QUICK else 200
+    batch = 256 if common.QUICK else 1024
+    n_batches = 40 if common.QUICK else 128
+    store = DualStore()
+    snap = _publish_tenant(
+        store, "t0", num_sources, 0, destinations=destinations
+    )
+    results, wall = _hammer(store, "t0", snap, batch, n_batches, sink)
+    return _summarize(
+        "single_tenant_sync", results, wall,
+        {"tenants": 1, "num_users": snap.num_users, "batch_size": batch},
+    )
+
+
+def scenario_multi_tenant(sink):
+    from repro.serving import DualStore
+
+    n_tenants = 2 if common.QUICK else 8
+    per_tenant = 2_000 if common.QUICK else 25_000
+    destinations = 50 if common.QUICK else 200
+    batch = 256 if common.QUICK else 1024
+    n_batches = 20 if common.QUICK else 64
+    store = DualStore()
+    snaps = {
+        f"t{i}": _publish_tenant(
+            store, f"t{i}", per_tenant, i, destinations=destinations
+        )
+        for i in range(n_tenants)
+    }
+    rng = np.random.default_rng(1)
+    live = {t: np.flatnonzero(s.deg > 0) for t, s in snaps.items()}
+    for i, (t, u) in enumerate(live.items()):
+        _warm(store, t, u, batch)
+    results = []
+    t0 = time.perf_counter()
+    for i in range(n_batches * n_tenants):
+        t = f"t{i % n_tenants}"
+        pick = rng.integers(0, live[t].size, size=batch)
+        r = store.query(t, live[t][pick])
+        _record(sink, r)
+        results.append(r)
+    wall = time.perf_counter() - t0
+    return _summarize(
+        "multi_tenant", results, wall,
+        {
+            "tenants": n_tenants,
+            "num_users": int(sum(s.num_users for s in snaps.values())),
+            "batch_size": batch,
+        },
+    )
+
+
+def scenario_pipelined(sink):
+    """Queries racing the scheduler's double-buffered pipeline, bit-verified."""
+    from repro.core import MaximizerConfig
+    from repro.instances import (
+        InstanceDelta,
+        MatchingInstanceSpec,
+        generate_matching_instance,
+    )
+    from repro.service import Scheduler, ServiceConfig
+    from repro.serving import DualStore, direct_allocations
+
+    num_sources = 2_000 if common.QUICK else 20_000
+    destinations = 50 if common.QUICK else 200
+    n_cadences = 2 if common.QUICK else 4
+    batch = 64 if common.QUICK else 256
+    rng = np.random.default_rng(2)
+    spec = MatchingInstanceSpec(
+        num_sources=num_sources, num_destinations=destinations,
+        avg_degree=8.0, seed=3,
+    )
+    base = generate_matching_instance(spec)
+    cfg = ServiceConfig(
+        cold=MaximizerConfig(
+            gammas=(1.0, 0.1), iters_per_stage=40, power_iters=10
+        ),
+        warm_gammas=(0.1,),
+        row_headroom=4,
+    )
+    store = DualStore(history=n_cadences + 2)
+    sched = Scheduler(cfg, dual_store=store)
+    sched.add_tenant("t0", base)
+    sched.run_cadence()  # initial publication
+
+    def delta():
+        n = max(1, base.src.size // 50)
+        pick = rng.choice(base.src.size, size=n, replace=False)
+        return InstanceDelta(
+            update_src=base.src[pick], update_dst=base.dst[pick],
+            update_values=base.values[pick] * rng.uniform(0.9, 1.1, n),
+        )
+
+    snap0 = store.snapshot("t0")
+    users = np.flatnonzero(snap0.deg > 0)
+    _warm(store, "t0", users, batch)
+    results = []
+    stop = threading.Event()
+
+    def hammer():
+        qrng = np.random.default_rng(4)
+        while not stop.is_set():
+            pick = qrng.integers(0, users.size, size=batch)
+            r = store.query("t0", users[pick])
+            _record(sink, r)
+            results.append(r)
+
+    worker = threading.Thread(target=hammer, daemon=True)
+    t0 = time.perf_counter()
+    worker.start()
+    try:
+        sched.run_pipeline([{"t0": delta()} for _ in range(n_cadences)])
+    finally:
+        stop.set()
+        worker.join(timeout=60)
+    wall = time.perf_counter() - t0
+    # post-hoc bit-identity replay: every batch against the retained
+    # snapshot of the generation it reported
+    verified = True
+    directs = {}
+    for r in results:
+        if r.generation not in directs:
+            directs[r.generation] = direct_allocations(
+                store.get("t0", r.generation)
+            )
+        xs = directs[r.generation]
+        for ba in r.slabs:
+            if not np.array_equal(ba.x, np.asarray(xs[ba.bucket])[ba.rows]):
+                verified = False
+    gens = sorted({r.generation for r in results})
+    return _summarize(
+        "pipelined_mid_solve", results, wall,
+        {
+            "tenants": 1,
+            "num_users": snap0.num_users,
+            "batch_size": batch,
+            "cadences": n_cadences,
+            "generations_observed": [int(g) for g in gens],
+            "verified_bit_identical": verified,
+        },
+    )
+
+
+def run(sink=None) -> None:
+    scenario_single_tenant(sink)
+    scenario_multi_tenant(sink)
+    scenario_pipelined(sink)
+
+
+def _write_bench(path: str) -> None:
+    record = {
+        "suite": "allocation serving from device-resident duals",
+        "quick": common.QUICK,
+        "scenarios": RESULTS,
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path}", file=sys.stderr)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shrunken volumes (CI smoke)")
+    ap.add_argument("--bench-out", default=_DEFAULT_BENCH_OUT,
+                    help="where to write BENCH_serving.json "
+                         "(empty string disables)")
+    ap.add_argument("--metrics-out", default="",
+                    help="emit one serving_query JSONL record per batch "
+                         "here (empty string disables)")
+    args = ap.parse_args()
+    if args.quick:
+        common.QUICK = True
+        if args.bench_out == _DEFAULT_BENCH_OUT:
+            # a reduced smoke sweep must not clobber the committed
+            # full-volume record; pass --bench-out to force a path
+            args.bench_out = ""
+            print("# --quick: skipping BENCH_serving.json (reduced sweep); "
+                  "pass --bench-out explicitly to write one", file=sys.stderr)
+    sink = None
+    if args.metrics_out:
+        from repro.telemetry import JsonlSink
+
+        sink = JsonlSink(args.metrics_out)
+    print("name,us_per_call,derived")
+    try:
+        run(sink)
+    finally:
+        if sink is not None:
+            sink.close()
+    if args.bench_out:
+        _write_bench(args.bench_out)
+    pipelined = RESULTS.get("pipelined_mid_solve", {})
+    if not pipelined.get("verified_bit_identical", False):
+        print("# FAIL: mid-solve batches not bit-identical to their "
+              "generation's direct projection", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,7 @@ import numpy as np
 
 from repro.configs import get_reduced_config
 from repro.models.model import Model
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.lm_demo.engine import Request, ServeEngine
 
 
 def main():

@@ -56,7 +56,7 @@ def run_arch_cell(arch: str, shape_name: str, mesh_name: str,
     from repro.configs import SHAPES, get_config, input_specs, skip_reason
     from repro.launch.mesh import default_profile
     from repro.models.model import Model
-    from repro.serving.steps import lower_decode_step, lower_prefill
+    from repro.serving.lm_demo.steps import lower_decode_step, lower_prefill
     from repro.training.train_step import lower_train_step
 
     cfg = get_config(arch)

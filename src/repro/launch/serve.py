@@ -1,51 +1,204 @@
-"""Serving CLI: batched request engine over a reduced arch config.
+"""Allocation-serving demo: query the dual store while the fleet re-solves.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
-        --requests 8 --max-new 24
+    PYTHONPATH=src python -m repro.launch.serve \
+        [--sources 4000] [--tenants 2] [--cadences 3] [--batch 128] \
+        [--hammer-threads 2] [--verify] \
+        [--metrics-out m.jsonl] [--prom-out m.prom]
+
+End-to-end demo of the request-time surface (docs/serving.md): a
+`Scheduler` with an attached `DualStore` publishes every tenant's duals as
+a generation-stamped snapshot after each cadence solve, while hammer
+threads batch-query allocations the whole time — including mid-solve,
+across the pipeline's snapshot swaps.  Each answered batch reports the
+generation it was served from; the demo prints per-tenant p50/p99 batch
+latency, users/second and the generations observed.
+
+`--verify` replays every answered batch post-hoc against the retained
+snapshot of the generation it reported and checks the served allocations
+BIT-identical to the direct full-slab projection — the generation-fence
+contract, checked at CLI volume.
+
+Telemetry: `--metrics-out` appends one schema-validated ``serving_query``
+JSONL record per batch plus a final ``counters`` snapshot (validate with
+``python tools/check_metrics.py --require-kinds serving_query m.jsonl``);
+`--prom-out` writes a Prometheus text-exposition snapshot (query counters,
+latency histogram, publish/generation gauges).
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-8b")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--slots", type=int, default=4)
-    args = ap.parse_args()
-
-    import jax
+def _delta(edge_list, rng, frac=0.02):
     import numpy as np
 
-    from repro.configs import get_reduced_config
-    from repro.models.model import Model
-    from repro.serving.engine import Request, ServeEngine
+    from repro.instances import InstanceDelta
 
-    cfg = get_reduced_config(args.arch)
-    model = Model(cfg)
-    params = model.init(jax.random.key(0))
-    engine = ServeEngine(
-        model, params, slots=args.slots,
-        max_seq=args.prompt_len + args.max_new + 8,
+    n = max(1, int(frac * edge_list.nnz))
+    pick = rng.choice(edge_list.nnz, size=n, replace=False)
+    return InstanceDelta(
+        update_src=edge_list.src[pick],
+        update_dst=edge_list.dst[pick],
+        update_values=edge_list.values[pick] * rng.uniform(0.9, 1.1, n),
     )
-    rng = np.random.default_rng(0)
-    for rid in range(args.requests):
-        engine.submit(Request(
-            rid=rid,
-            prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
-            max_new_tokens=args.max_new,
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sources", type=int, default=4000)
+    ap.add_argument("--destinations", type=int, default=50)
+    ap.add_argument("--avg-degree", type=float, default=6.0)
+    ap.add_argument("--tenants", type=int, default=2)
+    ap.add_argument("--cadences", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--hammer-threads", type=int, default=2)
+    ap.add_argument("--iters-per-stage", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verify", action="store_true",
+                    help="replay every batch against the snapshot of the "
+                         "generation it reported; check bit-identical")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append serving_query JSONL records here")
+    ap.add_argument("--prom-out", default=None,
+                    help="write a Prometheus text-exposition snapshot")
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro import telemetry
+    from repro.core import MaximizerConfig
+    from repro.instances import (
+        MatchingInstanceSpec,
+        generate_matching_instance,
+    )
+    from repro.service import Scheduler, ServiceConfig
+    from repro.serving import DualStore, direct_allocations
+
+    rng = np.random.default_rng(args.seed)
+    cfg = ServiceConfig(
+        cold=MaximizerConfig(
+            iters_per_stage=args.iters_per_stage,
+            tol_grad=1e-4, tol_viol=1e-4,
+        ),
+        row_headroom=4,
+    )
+    store = DualStore(history=args.cadences + 2)
+    sched = Scheduler(cfg, dual_store=store)
+    bases = {}
+    for i in range(args.tenants):
+        name = f"t{i}"
+        bases[name] = generate_matching_instance(MatchingInstanceSpec(
+            num_sources=args.sources,
+            num_destinations=args.destinations,
+            avg_degree=args.avg_degree,
+            seed=args.seed + i,
         ))
-    t0 = time.time()
-    engine.run()
-    dt = time.time() - t0
-    toks = args.requests * args.max_new
-    print(f"{args.requests} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks / dt:.1f} tok/s)")
-    return 0
+        sched.add_tenant(name, bases[name])
+    print(f"{args.tenants} tenant(s), {bases['t0'].nnz} nnz each; "
+          f"initial cold cadence ...")
+    sched.run_cadence()
+    for name in store.tenants():
+        snap = store.snapshot(name)
+        print(f"  {name}: published generation {snap.generation} "
+              f"({snap.num_users} users, gamma={snap.gamma})")
+
+    sink = telemetry.JsonlSink(args.metrics_out) if args.metrics_out else None
+    live = {
+        name: np.flatnonzero(store.snapshot(name).deg > 0)
+        for name in store.tenants()
+    }
+    results: list = []
+    lock = threading.Lock()
+    stop = threading.Event()
+
+    def hammer(worker_seed):
+        qrng = np.random.default_rng(worker_seed)
+        names = sorted(live)
+        while not stop.is_set():
+            name = names[int(qrng.integers(len(names)))]
+            users = live[name]
+            batch = users[qrng.integers(0, users.size, size=args.batch)]
+            r = store.query(name, batch)
+            with lock:
+                results.append(r)
+                if sink is not None:
+                    sink.emit("serving_query", {
+                        "tenant": r.tenant,
+                        "generation": r.generation,
+                        "users": int(r.num_users),
+                        "latency_seconds": r.latency_seconds,
+                    })
+
+    threads = [
+        threading.Thread(target=hammer, args=(args.seed + 100 + i,),
+                         daemon=True)
+        for i in range(args.hammer_threads)
+    ]
+    deltas = [
+        {name: _delta(bases[name], rng) for name in bases}
+        for _ in range(args.cadences)
+    ]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    try:
+        outs = sched.run_pipeline(deltas)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=60)
+    wall = time.perf_counter() - t0
+    for t, out in enumerate(outs):
+        gens = {n: out.reports[n]["published_generation"] for n in out.reports}
+        print(f"cadence {t}: published generations {gens}")
+        if out.ingest_errors:
+            print(f"  ingest errors: {out.ingest_errors}")
+
+    by_tenant: dict = {}
+    for r in results:
+        by_tenant.setdefault(r.tenant, []).append(r)
+    total_users = sum(r.num_users for r in results)
+    print(f"\nserved {len(results)} batches / {total_users} users in "
+          f"{wall:.2f}s while {args.cadences} pipelined cadences solved "
+          f"({total_users / max(wall, 1e-9):.0f} users/s)")
+    for name in sorted(by_tenant):
+        rs = by_tenant[name]
+        lats = np.asarray([r.latency_seconds for r in rs]) * 1e3
+        gens = sorted({r.generation for r in rs})
+        print(f"  {name}: {len(rs)} batches, p50={np.percentile(lats, 50):.2f}ms "
+              f"p99={np.percentile(lats, 99):.2f}ms, generations observed "
+              f"{gens}")
+
+    failures = 0
+    if args.verify:
+        directs: dict = {}
+        for r in results:
+            key = (r.tenant, r.generation)
+            if key not in directs:
+                directs[key] = direct_allocations(
+                    store.get(r.tenant, r.generation)
+                )
+            xs = directs[key]
+            for ba in r.slabs:
+                if not np.array_equal(
+                    ba.x, np.asarray(xs[ba.bucket])[ba.rows]
+                ):
+                    failures += 1
+        print(f"verify: {len(results)} batches replayed against their "
+              f"reported generations — "
+              + ("all bit-identical" if failures == 0
+                 else f"{failures} MISMATCHED batches"))
+
+    if sink is not None:
+        sink.emit_counters()
+        sink.close()
+        print(f"metrics written to {args.metrics_out}")
+    if args.prom_out:
+        telemetry.write_prometheus(args.prom_out)
+        print(f"prometheus snapshot written to {args.prom_out}")
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":

@@ -317,10 +317,21 @@ def to_solve_results(raw: RawSolve) -> list[SolveResult]:
 def device_put_instance(inst: BucketedInstance) -> BucketedInstance:
     """Upload every slab leaf to device once (the O(nnz) bootstrap transfer).
 
-    The returned instance is leaf-wise `jax.Array`; subsequent cadences keep
-    it resident and mutate it with `apply_scatter_plan` (O(delta) transfer).
+    The returned instance is leaf-wise `jax.Array` and OWNS its buffers:
+    on the CPU backend `jnp.asarray` may zero-copy alias an aligned numpy
+    slab, which the ingestor keeps mutating in place — an aliased "device
+    copy" would silently track later host edits (corrupting the generation
+    the resident instance is supposed to be pinned at, and any published
+    `DualSnapshot` holding it), so numpy leaves are copied first.
+    Subsequent cadences keep the instance resident and mutate it with
+    `apply_scatter_plan` (O(delta) transfer, functional updates).
     """
-    return jax.tree.map(jnp.asarray, inst)
+    return jax.tree.map(
+        lambda leaf: jnp.asarray(
+            leaf.copy() if isinstance(leaf, np.ndarray) else leaf
+        ),
+        inst,
+    )
 
 
 def _expand_runs(op) -> tuple[jax.Array, jax.Array]:

@@ -86,16 +86,29 @@ class CadenceReport:
 class Scheduler:
     """Owns all tenant sessions and drives synchronous or pipelined cadences."""
 
-    def __init__(self, config: Optional[ServiceConfig] = None, *, batch_min: int = 2):
+    def __init__(
+        self,
+        config: Optional[ServiceConfig] = None,
+        *,
+        batch_min: int = 2,
+        dual_store=None,
+    ):
         self.config = config or ServiceConfig()
         self.batch_min = max(2, int(batch_min))
         self.sessions: dict[str, SolveSession] = {}
+        # Attached allocation-serving store (repro.serving.DualStore): when
+        # set, every tenant session publishes its duals after absorb, so
+        # requests are answered from the last COMPLETED cadence while the
+        # next one is still in flight (the store's snapshot swap is the
+        # generation fence; see docs/serving.md).
+        self.dual_store = dual_store
 
     def add_tenant(self, name: str, inst: EdgeListInstance) -> SolveSession:
         """Register a tenant with its bootstrap instance (cold first solve)."""
         if name in self.sessions:
             raise ValueError(f"tenant {name!r} already registered")
         s = SolveSession(name, inst, self.config)
+        s.dual_store = self.dual_store
         self.sessions[name] = s
         return s
 
@@ -169,7 +182,14 @@ class Scheduler:
                         cfg, starts[name][2], starts[name][3], cold=cold
                     )
                     solo.append((name, cold, raw, reuse))
-        return batched, solo, starts
+        # Serving capture runs after every dispatch path has synced its
+        # device copy, so the captured instance + occupancy maps reflect
+        # exactly the generation this cadence is solving; absorb publishes
+        # the finished duals against that capture (None without a store).
+        serving = {
+            name: s.serving_capture() for name, s in self.sessions.items()
+        }
+        return batched, solo, starts, serving
 
     def _record_group_padding(self, names: Sequence[str]) -> None:
         """Padding waste of one vmapped group, from host-side occupancy.
@@ -197,14 +217,14 @@ class Scheduler:
     @staticmethod
     def _fence(dispatched) -> None:
         """Block until every dispatched solve's device work is complete."""
-        batched, solo, _ = dispatched
+        batched, solo, _, _ = dispatched
         jax.block_until_ready(
             [raw for _, _, raw in batched] + [raw for _, _, raw, _ in solo]
         )
 
     def _absorb(self, dispatched):
         """Fold finished solves into their sessions; build per-tenant reports."""
-        batched, solo, starts = dispatched
+        batched, solo, starts, serving = dispatched
         reports: dict[str, dict[str, Any]] = {}
         batched_groups: list[list[str]] = []
         solo_names: list[str] = []
@@ -219,6 +239,7 @@ class Scheduler:
                     dc_norm=starts[name][3],
                     unpack=starts[name][4],
                     dirty_count=starts[name][5],
+                    serving=serving[name],
                 )
         for name, cold, raw, sigma_reused in solo:
             solo_names.append(name)
@@ -231,6 +252,7 @@ class Scheduler:
                 unpack=starts[name][4],
                 sigma_reused=sigma_reused,
                 dirty_count=starts[name][5],
+                serving=serving[name],
             )
         return reports, batched_groups, solo_names
 
@@ -384,6 +406,7 @@ class Scheduler:
             self.sessions[name] = SolveSession.from_state(
                 self.config, s_arrays, s_meta
             )
+            self.sessions[name].dual_store = self.dual_store
         # older checkpoints (pre-telemetry) carry no counter state: keep zeros
         if "telemetry" in meta:
             telemetry.get_registry().load_state(meta["telemetry"])

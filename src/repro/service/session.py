@@ -164,6 +164,12 @@ class SolveSession:
         self._sigma_sq: Optional[float] = None
         self._dirty_count = 0
         self._sigma_clean_at = -1
+        # Attached allocation-serving store (repro.serving.DualStore).  When
+        # set, every absorbed solve publishes its duals as an immutable
+        # generation-stamped snapshot (see `_publish_duals`); queries are
+        # then answered from device-resident duals without touching the
+        # solver.  Attach via `Scheduler(dual_store=...)` or directly.
+        self.dual_store = None
 
     # -- cadence inputs ------------------------------------------------------
 
@@ -273,6 +279,27 @@ class SolveSession:
             )(self.device_instance(), lam0)
         return raw, reuse
 
+    def serving_capture(self) -> Optional[dict[str, Any]]:
+        """Freeze what publishing duals after the fence needs, at dispatch time.
+
+        Must run right after a dispatch's `device_instance()` sync (every
+        dispatch path performs one): the device instance and the copied
+        occupancy maps then reflect the same ingestor generation, so the
+        snapshot eventually published is internally consistent even though
+        the overlapped pipeline mutates the host slabs while the solve is
+        still in flight.  Stamped with `_device_generation` — the generation
+        the device copy actually reflects.  None when no store is attached.
+        """
+        if self.dual_store is None or self._device_inst is None:
+            return None
+        return {
+            "instance": self._device_inst,
+            "generation": self._device_generation,
+            "bucket_of": self.ingestor.bucket_of.copy(),
+            "row_of": self.ingestor.row_of.copy(),
+            "deg": self.ingestor.deg.copy(),
+        }
+
     # -- solve ---------------------------------------------------------------
 
     def _start_state(
@@ -309,11 +336,12 @@ class SolveSession:
             "tenant_solve", tenant=self.tenant, mode="cold" if cold else "warm"
         ):
             raw, reuse_sigma = self.dispatch_raw(cfg, lam0, dc_norm, cold=cold)
+            serving = self.serving_capture()
             res = to_solve_result(raw)
             report = self.absorb(
                 res, cold=cold, cold_reason=reason, batched=False,
                 dc_norm=dc_norm, sigma_reused=reuse_sigma,
-                dirty_count=dirty_count,
+                dirty_count=dirty_count, serving=serving,
             )
         return res, report
 
@@ -328,6 +356,7 @@ class SolveSession:
         unpack=None,
         sigma_reused: bool = False,
         dirty_count: Optional[int] = None,
+        serving: Optional[dict[str, Any]] = None,
     ) -> dict[str, Any]:
         """Fold a finished solve (own or pool-produced) into session state.
 
@@ -337,6 +366,9 @@ class SolveSession:
         ingestor's current maps are used.  Overlapped drivers must capture
         both at dispatch time, or the next cadence's in-flight ingest would
         corrupt this one's drift metering (see `Scheduler._dispatch`).
+        ``serving`` is the `serving_capture()` taken at dispatch time; when
+        present (a DualStore is attached) the finished duals are published
+        against exactly that captured instance.
         """
         with telemetry.span(
             "tenant_absorb",
@@ -353,6 +385,7 @@ class SolveSession:
                 unpack=unpack,
                 sigma_reused=sigma_reused,
                 dirty_count=dirty_count,
+                serving=serving,
             )
 
     def _absorb(
@@ -366,6 +399,7 @@ class SolveSession:
         unpack=None,
         sigma_reused: bool = False,
         dirty_count: Optional[int] = None,
+        serving: Optional[dict[str, Any]] = None,
     ) -> dict[str, Any]:
         cfg = self.config.cold if cold else self.config.warm
         gamma_floor = cfg.gammas[-1]
@@ -395,6 +429,8 @@ class SolveSession:
             "drift_l2": None,
             "drift_rel": None,
             "drift_bound": None,
+            "dual_resized": False,
+            "published_generation": None,
             "sla_rel": self.config.drift_sla_rel,
             "sla_ok": None,
         }
@@ -402,18 +438,32 @@ class SolveSession:
         if self.prev_primal is not None:
             drift = _edge_drift(self.prev_primal, (keys, x))
             x_norm = float(np.linalg.norm(x))
-            dlam = (
-                float(jnp.linalg.norm(res.lam - self.lam_prev))
-                if self.lam_prev is not None
-                and self.lam_prev.shape == res.lam.shape
-                else 0.0
-            )
-            sigma = float(jnp.sqrt(res.sigma_sq))
             report["drift_l2"] = drift
             report["drift_rel"] = drift / max(x_norm, 1e-12)
-            report["drift_bound"] = drift_bound(
-                gamma_floor, dc_norm=dc_norm, dlam_norm=dlam, sigma_max=sigma
+            resized = (
+                self.lam_prev is not None
+                and self.lam_prev.shape != res.lam.shape
             )
+            if resized:
+                # Dual-dim resize: ||dlam|| is undefined across dual spaces,
+                # so the analytic (sigma ||dlam|| + ||dc||)/gamma bound does
+                # not apply — report it as unbounded rather than letting a
+                # silent dlam=0 make the one cadence guaranteed to churn
+                # look like the quietest (`jsonable` serializes inf NaN-safe
+                # as "inf"; cold_reason carries "dual_dim_drift").
+                report["dual_resized"] = True
+                report["drift_bound"] = float("inf")
+            else:
+                dlam = (
+                    float(jnp.linalg.norm(res.lam - self.lam_prev))
+                    if self.lam_prev is not None
+                    else 0.0
+                )
+                sigma = float(jnp.sqrt(res.sigma_sq))
+                report["drift_bound"] = drift_bound(
+                    gamma_floor, dc_norm=dc_norm, dlam_norm=dlam,
+                    sigma_max=sigma,
+                )
             if self.config.drift_sla_rel is not None:
                 report["sla_ok"] = bool(
                     report["drift_rel"] <= self.config.drift_sla_rel
@@ -432,7 +482,42 @@ class SolveSession:
         self._sigma_clean_at = -1 if dirty_count is None else dirty_count
         self.cadence += 1
         self.last_report = report
+        if serving is not None and self.dual_store is not None:
+            self._publish_duals(res, serving, gamma_floor, report)
         return report
+
+    def _publish_duals(
+        self,
+        res: SolveResult,
+        serving: dict[str, Any],
+        gamma_floor: float,
+        report: dict[str, Any],
+    ) -> None:
+        """Publish this solve's duals for request serving (atomic slot swap).
+
+        Duals of a normalized solve live in the Jacobi-scaled space
+        (lam_original = D lam'); `compute_lam_eff` descales them against the
+        dispatch-time device instance, so the serving kernel gathers the raw
+        slabs directly.  The snapshot is immutable — queries in flight keep
+        serving the previous generation until their next slot read.
+        """
+        from repro.serving.duals import DualSnapshot, compute_lam_eff
+
+        snap = DualSnapshot(
+            tenant=self.tenant,
+            generation=int(serving["generation"]),
+            cadence=report["cadence"],
+            gamma=float(gamma_floor),
+            lam_eff=compute_lam_eff(
+                serving["instance"], res.lam, normalize=self.config.normalize
+            ),
+            instance=serving["instance"],
+            bucket_of=serving["bucket_of"],
+            row_of=serving["row_of"],
+            deg=serving["deg"],
+        )
+        self.dual_store.publish(snap)
+        report["published_generation"] = snap.generation
 
     def _record_telemetry(
         self, res: SolveResult, report: dict[str, Any]
@@ -503,6 +588,12 @@ class SolveSession:
             "has_lam": self.lam_prev is not None,
             "has_primal": self.prev_primal is not None,
             "sigma_clean": bool(self._sigma_clean_at == self._dirty_count),
+            # The ingestor generation the sigma-clean claim was made under.
+            # `from_state` only honors `sigma_clean` when the restored
+            # ingestor proves it is at this exact generation — a checkpoint
+            # whose instance arrays were mutated out-of-band (offline delta)
+            # must re-run the power iteration.
+            "sigma_generation": int(self.ingestor.generation),
         }
         if self._sigma_sq is not None:
             arrays["sigma_sq"] = np.asarray(self._sigma_sq, np.float64)
@@ -555,7 +646,19 @@ class SolveSession:
             float(arrays["sigma_sq"]) if "sigma_sq" in arrays else None
         )
         self._dirty_count = 0
-        self._sigma_clean_at = 0 if meta.get("sigma_clean", False) else -1
+        # Trust the checkpointed sigma cache only when the checkpoint can
+        # PROVE the restored instance is the one the estimate was computed
+        # over: the clean flag must hold AND the generation recorded at
+        # save time must match the restored ingestor's.  An instance mutated
+        # offline (a delta applied out-of-band bumps the persisted ingestor
+        # generation without touching the session meta) — or an older
+        # checkpoint that never recorded the generation — restores dirty,
+        # forcing a sigma_max re-estimation on the next solve.
+        clean = bool(meta.get("sigma_clean", False)) and (
+            meta.get("sigma_generation") == self.ingestor.generation
+        )
+        self._sigma_clean_at = 0 if clean else -1
+        self.dual_store = None
         return self
 
 

@@ -1,11 +1,30 @@
-"""Serving substrate: prefill/decode steps and a batched request engine."""
-from repro.serving.steps import lower_decode_step, lower_prefill, make_serve_fns
-from repro.serving.engine import ServeEngine, Request
+"""Allocation serving from device-resident duals (the request-time surface).
+
+``repro.serving`` owns the LP serving API: a `DualStore` of generation-
+stamped per-tenant `DualSnapshot`s, published atomically by the service
+layer after each cadence solve, and queried with a shape-keyed jitted
+kernel that projects only the requested users' rows — O(degree) per user,
+bit-identical to a direct projection against the reported generation.
+See docs/serving.md.
+
+The seed's LM-demo scaffolding (token serving, unrelated to LP work)
+lives in ``repro.serving.lm_demo`` and is deliberately not imported here —
+it pulls in the model/training stack.
+"""
+from repro.serving.duals import (
+    BucketAllocations,
+    DualSnapshot,
+    DualStore,
+    QueryResult,
+    compute_lam_eff,
+    direct_allocations,
+)
 
 __all__ = [
-    "lower_decode_step",
-    "lower_prefill",
-    "make_serve_fns",
-    "ServeEngine",
-    "Request",
+    "BucketAllocations",
+    "DualSnapshot",
+    "DualStore",
+    "QueryResult",
+    "compute_lam_eff",
+    "direct_allocations",
 ]

@@ -1,0 +1,471 @@
+"""Low-latency allocation serving from device-resident duals.
+
+The production workload the paper targets is request-driven: once a cadence
+solve has produced optimal item duals ``lam``, a single user's allocation
+
+    x_u = Pi_C( -(A_u^T lam + c_u) / gamma )
+
+is local and O(degree) — no solve at request time.  This module is the
+serving surface over that fact:
+
+  * `DualSnapshot` — one immutable, generation-stamped publication: the
+    descaled duals, the device-resident raw slabs they were solved over, and
+    the dispatch-time occupancy maps (user -> bucket/row).
+  * `DualStore` — the per-tenant slot the service publishes into.  A publish
+    swaps the slot reference under a lock; a query reads the slot ONCE and
+    answers the whole batch against that snapshot.  Snapshots are never
+    mutated, so a torn read is structurally impossible — this is the
+    generation fence, and every `QueryResult` reports which generation it
+    was served from.
+  * a tiny shape-keyed jitted query kernel that gathers only the requested
+    rows of each bucket and mirrors `MatchingObjective.primal_candidate`
+    op-for-op (same gather/einsum/scale grouping, same host-level ``==1.0``
+    scale branches, same per-bucket `ProjectionMap` lowering), so a served
+    batch is bit-identical to a post-hoc direct projection against the same
+    snapshot — including capacity-cap / fairness-floor / budget-pacing
+    tenants, whose `FormulationSpec` rides the snapshot instance.
+
+Scaled-dual subtlety: the service solves with device-side Jacobi
+normalization (A' = D A), so the solver's duals live in the scaled space and
+``lam_original = D lam'``.  Rather than descaling the coefficients per query,
+`compute_lam_eff` descales the duals ONCE per publish — then
+``A'^T lam' = A^T (D lam')`` lets the query kernel run a plain gather over
+the raw slabs.
+
+See docs/serving.md for the lifecycle and the latency methodology.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import telemetry
+from repro.core.objective import binned_segment_sum
+from repro.core.projections import ProjectionMap, UnitSimplexProjection
+from repro.formulation.spec import lower_spec
+from repro.instances.buckets import BucketedInstance
+
+__all__ = [
+    "BucketAllocations",
+    "DualSnapshot",
+    "DualStore",
+    "QueryResult",
+    "compute_lam_eff",
+    "direct_allocations",
+]
+
+
+# -- publish-side math --------------------------------------------------------
+
+
+@jax.jit
+def _descale_duals(inst: BucketedInstance, lam: jax.Array) -> jax.Array:
+    """D lam' over the RAW slabs — the inverse of `normalize_rows_traced`.
+
+    Recomputes the same per-row norms (same `binned_segment_sum` math, same
+    eps) the normalized solve applied device-side, so the returned duals are
+    exactly the original-space duals of the solve that produced ``lam``.
+    """
+    m, J = inst.num_families, inst.num_destinations
+    norms_sq = jnp.zeros((m, J), jnp.float32)
+    for b in inst.buckets:
+        contrib = (b.coeff**2) * b.mask[None]
+        norms_sq = norms_sq + binned_segment_sum(b.idx, contrib, J)
+    norms = jnp.sqrt(norms_sq)
+    d2 = jnp.where(norms > 1e-30, 1.0 / jnp.maximum(norms, 1e-30), 1.0)
+    return lam * d2.reshape(-1)
+
+
+def compute_lam_eff(
+    instance: BucketedInstance, lam: jax.Array, *, normalize: bool
+) -> jax.Array:
+    """The duals the query kernel gathers raw slabs against.
+
+    ``normalize=True`` (the service default) maps the solver's scaled-space
+    duals back to the original space on device; ``normalize=False`` solves
+    were already in the original space.
+    """
+    if not normalize:
+        return jnp.asarray(lam)
+    return _descale_duals(instance, lam)
+
+
+def _lowered(inst: BucketedInstance):
+    """(per-bucket projections, cost_scale, ridge_weight) of an instance.
+
+    Same resolution as `MatchingObjective.__post_init__`: a spec-free
+    instance is the legacy simplex matching formulation.
+    """
+    spec = getattr(inst, "formulation", None)
+    if spec is None:
+        return (UnitSimplexProjection(),) * len(inst.buckets), 1.0, 1.0
+    low = lower_spec(spec, inst)
+    return low.projections, low.cost_scale, low.ridge_weight
+
+
+# -- the query kernel ---------------------------------------------------------
+
+# One jitted kernel per (projection, term scales, dual-grid dims); within
+# each, XLA re-keys executables on the bucket/request shapes.  Request counts
+# are padded to the next power of two before dispatch so the cache holds
+# O(log max_batch) executables per bucket shape instead of one per count.
+_QUERY: dict[tuple, Any] = {}
+
+
+def _query_kernel(
+    proj: ProjectionMap, cost_scale: float, ridge_weight: float, m: int, J: int
+):
+    key = (proj, cost_scale, ridge_weight, m, J)
+    fn = _QUERY.get(key)
+    if fn is None:
+        # Mirrors primal_candidate's op grouping exactly (gather of the raw
+        # idx/coeff/cost/mask rows, take -> einsum -> -(e + c)/gamma ->
+        # projection, host-level ==1.0 scale branches), restricted to the
+        # requested rows — so the result is bit-identical to the full-slab
+        # direct projection at O(q * L) work.
+        def q(idx, coeff, cost, mask, rows, lam, gamma):
+            lam2 = lam.reshape(m, J)
+            idx_r = jnp.take(idx, rows, axis=0)  # [q, L]
+            mask_r = jnp.take(mask, rows, axis=0)
+            gathered = jnp.take(lam2, idx_r, axis=1)  # [m, q, L]
+            e = jnp.einsum(
+                "mql,mql->ql", jnp.take(coeff, rows, axis=1), gathered
+            )
+            c = jnp.take(cost, rows, axis=0)
+            if cost_scale != 1.0:
+                c = cost_scale * c
+            gamma_eff = gamma if ridge_weight == 1.0 else ridge_weight * gamma
+            z = -(e + c) / gamma_eff
+            return proj(z, mask_r), idx_r, mask_r
+
+        fn = jax.jit(q)
+        _QUERY[key] = fn
+    return fn
+
+
+def _dispatch_kernel(fn, bucket, rows_padded, lam, gamma):
+    """Run one bucket's kernel with compile-cache accounting."""
+    reg = telemetry.get_registry()
+    try:
+        before = fn._cache_size()
+    except AttributeError:
+        before = None
+    out = fn(
+        bucket.idx, bucket.coeff, bucket.cost, bucket.mask,
+        rows_padded, lam, gamma,
+    )
+    try:
+        after = fn._cache_size()
+    except AttributeError:
+        after = None
+    if before is not None and after is not None and after > before:
+        reg.inc("serving_kernel_compiles_total", 1)
+    else:
+        reg.inc("serving_kernel_cache_hits_total", 1)
+    return out
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+@jax.jit
+def _direct_primal(inst: BucketedInstance, lam: jax.Array, gamma: jax.Array):
+    from repro.core.objective import MatchingObjective
+
+    return MatchingObjective(inst).primal_candidate(lam, gamma)
+
+
+def direct_allocations(snap: "DualSnapshot") -> tuple[jax.Array, ...]:
+    """Post-hoc direct projection against one snapshot — full slabs.
+
+    The reference the serving kernel is bit-compared against: the unfused
+    `MatchingObjective.primal_candidate` over the snapshot's raw device
+    instance and published (descaled) duals, at the snapshot's gamma floor.
+    Jitted like the query kernel, so XLA applies the same algebraic rewrites
+    (e.g. the divide -> reciprocal-multiply canonicalisation) to both sides
+    of the bit-identity contract.
+    """
+    return _direct_primal(snap.instance, snap.lam_eff, jnp.float32(snap.gamma))
+
+
+# -- snapshots and results ----------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DualSnapshot:
+    """One immutable publication: duals + the instance they were solved over.
+
+    ``instance`` is the dispatch-time device-resident RAW instance (the
+    in-flight solve's input, never the host slabs — the overlapped pipeline
+    keeps mutating those), so slabs, maps and duals are mutually consistent
+    at ``generation``.  ``lam_eff`` is already descaled (`compute_lam_eff`).
+    """
+
+    tenant: str
+    generation: int  # ingestor generation the instance reflects
+    cadence: int  # session cadence that produced the duals
+    gamma: float  # gamma floor the solve converged at
+    lam_eff: jax.Array  # [dual_dim] original-space duals, device-resident
+    instance: BucketedInstance  # raw device slabs (+ FormulationSpec, if any)
+    bucket_of: np.ndarray  # [I] user -> bucket (-1: no edges)
+    row_of: np.ndarray  # [I] user -> slab row
+    deg: np.ndarray  # [I] user degree
+
+    @property
+    def num_users(self) -> int:
+        return int(self.bucket_of.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketAllocations:
+    """Allocations of the queried users living in one bucket."""
+
+    bucket: int
+    users: np.ndarray  # [q] user ids, in query order within the bucket
+    rows: np.ndarray  # [q] slab rows they were served from
+    x: np.ndarray  # [q, L] allocations (padding slots are exact zeros)
+    idx: np.ndarray  # [q, L] destination ids per slot
+    mask: np.ndarray  # [q, L] slot validity
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """One served batch — answered entirely against ``generation``."""
+
+    tenant: str
+    generation: int
+    cadence: int
+    gamma: float
+    users: np.ndarray
+    slabs: tuple[BucketAllocations, ...]
+    unmatched: np.ndarray  # queried users with no edges at this generation
+    latency_seconds: float
+
+    @property
+    def num_users(self) -> int:
+        return int(self.users.size)
+
+    def allocation(self, user: int) -> tuple[np.ndarray, np.ndarray]:
+        """(destination ids, allocation values) of one queried user."""
+        for ba in self.slabs:
+            pos = np.flatnonzero(ba.users == user)
+            if pos.size:
+                p = int(pos[0])
+                sel = ba.mask[p].astype(bool)
+                return ba.idx[p][sel].astype(np.int64), ba.x[p][sel]
+        return np.zeros(0, np.int64), np.zeros(0, np.float32)
+
+
+# -- the store ----------------------------------------------------------------
+
+
+class DualStore:
+    """Per-tenant slots of the latest published duals (atomic swap on publish).
+
+    Thread-safety contract: `publish` replaces a slot reference under the
+    store lock; `query` reads the slot once and then works exclusively off
+    that immutable `DualSnapshot`.  A publish landing mid-query therefore
+    never mixes generations within a batch — late batches simply observe the
+    new slot on their next read.  ``history > 0`` additionally retains the
+    last N snapshots per tenant (`get`), which is what the benchmark's
+    post-hoc bit-identity verification replays queries against.
+    """
+
+    def __init__(self, *, history: int = 0):
+        self._lock = threading.Lock()
+        self._latest: dict[str, DualSnapshot] = {}
+        self._history: dict[str, deque] = {}
+        self.history = int(history)
+
+    # -- publish side --------------------------------------------------------
+
+    def publish(self, snap: DualSnapshot) -> DualSnapshot:
+        """Swap in a new snapshot for its tenant (the generation fence)."""
+        with self._lock:
+            self._latest[snap.tenant] = snap
+            if self.history:
+                self._history.setdefault(
+                    snap.tenant, deque(maxlen=self.history)
+                ).append(snap)
+        reg = telemetry.get_registry()
+        reg.inc("serving_publishes_total", 1, tenant=snap.tenant)
+        reg.set_gauge("serving_generation", snap.generation, tenant=snap.tenant)
+        return snap
+
+    def publish_result(
+        self,
+        tenant: str,
+        instance: BucketedInstance,
+        lam: jax.Array,
+        *,
+        generation: int,
+        gamma: float,
+        bucket_of: np.ndarray,
+        row_of: np.ndarray,
+        deg: np.ndarray,
+        cadence: int = 0,
+        normalize: bool = True,
+    ) -> DualSnapshot:
+        """Build + publish a snapshot from an engine-level solve.
+
+        The session/scheduler path publishes automatically out of
+        `SolveSession.absorb`; this helper serves callers that drive
+        `compiled_solver` directly (benchmarks, tests, offline fits).
+        ``instance`` must be the RAW (unnormalized) instance the solve ran
+        on; ``normalize`` says whether the solve scaled it device-side, i.e.
+        whether ``lam`` needs descaling.
+        """
+        snap = DualSnapshot(
+            tenant=tenant,
+            generation=int(generation),
+            cadence=int(cadence),
+            gamma=float(gamma),
+            lam_eff=compute_lam_eff(instance, lam, normalize=normalize),
+            instance=instance,
+            bucket_of=np.asarray(bucket_of, np.int64).copy(),
+            row_of=np.asarray(row_of, np.int64).copy(),
+            deg=np.asarray(deg, np.int64).copy(),
+        )
+        return self.publish(snap)
+
+    # -- read side -----------------------------------------------------------
+
+    def tenants(self) -> list[str]:
+        with self._lock:
+            return sorted(self._latest)
+
+    def snapshot(self, tenant: str) -> DualSnapshot:
+        """The tenant's current snapshot (the single fenced read)."""
+        with self._lock:
+            try:
+                return self._latest[tenant]
+            except KeyError:
+                raise KeyError(
+                    f"no duals published for tenant {tenant!r} yet"
+                ) from None
+
+    def generations(self, tenant: str) -> list[int]:
+        """Generations currently answerable via `get` (history + latest)."""
+        with self._lock:
+            gens = {s.generation for s in self._history.get(tenant, ())}
+            if tenant in self._latest:
+                gens.add(self._latest[tenant].generation)
+        return sorted(gens)
+
+    def get(self, tenant: str, generation: int) -> DualSnapshot:
+        """A retained snapshot by generation (requires ``history > 0``)."""
+        with self._lock:
+            latest = self._latest.get(tenant)
+            if latest is not None and latest.generation == generation:
+                return latest
+            for s in self._history.get(tenant, ()):
+                if s.generation == generation:
+                    return s
+        raise KeyError(
+            f"generation {generation} of tenant {tenant!r} is not retained "
+            f"(history={self.history})"
+        )
+
+    def query(
+        self, tenant: str, users: Sequence[int], *, block: bool = True
+    ) -> QueryResult:
+        """Answer one batch of allocation requests from the current snapshot.
+
+        The snapshot reference is read exactly once, so the whole batch —
+        across all buckets its users map to — is served against a single
+        generation, reported in the result.  Users with no edges at that
+        generation come back in ``unmatched`` with zero allocations.
+        ``block=False`` skips the device fence (the arrays are still
+        correct on host conversion; latency then excludes device time).
+        """
+        t0 = time.perf_counter()
+        snap = self.snapshot(tenant)
+        return self.query_snapshot(snap, users, block=block, t0=t0)
+
+    def query_snapshot(
+        self,
+        snap: DualSnapshot,
+        users: Sequence[int],
+        *,
+        block: bool = True,
+        t0: Optional[float] = None,
+    ) -> QueryResult:
+        """Serve a batch against an explicit snapshot (post-hoc replays)."""
+        if t0 is None:
+            t0 = time.perf_counter()
+        users = np.asarray(users, np.int64).reshape(-1)
+        if users.size and (
+            users.min() < 0 or users.max() >= snap.num_users
+        ):
+            raise ValueError(
+                f"user ids must be in [0, {snap.num_users}); got range "
+                f"[{users.min()}, {users.max()}]"
+            )
+        b_of = snap.bucket_of[users]
+        served = (b_of >= 0) & (snap.deg[users] > 0)
+        unmatched = users[~served]
+        inst = snap.instance
+        projections, cost_scale, ridge_weight = _lowered(inst)
+        gamma = jnp.float32(snap.gamma)
+        launched = []
+        for t in np.unique(b_of[served]):
+            pick = served & (b_of == t)
+            u = users[pick]
+            rows = snap.row_of[users[pick]]
+            rows_padded = np.zeros(_next_pow2(rows.size), np.int64)
+            rows_padded[: rows.size] = rows
+            fn = _query_kernel(
+                projections[int(t)],
+                cost_scale,
+                ridge_weight,
+                inst.num_families,
+                inst.num_destinations,
+            )
+            out = _dispatch_kernel(
+                fn, inst.buckets[int(t)], jnp.asarray(rows_padded),
+                snap.lam_eff, gamma,
+            )
+            launched.append((int(t), u, rows, out))
+        if block and launched:
+            jax.block_until_ready([out for *_, out in launched])
+        slabs = []
+        for t, u, rows, (x, idx_r, mask_r) in launched:
+            q = u.size
+            slabs.append(
+                BucketAllocations(
+                    bucket=t,
+                    users=u,
+                    rows=rows,
+                    x=np.asarray(x)[:q],
+                    idx=np.asarray(idx_r)[:q],
+                    mask=np.asarray(mask_r)[:q],
+                )
+            )
+        dt = time.perf_counter() - t0
+        reg = telemetry.get_registry()
+        reg.inc("serving_queries_total", 1, tenant=snap.tenant)
+        reg.inc("serving_users_total", int(users.size), tenant=snap.tenant)
+        if unmatched.size:
+            reg.inc(
+                "serving_unmatched_total", int(unmatched.size),
+                tenant=snap.tenant,
+            )
+        reg.observe("serving_query_seconds", dt, tenant=snap.tenant)
+        return QueryResult(
+            tenant=snap.tenant,
+            generation=snap.generation,
+            cadence=snap.cadence,
+            gamma=snap.gamma,
+            users=users,
+            slabs=tuple(slabs),
+            unmatched=unmatched,
+            latency_seconds=dt,
+        )

@@ -1,0 +1,20 @@
+"""Seed LM-demo serving scaffolding (token generation, not LP allocation).
+
+Kept apart from the dual-serving API that owns ``repro.serving``: this
+sub-package serves *tokens* from a reduced LM architecture, while the
+parent package serves *allocations* from device-resident duals.
+"""
+from repro.serving.lm_demo.steps import (
+    lower_decode_step,
+    lower_prefill,
+    make_serve_fns,
+)
+from repro.serving.lm_demo.engine import ServeEngine, Request
+
+__all__ = [
+    "lower_decode_step",
+    "lower_prefill",
+    "make_serve_fns",
+    "ServeEngine",
+    "Request",
+]

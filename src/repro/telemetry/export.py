@@ -82,6 +82,8 @@ SCHEMA: dict[str, tuple[str, ...]] = {
     "counters": ("counters", "gauges", "histograms"),
     # one per benchmark harness run (benchmarks/run.py --bench-history)
     "bench": ("suite", "quick", "results"),
+    # one per served allocation batch (repro.serving; benchmarks/serving_latency)
+    "serving_query": ("tenant", "generation", "users", "latency_seconds"),
 }
 
 

@@ -551,3 +551,61 @@ def test_scheduler_solo_path_reuses_sigma():
     assert out1.solo_tenants == ["t0"]
     assert out1.reports["t0"]["mode"] == "warm"
     assert out1.reports["t0"]["sigma_reused"] is True
+
+
+# -- PR 8 bugfix regressions -------------------------------------------------
+
+
+def test_drift_sla_reports_resize_unbounded():
+    """BUGFIX: a dual-dim resize used to contribute dlam = 0 to the drift
+    bound, making the one cadence guaranteed to churn every allocation look
+    like the quietest of the day.  The resized cadence must flag itself and
+    report an unbounded drift bound instead of a bogus finite one."""
+    rng = np.random.default_rng(23)
+    sess = SolveSession("t0", BASE, SERVICE)
+    _, rep0 = sess.solve()
+    assert rep0["dual_resized"] is False
+    sess.ingest(_perturb_delta(BASE, rng, frac=0.05))
+    # simulate a checkpoint from a different packing (resized dual space)
+    sess.lam_prev = jnp.zeros((sess.instance().dual_dim + 3,), jnp.float32)
+    _, rep = sess.solve()
+    assert rep["mode"] == "cold" and rep["cold_reason"] == "dual_dim_drift"
+    assert rep["dual_resized"] is True
+    assert rep["drift_bound"] == float("inf")  # NOT a finite dlam=0 bound
+    # the measured drift is still reported; only the analytic bound is void
+    assert rep["drift_rel"] is not None and np.isfinite(rep["drift_rel"])
+
+
+def test_sigma_cache_dirtied_on_offline_mutated_restore():
+    """BUGFIX: `from_state` used to trust the checkpointed sigma-clean flag
+    blindly, so an instance mutated out-of-band (an offline job restores the
+    ingestor, applies an A-touching delta and writes the arrays back without
+    touching the session meta) restored with a sigma estimate for a matrix
+    that no longer exists.  The restore must prove the saved generation
+    matches the restored ingestor's before reusing sigma."""
+    rng = np.random.default_rng(29)
+    cfg = dataclasses.replace(SERVICE, sigma_reuse_dc_threshold=1e6)
+    sess = SolveSession("t0", BASE, cfg)
+    sess.solve()
+    arrays, meta = sess.state_dict()
+    # offline delta: bumps the persisted ingestor generation, meta untouched
+    ing = DeltaIngestor.from_state(
+        {
+            k[len("ingestor."):]: v
+            for k, v in arrays.items()
+            if k.startswith("ingestor.")
+        },
+        meta["ingestor"],
+    )
+    ing.apply(InstanceDelta(
+        update_src=BASE.src[:1], update_dst=BASE.dst[:1],
+        update_coeff=np.asarray([[9.0]]),
+    ))
+    off_arrays, _ = ing.state_dict()
+    arrays.update({f"ingestor.{k}": v for k, v in off_arrays.items()})
+    back = SolveSession.from_state(cfg, arrays, meta)
+    # quiet cost-only cadence: would reuse sigma if the cache were trusted
+    back.ingest(_perturb_delta(BASE, rng, frac=0.02))
+    _, rep = back.solve()
+    assert rep["mode"] == "warm"
+    assert rep["sigma_reused"] is False  # stale estimate must not be echoed

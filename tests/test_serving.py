@@ -1,99 +1,265 @@
-"""Serving: engine generation, prefill/decode consistency, int8 cache."""
-import dataclasses
+"""Allocation serving: query-kernel parity, the generation fence, store API.
 
-import jax
+The contract under test (see docs/serving.md): a served batch is
+bit-identical to a post-hoc direct projection against the generation the
+`QueryResult` reports — across all formulation presets, and even while the
+scheduler's double-buffered pipeline is swapping snapshots mid-batch.
+"""
+import dataclasses
+import threading
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_reduced_config
-from repro.models.model import Model
-from repro.serving.engine import Request, ServeEngine
+from repro.core import MaximizerConfig
+from repro.formulation import scenario_formulation
+from repro.instances import (
+    DeltaIngestor,
+    InstanceDelta,
+    MatchingInstanceSpec,
+    generate_matching_instance,
+)
+from repro.service import (
+    Scheduler,
+    ServiceConfig,
+    SolveSession,
+    compiled_solver,
+    device_put_instance,
+    to_solve_result,
+)
+from repro.serving import DualStore, direct_allocations
+
+SPEC = MatchingInstanceSpec(
+    num_sources=120, num_destinations=10, avg_degree=4.0, seed=21
+)
+BASE = generate_matching_instance(SPEC)
+COLD = MaximizerConfig(iters_per_stage=120, tol_grad=1e-4, tol_viol=1e-4)
+SERVICE = ServiceConfig(
+    cold=COLD, warm_gammas=(0.1, 0.01), drift_sla_rel=0.5, row_headroom=4
+)
+PRESETS = ("matching", "capacity-cap", "fairness-floor", "budget-pacing")
 
 
-@pytest.fixture(scope="module")
-def small_model():
-    cfg = get_reduced_config("qwen3-8b")
-    model = Model(cfg)
-    params = model.init(jax.random.key(0))
-    return cfg, model, params
-
-
-def test_engine_generates(small_model):
-    cfg, model, params = small_model
-    engine = ServeEngine(model, params, slots=2, max_seq=48)
-    rng = np.random.default_rng(0)
-    for rid in range(4):
-        engine.submit(Request(
-            rid=rid, prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
-            max_new_tokens=6,
-        ))
-    reqs = list(engine.queue)
-    engine.run()
-    for r in reqs:
-        assert r.done
-        assert len(r.out_tokens) == 6
-        assert all(0 <= t < cfg.vocab_size for t in r.out_tokens)
-
-
-def test_engine_deterministic(small_model):
-    cfg, model, params = small_model
-    outs = []
-    for _ in range(2):
-        engine = ServeEngine(model, params, slots=2, max_seq=48)
-        prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
-        req = Request(rid=0, prompt=prompt, max_new_tokens=5)
-        engine.submit(req)
-        engine.run()
-        outs.append(tuple(req.out_tokens))
-    assert outs[0] == outs[1]
-
-
-def test_prefill_then_decode_matches_decode_only(small_model):
-    """prefill(cache) + decode == teacher-forced decode from empty cache."""
-    cfg, model, params = small_model
-    B, S = 2, 12
-    rng = np.random.default_rng(1)
-    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
-    logits_pf, cache_pf = jax.jit(
-        lambda p, b: model.prefill(p, b, max_seq=S + 4)
-    )(params, {"tokens": toks})
-    # decode-only path
-    cache = model.init_cache(B, S + 4)
-    dec = jax.jit(model.decode_step)
-    for t in range(S):
-        lg, cache = dec(params, toks[:, t:t+1], jnp.asarray(t, jnp.int32), cache)
-    np.testing.assert_allclose(
-        np.asarray(logits_pf[:, -1], np.float32),
-        np.asarray(lg[:, -1], np.float32), atol=0.05, rtol=0.05,
-    )
-    # continue one step from both caches: same next logits
-    nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
-    lg_a, _ = dec(params, nxt, jnp.asarray(S, jnp.int32), cache_pf)
-    lg_b, _ = dec(params, nxt, jnp.asarray(S, jnp.int32), cache)
-    np.testing.assert_allclose(
-        np.asarray(lg_a, np.float32), np.asarray(lg_b, np.float32),
-        atol=0.05, rtol=0.05,
+def _perturb_delta(edge_list, rng, frac=0.1):
+    n = max(1, int(frac * edge_list.src.size))
+    pick = rng.choice(edge_list.src.size, size=n, replace=False)
+    return InstanceDelta(
+        update_src=edge_list.src[pick],
+        update_dst=edge_list.dst[pick],
+        update_values=edge_list.values[pick] * rng.uniform(0.9, 1.1, n),
     )
 
 
-@pytest.mark.parametrize("arch", ["qwen3-8b", "zamba2-2.7b"])
-@pytest.mark.slow
-def test_int8_cache_parity(arch):
-    cfg = get_reduced_config(arch)
-    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
-    model, model8 = Model(cfg), Model(cfg8)
-    params = model.init(jax.random.key(2))
-    B, S = 2, 16
-    rng = np.random.default_rng(2)
-    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
-    c, c8 = model.init_cache(B, S), model8.init_cache(B, S)
-    assert c8["attn_k" if cfg.family == "hybrid" else "k"].dtype == jnp.int8
-    dec, dec8 = jax.jit(model.decode_step), jax.jit(model8.decode_step)
-    for t in range(S):
-        lg, c = dec(params, toks[:, t:t+1], jnp.asarray(t, jnp.int32), c)
-        lg8, c8 = dec8(params, toks[:, t:t+1], jnp.asarray(t, jnp.int32), c8)
-    a = np.asarray(lg.astype(jnp.float32))
-    b = np.asarray(lg8.astype(jnp.float32))
-    assert np.argmax(a[:, -1], -1).tolist() == np.argmax(b[:, -1], -1).tolist()
-    np.testing.assert_allclose(a, b, atol=0.05)
+def _published_preset(name: str, store: DualStore):
+    """Solve one preset with the normalized engine solver and publish it."""
+    ing = DeltaIngestor(BASE, row_headroom=4)
+    comp = scenario_formulation(name).compile(ing.instance())
+    dev = device_put_instance(comp.instance)
+    lam0 = jnp.zeros((dev.dual_dim,), jnp.float32)
+    res = to_solve_result(compiled_solver(COLD, True)(dev, lam0))
+    return store.publish_result(
+        name, dev, res.lam,
+        generation=ing.generation, gamma=COLD.gammas[-1],
+        bucket_of=ing.bucket_of, row_of=ing.row_of, deg=ing.deg,
+        normalize=True,
+    )
+
+
+def _assert_result_matches_snapshot(result, snap):
+    """Every served row bit-identical to the direct projection of `snap`."""
+    xs = direct_allocations(snap)
+    for ba in result.slabs:
+        ref = np.asarray(xs[ba.bucket])[ba.rows]
+        assert np.array_equal(ba.x, ref), (
+            f"bucket {ba.bucket}: served rows differ from direct projection "
+            f"(max abs diff {np.abs(ba.x - ref).max()})"
+        )
+
+
+# -- query kernel vs direct projection, all presets ---------------------------
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_query_matches_direct_projection_bitwise(preset):
+    store = DualStore()
+    snap = _published_preset(preset, store)
+    users = np.flatnonzero(snap.deg > 0)
+    result = store.query(preset, users)
+    assert result.generation == snap.generation
+    assert result.unmatched.size == 0
+    _assert_result_matches_snapshot(result, snap)
+    # the acceptance criterion is rel-L2 <= 1e-6; bit-identity implies it,
+    # assert it explicitly so a future tolerance relaxation stays honest
+    xs = direct_allocations(snap)
+    for ba in result.slabs:
+        ref = np.asarray(xs[ba.bucket])[ba.rows]
+        rel = np.linalg.norm(ba.x - ref) / max(np.linalg.norm(ref), 1e-12)
+        assert rel <= 1e-6
+
+
+@pytest.mark.parametrize("preset", ("matching", "capacity-cap"))
+def test_query_subset_and_repeat_batches(preset):
+    """Different batch sizes (different pad shapes) all serve correctly."""
+    store = DualStore()
+    snap = _published_preset(preset, store)
+    users = np.flatnonzero(snap.deg > 0)
+    rng = np.random.default_rng(3)
+    for size in (1, 2, 7, 33, users.size):
+        batch = rng.choice(users, size=min(size, users.size), replace=False)
+        _assert_result_matches_snapshot(store.query(preset, batch), snap)
+
+
+def test_unmatched_users_and_range_validation():
+    store = DualStore()
+    snap = _published_preset("matching", store)
+    dead = np.flatnonzero(snap.deg == 0)
+    live = np.flatnonzero(snap.deg > 0)[:4]
+    if dead.size:
+        result = store.query("matching", np.concatenate([live, dead[:2]]))
+        assert set(result.unmatched) == set(dead[:2])
+        ids, x = result.allocation(int(dead[0]))
+        assert ids.size == 0 and x.size == 0
+    with pytest.raises(ValueError):
+        store.query("matching", [snap.num_users])
+    with pytest.raises(KeyError):
+        store.query("no-such-tenant", [0])
+
+
+def test_allocation_accessor_is_feasible():
+    """Simplex tenants (inequality radius 1): each served user's allocation
+    is nonnegative with mass <= 1 over its destinations, padding slots
+    exactly zero."""
+    store = DualStore()
+    snap = _published_preset("matching", store)
+    users = np.flatnonzero(snap.deg > 0)[:16]
+    result = store.query("matching", users)
+    for u in users:
+        ids, x = result.allocation(int(u))
+        assert ids.size == int(snap.deg[u])
+        assert np.all(x >= 0.0) and float(x.sum()) <= 1.0 + 1e-5
+    for ba in result.slabs:
+        pad = ~ba.mask.astype(bool)
+        assert np.all(ba.x[pad] == 0.0)
+
+
+# -- session / scheduler integration ------------------------------------------
+
+
+def test_session_publishes_and_generation_advances():
+    rng = np.random.default_rng(5)
+    store = DualStore(history=4)
+    sess = SolveSession("t0", BASE, SERVICE)
+    sess.dual_store = store
+    _, rep0 = sess.solve()
+    assert rep0["published_generation"] == 0
+    snap0 = store.snapshot("t0")
+    assert snap0.generation == 0 and snap0.cadence == 0
+    users = np.flatnonzero(snap0.deg > 0)
+    _assert_result_matches_snapshot(store.query("t0", users), snap0)
+    # an A-touching cadence bumps the ingestor generation; the new snapshot
+    # must report it and the old one stays answerable through history
+    sess.ingest(_perturb_delta(BASE, rng))
+    _, rep1 = sess.solve()
+    assert rep1["published_generation"] == sess.ingestor.generation > 0
+    snap1 = store.snapshot("t0")
+    assert snap1.generation == rep1["published_generation"]
+    _assert_result_matches_snapshot(store.query("t0", users), snap1)
+    _assert_result_matches_snapshot(
+        store.query_snapshot(store.get("t0", 0), users), snap0
+    )
+
+
+def test_session_without_store_reports_no_publication():
+    sess = SolveSession("t0", BASE, SERVICE)
+    _, rep = sess.solve()
+    assert rep["published_generation"] is None
+
+
+def test_scheduler_wires_store_into_sessions():
+    store = DualStore()
+    sched = Scheduler(SERVICE, dual_store=store)
+    sched.add_tenant("t0", BASE)
+    sched.add_tenant("t1", generate_matching_instance(
+        dataclasses.replace(SPEC, seed=22)
+    ))
+    out = sched.run_cadence()
+    assert sorted(store.tenants()) == ["t0", "t1"]
+    for name in ("t0", "t1"):
+        assert out.reports[name]["published_generation"] == 0
+        snap = store.snapshot(name)
+        users = np.flatnonzero(snap.deg > 0)[:8]
+        _assert_result_matches_snapshot(store.query(name, users), snap)
+
+
+def test_scheduler_restore_rewires_store():
+    store = DualStore()
+    sched = Scheduler(SERVICE, dual_store=store)
+    sched.add_tenant("t0", BASE)
+    sched.run_cadence()
+    arrays, meta = sched.state_dict()
+    sched2 = Scheduler(SERVICE, dual_store=store)
+    sched2.load_state(arrays, meta)
+    assert sched2.sessions["t0"].dual_store is store
+
+
+# -- the generation fence under the pipeline ----------------------------------
+
+
+def test_generation_fence_under_pipeline():
+    """Queries hammering the store while run_pipeline swaps snapshots: every
+    batch is answered entirely against ONE retained generation and is
+    bit-identical to the direct projection of that generation's snapshot."""
+    rng = np.random.default_rng(9)
+    store = DualStore(history=16)
+    sched = Scheduler(SERVICE, dual_store=store)
+    base2 = generate_matching_instance(dataclasses.replace(SPEC, seed=22))
+    sched.add_tenant("t0", BASE)
+    sched.add_tenant("t1", base2)
+    sched.run_cadence()  # initial publication (cold, generation 0)
+    deltas = [
+        {"t0": _perturb_delta(BASE, rng), "t1": _perturb_delta(base2, rng)}
+        for _ in range(4)
+    ]
+    snap0 = store.snapshot("t0")
+    users_all = np.flatnonzero(snap0.deg > 0)
+    results = []
+    stop = threading.Event()
+
+    def hammer():
+        qrng = np.random.default_rng(11)
+        while not stop.is_set():
+            batch = qrng.choice(users_all, size=24, replace=False)
+            results.append(store.query("t0", batch))
+
+    worker = threading.Thread(target=hammer, daemon=True)
+    worker.start()
+    try:
+        outs = sched.run_pipeline(deltas)
+    finally:
+        stop.set()
+        worker.join(timeout=30)
+    assert not worker.is_alive()
+    assert len(outs) == 4 and all(not o.ingest_errors for o in outs)
+    gens = {r.generation for r in results}
+    assert len(gens) >= 2, "hammer should observe a mid-pipeline swap"
+    # every batch verifies against the snapshot of the generation it reports
+    retained = set(store.generations("t0"))
+    assert gens <= retained
+    for r in results:
+        _assert_result_matches_snapshot(r, store.get("t0", r.generation))
+
+
+# -- namespace split ----------------------------------------------------------
+
+
+def test_lm_demo_namespace_is_separate():
+    """The seed's token-serving demo moved under repro.serving.lm_demo and
+    the allocation API owns the package root."""
+    import repro.serving as serving
+    import repro.serving.lm_demo as lm_demo
+
+    assert hasattr(serving, "DualStore")
+    assert not hasattr(serving, "ServeEngine")
+    assert hasattr(lm_demo, "ServeEngine")
+    assert hasattr(lm_demo, "lower_decode_step")

@@ -70,7 +70,7 @@ def test_end_to_end_train_and_serve():
     from repro.configs import get_reduced_config
     from repro.data.pipeline import SyntheticLMData
     from repro.models.model import Model
-    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.lm_demo.engine import Request, ServeEngine
     from repro.training.loop import TrainLoopConfig, train_loop
     from repro.training.optimizer import AdamWConfig
 

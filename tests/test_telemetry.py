@@ -83,6 +83,7 @@ def test_jsonl_schema_golden_keys():
         "ingest": {"tenant", "in_place", "n_insert", "n_delete", "n_update"},
         "counters": {"counters", "gauges", "histograms"},
         "bench": {"suite", "quick", "results"},
+        "serving_query": {"tenant", "generation", "users", "latency_seconds"},
     }
     assert set(SCHEMA) == set(golden)
     for kind, keys in golden.items():
