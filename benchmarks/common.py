@@ -20,6 +20,10 @@ ROWS: list[tuple] = []
 # the whole harness finishes in a couple of minutes on a shared runner.
 QUICK = False
 
+# Slab storage dtypes table2's mixed-precision sweep measures (run.py
+# --slab-dtypes).  float32 is always the baseline row of the sweep.
+SLAB_DTYPES: tuple[str, ...] = ("float32", "bfloat16", "int8")
+
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     ROWS.append((name, us_per_call, derived))
@@ -41,7 +45,8 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
 
 
 def cpu_instance(sources: int, *, destinations: int = 1000, avg_degree: float = 8.0,
-                 families: int = 1, seed: int = 0, shard_multiple: int = 1):
+                 families: int = 1, seed: int = 0, shard_multiple: int = 1,
+                 dtype: str = "float32"):
     """CPU-scaled matching instance (paper uses 25M-100M; we sweep 10k-1M)."""
     spec = MatchingInstanceSpec(
         num_sources=sources,
@@ -51,6 +56,6 @@ def cpu_instance(sources: int, *, destinations: int = 1000, avg_degree: float = 
         seed=seed,
     )
     inst = generate_matching_instance(spec)
-    packed = bucketize(inst, shard_multiple=shard_multiple)
+    packed = bucketize(inst, shard_multiple=shard_multiple, dtype=dtype)
     scaled, d = normalize_rows(packed)
     return inst, packed, scaled

@@ -76,6 +76,7 @@ def _append_bench_history(path: str, only: set, failures: int) -> None:
         sink.emit("bench", {
             "suite": ",".join(sorted(only)) if only else "all",
             "quick": common.QUICK,
+            "slab_dtypes": list(common.SLAB_DTYPES),
             "failures": failures,
             "results": [
                 {"name": name, "us_per_call": us, "derived": derived}
@@ -96,7 +97,18 @@ def main() -> int:
     ap.add_argument("--bench-history", default="",
                     help="append one timestamped telemetry-schema JSONL "
                          "record per run here (empty string disables)")
+    ap.add_argument("--slab-dtypes", default="",
+                    help="comma list of slab storage dtypes for table2's "
+                         "mixed-precision sweep (default: float32,bfloat16,"
+                         "int8; float32 is always included as the baseline)")
     args = ap.parse_args()
+    if args.slab_dtypes:
+        from benchmarks import common
+
+        dtypes = [s.strip() for s in args.slab_dtypes.split(",") if s.strip()]
+        if "float32" not in dtypes:
+            dtypes.insert(0, "float32")
+        common.SLAB_DTYPES = tuple(dtypes)
     if args.quick:
         from benchmarks import common
 

@@ -44,6 +44,16 @@ from repro.core import MatchingObjective
 RESULTS: dict[int, dict] = {}
 
 
+def _sweep_cfg():
+    """Short continuation solve used for the sweep's quality-drift metric."""
+    from repro.core import MaximizerConfig
+
+    return MaximizerConfig(
+        gammas=(0.1, 0.01),
+        iters_per_stage=25 if common.QUICK else 75,
+    )
+
+
 def _legacy_segment_sum_ax(bucket, x, J):
     """The pre-PR gradient half: broadcast index tensor + vmap'd scatter-add."""
     contrib = bucket.coeff * (x * bucket.mask)[None]  # [m, n, L]
@@ -73,25 +83,102 @@ def _slab_slots(inst) -> int:
     return sum(b.cost.size for b in inst.buckets)
 
 
-def _analytic_bytes(inst, *, fused: bool) -> int:
-    """Per-iteration HBM slab bytes on the TPU target (fp32, see dryrun)."""
+def _analytic_bytes(inst, *, fused: bool, slab_dtype: str = "float32") -> int:
+    """Per-iteration HBM slab bytes on the TPU target (see dryrun)."""
+    from repro.kernels.ops import (
+        oracle_hist_partial_bytes, oracle_slab_slot_bytes,
+    )
+
     m, J = inst.num_families, inst.num_destinations
     slots = _slab_slots(inst)
-    # shared primal pass: idx(4) + coeff(4m) + cost(4) + mask(4) reads + x(4) write
-    per_slot = 4 + 4 * m + 4 + 4 + 4
+    it = jnp.dtype(
+        jnp.bfloat16 if slab_dtype == "bfloat16" else slab_dtype
+    ).itemsize
+    # shared primal pass at the storage width: idx(4) + coeff(m*it) +
+    # cost(it) + mask(it) reads + the x write (storage width for float
+    # slabs, fp32 for int8) — oracle_slab_slot_bytes, the shared model
+    per_slot = oracle_slab_slot_bytes(m, slab_dtype)
     if not fused:
-        # gradient half re-reads idx + coeff + x; scalar passes re-read cost + x
-        per_slot += 4 + 4 * m + 4 + 4 + 4
+        # gradient half re-reads idx + coeff + x; scalar passes re-read
+        # cost + x (x at the primal-out width, approximated as storage)
+        per_slot += 4 + it * m + it + it + it
     total = per_slot * slots
     if fused:
-        # partial histograms: one [m, J] write + read per grid step
-        # (tree-sum); shared model with launch.dryrun
-        from repro.kernels.ops import oracle_hist_partial_bytes
-
+        # partial histograms: one [m, J] fp32 write + read per grid step
+        # (tree-sum) regardless of storage dtype; shared with launch.dryrun
         for b in inst.buckets:
             n, L = b.cost.shape
             total += oracle_hist_partial_bytes(n, L, m, J)
     return total
+
+
+def _cost_analysis_bytes(compiled) -> float:
+    """XLA-measured bytes accessed of one compiled iteration (0 if absent)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+        ca = ca[0] if ca else {}
+    return float(ca.get("bytes accessed", 0.0))
+
+
+def _dtype_sweep(sources: int, res_ref) -> dict:
+    """Mixed-precision slab sweep at one problem size.
+
+    Per storage dtype: the fused-oracle iteration wall time, the analytic
+    TPU slab bytes (`oracle_slab_slot_bytes` model), the XLA-measured bytes
+    accessed of the compiled iteration on THIS host, and the quality drift
+    of a short continuation solve vs the fp32 reference (duals rel-L2 +
+    normalized objective gap — the same gap definition as table4_quality).
+    """
+    from repro.core import Maximizer
+
+    sweep: dict[str, dict] = {}
+    for dt in common.SLAB_DTYPES:
+        _, _, scaled_dt = cpu_instance(sources, dtype=dt)
+        obj_dt = MatchingObjective(scaled_dt, fused_oracle=True)
+        lam0 = jnp.zeros((obj_dt.dual_dim,), jnp.float32)
+
+        @jax.jit
+        def dt_iter(lam, _obj=obj_dt):
+            ev = _obj.calculate(lam, jnp.float32(1.0))
+            return jnp.maximum(lam + 1e-2 * ev.grad, 0.0)
+
+        t_us = time_fn(dt_iter, lam0)
+        measured = _cost_analysis_bytes(dt_iter.lower(lam0).compile())
+        analytic = _analytic_bytes(scaled_dt, fused=True, slab_dtype=dt)
+        res_dt = Maximizer(MatchingObjective(scaled_dt), _sweep_cfg()).solve()
+        lam_ref = res_ref.lam
+        drift = float(
+            jnp.linalg.norm(res_dt.lam - lam_ref)
+            / jnp.maximum(jnp.linalg.norm(lam_ref), 1e-12)
+        )
+        gap = abs(float(res_dt.g) - float(res_ref.g)) / (
+            1.0 + abs(float(res_ref.g))
+        )
+        sweep[dt] = {
+            "fused_iter_us": t_us,
+            "hbm_bytes_per_iter_analytic": analytic,
+            "bytes_accessed_measured": measured,
+            "dual_rel_l2_vs_f32": drift,
+            "objective_gap_vs_f32": gap,
+        }
+    base = sweep["float32"]
+    for dt, row in sweep.items():
+        row["traffic_reduction_vs_f32_analytic"] = base[
+            "hbm_bytes_per_iter_analytic"
+        ] / max(row["hbm_bytes_per_iter_analytic"], 1)
+        row["traffic_reduction_vs_f32_measured"] = base[
+            "bytes_accessed_measured"
+        ] / max(row["bytes_accessed_measured"], 1.0)
+        emit(
+            f"table2/iter_s{sources}_slab_{dt}",
+            row["fused_iter_us"],
+            f"hbm_bytes~{row['hbm_bytes_per_iter_analytic']};"
+            f"measured_bytes~{row['bytes_accessed_measured']:.0f};"
+            f"traffic_reduction="
+            f"{row['traffic_reduction_vs_f32_analytic']:.2f}x;"
+            f"dual_drift={row['dual_rel_l2_vs_f32']:.2e}",
+        )
+    return sweep
 
 
 def run() -> None:
@@ -149,6 +236,10 @@ def run() -> None:
             f"speedup_vs_rewritten={t_jit / max(t_fused, 1e-9):.2f}x;"
             f"traffic_reduction={bytes_unfused / max(bytes_fused, 1):.2f}x",
         )
+        from repro.core import Maximizer
+
+        res_ref = Maximizer(MatchingObjective(scaled), _sweep_cfg()).solve()
+        sweep = _dtype_sweep(sources, res_ref)
         RESULTS[sources] = {
             "eager_us": t_eager,
             "jit_legacy_us": t_legacy,
@@ -161,4 +252,7 @@ def run() -> None:
             "hbm_bytes_per_iter_unfused": bytes_unfused,
             "hbm_bytes_per_iter_fused": bytes_fused,
             "hbm_traffic_reduction": bytes_unfused / max(bytes_fused, 1),
+            # mixed-precision slab storage sweep (fused oracle, per dtype):
+            # wall time, analytic + XLA-measured bytes, quality drift vs fp32
+            "slab_dtype_sweep": sweep,
         }

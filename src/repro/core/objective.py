@@ -43,7 +43,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.projections import ProjectionMap, UnitSimplexProjection
-from repro.instances.buckets import Bucket, BucketedInstance
+from repro.instances.buckets import (
+    Bucket,
+    BucketedInstance,
+    _quantize_sym,
+    dequantize_bucket,
+)
 
 __all__ = [
     "DualEval",
@@ -62,6 +67,12 @@ class DualEval(NamedTuple):
     primal_linear: jax.Array  # c'x
     primal_ridge: jax.Array  # (gamma/2)||x||^2
     ax: jax.Array  # [m*J] A x
+
+
+def _acc32(x: jax.Array) -> jax.Array:
+    """Widen narrow primal slabs to fp32 before self-reductions (host-level
+    dtype branch: identity object, identical jaxpr, for fp32 inputs)."""
+    return x if x.dtype == jnp.float32 else x.astype(jnp.float32)
 
 
 def _gather_at_lam(bucket: Bucket, lam2: jax.Array) -> jax.Array:
@@ -158,6 +169,21 @@ class MatchingObjective:
     def dual_dim(self) -> int:
         return self.instance.dual_dim
 
+    @property
+    def _buckets(self) -> tuple[Bucket, ...]:
+        """fp32 compute views of the buckets for the unfused (pure-jnp) paths.
+
+        For fp32 storage this returns the instance's own bucket objects — a
+        host-level no-op keeping the default path's jaxpr bit-identical.
+        Narrow storage builds the widening converts (+ int8 scale multiplies)
+        at the call site, inside the consumer's trace: XLA fuses the convert
+        into the consuming op, so HBM reads stay at the storage width and no
+        fp32 slab copy is ever materialized.  The fused kernel paths bypass
+        this view and take the raw storage arrays (+ scales), dequantizing
+        in VMEM.
+        """
+        return tuple(dequantize_bucket(b) for b in self.instance.buckets)
+
     def _proj(self, i: int) -> ProjectionMap:
         return self._projections[i] if self._projections else self.projection
 
@@ -193,24 +219,27 @@ class MatchingObjective:
                     radius=proj.radius,
                     inequality=proj.inequality,
                     interpret=self.kernel_interpret,
+                    coeff_scale=b.coeff_scale,
+                    cost_scale=b.cost_scale,
                 )
                 for b in inst.buckets
             )
         lam2 = lam.reshape(inst.num_families, inst.num_destinations)
         gamma_eff = self._scaled_gamma(gamma)
         slabs = []
-        for i, b in enumerate(inst.buckets):
+        for i, b in enumerate(self._buckets):
             z = -(_gather_at_lam(b, lam2) + self._scaled_cost(b)) / gamma_eff
             slabs.append(self._proj(i)(z, b.mask))
         return tuple(slabs)
 
     def apply_A(self, x_slabs: Sequence[jax.Array]) -> jax.Array:
-        """A x as a [m*J] vector."""
+        """A x as a [m*J] vector (accumulated at >= fp32 for narrow slabs)."""
         inst = self.instance
         ax = jnp.zeros(
-            (inst.num_families, inst.num_destinations), x_slabs[0].dtype
+            (inst.num_families, inst.num_destinations),
+            jnp.promote_types(x_slabs[0].dtype, jnp.float32),
         )
-        for b, x in zip(inst.buckets, x_slabs):
+        for b, x in zip(self._buckets, x_slabs):
             ax = ax + _segment_sum_ax(b, x, inst.num_destinations)
         return ax.reshape(-1)
 
@@ -218,7 +247,7 @@ class MatchingObjective:
         """A^T lam per bucket (for power iteration / diagnostics)."""
         inst = self.instance
         lam2 = lam.reshape(inst.num_families, inst.num_destinations)
-        return tuple(_gather_at_lam(b, lam2) * b.mask for b in inst.buckets)
+        return tuple(_gather_at_lam(b, lam2) * b.mask for b in self._buckets)
 
     def calculate(self, lam: jax.Array, gamma) -> DualEval:
         """(g, grad g, x*) — the paper's ObjectiveFunction.calculate (Table 1)."""
@@ -230,11 +259,11 @@ class MatchingObjective:
         ax = self.apply_A(x_slabs)
         lin = sum(
             jnp.vdot(self._scaled_cost(b), x)
-            for b, x in zip(inst.buckets, x_slabs)
+            for b, x in zip(self._buckets, x_slabs)
         )
         ridge = (
             0.5 * self._scaled_gamma(gamma)
-            * sum(jnp.vdot(x, x) for x in x_slabs)
+            * sum(jnp.vdot(_acc32(x), _acc32(x)) for x in x_slabs)
         )
         return self._finish_eval(lam, ax, lin, ridge, x_slabs)
 
@@ -283,6 +312,8 @@ class MatchingObjective:
                 radius=proj.radius,
                 inequality=proj.inequality,
                 interpret=self.kernel_interpret,
+                coeff_scale=b.coeff_scale,
+                cost_scale=b.cost_scale,
             )
             x_slabs.append(x)
             ax2 = ax2 + hist
@@ -295,14 +326,13 @@ class MatchingObjective:
     # -- diagnostics --------------------------------------------------------
 
     def primal_objective(self, x_slabs: Sequence[jax.Array], gamma) -> jax.Array:
-        inst = self.instance
         lin = sum(
             jnp.vdot(self._scaled_cost(b), x)
-            for b, x in zip(inst.buckets, x_slabs)
+            for b, x in zip(self._buckets, x_slabs)
         )
         ridge = (
             0.5 * self._scaled_gamma(gamma)
-            * sum(jnp.vdot(x, x) for x in x_slabs)
+            * sum(jnp.vdot(_acc32(x), _acc32(x)) for x in x_slabs)
         )
         return lin + ridge
 
@@ -347,21 +377,36 @@ def normalize_rows_traced(
     as every solve applies the same transform.
     """
     m, J = inst.num_families, inst.num_destinations
+    # Narrow slab dtypes: norms and the Jacobi scaling run on fp32 compute
+    # views; float storage casts the scaled coeff back to the storage dtype
+    # (keeping the slab HBM width through the solve), while quantized (int8)
+    # slabs stay dequantized-fp32 for the remainder of the traced solve —
+    # in-trace requantization would need data-dependent scales.  fp32
+    # storage takes the exact pre-slab_dtype expressions (host branch).
+    compute = tuple(dequantize_bucket(b) for b in inst.buckets)
     norms_sq = jnp.zeros((m, J), jnp.float32)
-    for b in inst.buckets:
+    for b in compute:
         contrib = (b.coeff**2) * b.mask[None]  # [m, n, L]
         norms_sq = norms_sq + binned_segment_sum(b.idx, contrib, J)
     norms = jnp.sqrt(norms_sq)
     d2 = jnp.where(norms > eps, 1.0 / jnp.maximum(norms, eps), 1.0)  # [m, J]
-    buckets = tuple(
-        Bucket(
-            idx=b.idx,
-            coeff=b.coeff * jnp.take(d2, b.idx, axis=1),
-            cost=b.cost,
-            mask=b.mask,
+
+    def _scaled_bucket(b: Bucket, cb: Bucket) -> Bucket:
+        coeff = cb.coeff * jnp.take(d2, b.idx, axis=1)
+        if b.coeff_scale is None and coeff.dtype != b.coeff.dtype:
+            coeff = coeff.astype(b.coeff.dtype)  # bf16 storage: cast back
+        if b.coeff_scale is None:
+            return Bucket(
+                idx=b.idx, coeff=coeff, cost=b.cost, mask=b.mask,
+                length=b.length,
+            )
+        return Bucket(
+            idx=b.idx, coeff=coeff, cost=cb.cost, mask=cb.mask,
             length=b.length,
         )
-        for b in inst.buckets
+
+    buckets = tuple(
+        _scaled_bucket(b, cb) for b, cb in zip(inst.buckets, compute)
     )
     # dataclasses.replace keeps the static fields — including an attached
     # FormulationSpec, so compiled formulations survive the device-side
@@ -390,6 +435,22 @@ def normalize_rows(
     for b in inst.buckets:
         idx = np.asarray(b.idx)
         scale = d2[:, idx]  # [m, n, L]
+        if b.coeff_scale is not None:
+            # quantized (int8) slabs: dequantize, apply the Jacobi scaling in
+            # fp32, requantize with fresh symmetric per-family scales
+            coeff_f32 = np.asarray(b.coeff, np.float32) * np.asarray(
+                b.coeff_scale, np.float32
+            )
+            q, new_scale = _quantize_sym(
+                (coeff_f32 * scale).astype(np.float32), axes=(1, 2)
+            )
+            buckets.append(
+                dataclasses.replace(
+                    b, idx=idx, coeff=q, coeff_scale=new_scale,
+                    cost=np.asarray(b.cost), mask=np.asarray(b.mask),
+                )
+            )
+            continue
         buckets.append(
             Bucket(
                 idx=idx,

@@ -71,6 +71,20 @@ class DistConfig:
     # reduction as before).  Subsumes fused_kernel when set.
     fused_oracle: bool = False
     kernel_interpret: Optional[bool] = None
+    # Slab storage dtype ("float32" | "bfloat16" | "int8"); the launch layer
+    # bucketizes with it and the per-shard oracles load the narrow slabs with
+    # fp32 accumulation (kernels/).  Dual space (lam, rhs, the psum payload)
+    # stays fp32 regardless — wire compression is the separate `compress`.
+    slab_dtype: str = "float32"
+
+    def __post_init__(self):
+        from repro.instances.buckets import SLAB_DTYPES
+
+        if self.slab_dtype not in SLAB_DTYPES:
+            raise ValueError(
+                f"DistConfig.slab_dtype={self.slab_dtype!r}; "
+                f"choose from {SLAB_DTYPES}"
+            )
 
     @property
     def axes_tuple(self) -> tuple[str, ...]:
@@ -86,9 +100,13 @@ def instance_pspecs(
 ) -> BucketedInstance:
     """Pytree of PartitionSpecs matching a BucketedInstance."""
     row = P(axes, None)
+    # int8 dequant scales (when present) are tiny [m,1,1]/[1,1] arrays and
+    # ride along fully replicated; None mirrors None so treedefs match.
     buckets = tuple(
         Bucket(idx=row, coeff=P(None, axes, None), cost=row, mask=row,
-               length=b.length)
+               length=b.length,
+               coeff_scale=None if b.coeff_scale is None else P(),
+               cost_scale=None if b.cost_scale is None else P())
         for b in inst.buckets
     )
     return BucketedInstance(

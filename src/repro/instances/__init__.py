@@ -11,11 +11,14 @@ from repro.instances.generator import (
     EdgeListInstance,
 )
 from repro.instances.buckets import (
+    SLAB_DTYPES,
     Bucket,
     BucketedInstance,
     bucketize,
     pack_single_slab,
     pack_source_ids,
+    resolve_slab_dtype,
+    slab_dtype_name,
     unpack_primal,
 )
 from repro.instances.deltas import (
@@ -28,6 +31,9 @@ from repro.instances.deltas import (
 )
 
 __all__ = [
+    "SLAB_DTYPES",
+    "resolve_slab_dtype",
+    "slab_dtype_name",
     "MatchingInstanceSpec",
     "generate_matching_instance",
     "EdgeListInstance",

@@ -10,13 +10,22 @@ kernel launches is 1 + floor(log2 s_max), exactly the paper's launch count.
 
 Layout per bucket (n rows = sources, L = slab width):
   idx   [n, L] int32  destination id of each eligible edge (0 for padding)
-  coeff [m, n, L] f32 constraint coefficient per family    (0 for padding)
-  cost  [n, L] f32    minimisation cost c_ij               (0 for padding)
-  mask  [n, L] f32    1.0 for real edges, 0.0 for padding
+  coeff [m, n, L]     constraint coefficient per family    (0 for padding)
+  cost  [n, L]        minimisation cost c_ij               (0 for padding)
+  mask  [n, L]        1.0 for real edges, 0.0 for padding
 
 Rows are padded up to a multiple of ``shard_multiple`` so `shard_map` sees
 equal per-device shapes; padded rows are all-mask-zero and contribute exact
 zeros to gradients.
+
+Slab storage dtype (``slab_dtype``): coeff/cost/mask are stored in fp32
+(default), bf16, or int8.  Narrow storage halves/quarters the per-iteration
+HBM traffic of the dual oracle; *accumulation* (the Ax histogram, c'x,
+||x||^2, all dual/continuation math) stays fp32 on every path.  int8 slabs
+carry symmetric per-bucket scales — ``coeff_scale [m,1,1]`` (per family) and
+``cost_scale [1,1]``, both fp32 — and are dequantized in-kernel (value =
+q * scale); mask is exact in any dtype (0/1).  The rhs and the duals stay
+fp32 for narrow slab dtypes (`rhs_dtype`).
 """
 from __future__ import annotations
 
@@ -26,6 +35,7 @@ import weakref
 from typing import Optional, Sequence
 
 import jax
+import ml_dtypes
 import numpy as np
 
 from repro.instances.generator import EdgeListInstance
@@ -33,25 +43,70 @@ from repro.instances.generator import EdgeListInstance
 __all__ = [
     "Bucket",
     "BucketedInstance",
+    "SLAB_DTYPES",
     "bucketize",
+    "convert_bucket",
+    "dequantize_bucket",
     "pack_single_slab",
     "pack_source_ids",
+    "resolve_slab_dtype",
+    "rhs_dtype",
+    "slab_dtype_name",
     "unpack_primal",
 ]
+
+# Supported slab storage dtypes, by canonical name.  "bfloat16" maps to
+# ml_dtypes.bfloat16 on the host (numpy slabs) and jnp.bfloat16 on device.
+SLAB_DTYPES = ("float32", "bfloat16", "int8")
+
+_INT8_QMAX = 127.0  # symmetric quantization range [-127, 127]
+
+
+def resolve_slab_dtype(dtype) -> np.dtype:
+    """Canonical numpy dtype of a slab-dtype name/dtype (raises on unknown)."""
+    if isinstance(dtype, str) and dtype == "bfloat16":
+        return np.dtype(ml_dtypes.bfloat16)
+    d = np.dtype(dtype)
+    if slab_dtype_name(d) not in SLAB_DTYPES:
+        raise ValueError(
+            f"unsupported slab dtype {dtype!r}; choose from {SLAB_DTYPES}"
+        )
+    return d
+
+
+def slab_dtype_name(dtype) -> str:
+    """Canonical name ("float32" | "bfloat16" | "int8") of a slab dtype."""
+    return np.dtype(dtype).name
+
+
+def rhs_dtype(slab_dtype) -> np.dtype:
+    """Storage dtype of the rhs for a given slab dtype: the duals (and
+    everything in dual space, rhs included) stay fp32 when slabs go narrow."""
+    d = resolve_slab_dtype(slab_dtype)
+    return d if slab_dtype_name(d) == "float32" else np.dtype(np.float32)
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class Bucket:
     idx: jax.Array | np.ndarray  # [n, L] int32
-    coeff: jax.Array | np.ndarray  # [m, n, L] f32
-    cost: jax.Array | np.ndarray  # [n, L] f32
-    mask: jax.Array | np.ndarray  # [n, L] f32
+    coeff: jax.Array | np.ndarray  # [m, n, L] slab dtype
+    cost: jax.Array | np.ndarray  # [n, L] slab dtype
+    mask: jax.Array | np.ndarray  # [n, L] slab dtype (exact 0/1 in any dtype)
     length: int = dataclasses.field(metadata=dict(static=True))
+    # int8 storage only: symmetric per-bucket dequantization scales
+    # (value = q * scale), fp32.  None for float storage — None contributes
+    # no pytree leaves, so fp32/bf16 treedefs are unchanged by these fields.
+    coeff_scale: Optional[jax.Array | np.ndarray] = None  # [m, 1, 1] f32
+    cost_scale: Optional[jax.Array | np.ndarray] = None  # [1, 1] f32
 
     @property
     def rows(self) -> int:
         return int(self.idx.shape[0])
+
+    @property
+    def slab_dtype(self) -> str:
+        return slab_dtype_name(self.coeff.dtype)
 
 
 @jax.tree_util.register_dataclass
@@ -86,16 +141,109 @@ class BucketedInstance:
         out = np.zeros(m * J)
         for b in self.buckets:
             idx = np.asarray(b.idx)
-            coeff = np.asarray(b.coeff)
-            mask = np.asarray(b.mask)
+            coeff, _, mask = _host_dequant(b)
             for k in range(m):
                 np.add.at(out, k * J + idx.ravel(), (coeff[k] ** 2 * mask).ravel())
         return out
+
+    @property
+    def slab_dtype(self) -> str:
+        return self.buckets[0].slab_dtype
 
     def shape_dtype_structs(self) -> "BucketedInstance":
         """ShapeDtypeStruct twin of this instance (for .lower() dry-runs)."""
         as_sds = lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
         return jax.tree.map(as_sds, self)
+
+
+# -- slab dtype conversion ---------------------------------------------------
+
+
+def _host_dequant(b: Bucket) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(coeff, cost, mask) of one bucket as fp32 numpy arrays (host side)."""
+    coeff = np.asarray(b.coeff)
+    cost = np.asarray(b.cost)
+    mask = np.asarray(b.mask)
+    if b.slab_dtype == "float32":
+        return coeff, cost, mask
+    coeff = coeff.astype(np.float32)
+    cost = cost.astype(np.float32)
+    mask = mask.astype(np.float32)
+    if b.coeff_scale is not None:
+        coeff = coeff * np.asarray(b.coeff_scale, np.float32)
+    if b.cost_scale is not None:
+        cost = cost * np.asarray(b.cost_scale, np.float32)
+    return coeff, cost, mask
+
+
+def _quantize_sym(values: np.ndarray, axes: tuple[int, ...]) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetric int8 quantization over `axes`: (q, scale) with q = round(v/s)
+    clipped to [-127, 127] and s = max|v| / 127 (1/127 when all-zero, so the
+    padding invariant q == 0 on mask-zero slots is preserved exactly)."""
+    amax = np.abs(values).max(axis=axes, keepdims=True).astype(np.float32)
+    scale = np.where(amax > 0, amax, 1.0) / _INT8_QMAX
+    q = np.clip(np.rint(values / scale), -_INT8_QMAX, _INT8_QMAX)
+    return q.astype(np.int8), scale
+
+
+def convert_bucket(b: Bucket, dtype) -> Bucket:
+    """Host-side conversion of one fp32 bucket to a storage dtype.
+
+    bf16: plain rounding cast of coeff/cost/mask.  int8: symmetric per-bucket
+    quantization (per family for coeff) with fp32 scales; mask stores its
+    exact 0/1 pattern as int8.  fp32 in -> the bucket unchanged.
+    """
+    d = resolve_slab_dtype(dtype)
+    name = slab_dtype_name(d)
+    if name == slab_dtype_name(b.coeff.dtype) and b.coeff_scale is None:
+        return b
+    if b.slab_dtype != "float32":
+        raise ValueError("convert_bucket expects an fp32 source bucket")
+    coeff = np.asarray(b.coeff)
+    cost = np.asarray(b.cost)
+    mask = np.asarray(b.mask)
+    if name == "float32":
+        return b
+    if name == "bfloat16":
+        return dataclasses.replace(
+            b, coeff=coeff.astype(d), cost=cost.astype(d), mask=mask.astype(d)
+        )
+    q_coeff, coeff_scale = _quantize_sym(coeff, axes=(1, 2))
+    q_cost, cost_scale = _quantize_sym(cost[None], axes=(1, 2))
+    return dataclasses.replace(
+        b,
+        coeff=q_coeff,
+        cost=q_cost[0],
+        mask=mask.astype(np.int8),
+        coeff_scale=coeff_scale,
+        cost_scale=cost_scale[0],
+    )
+
+
+def dequantize_bucket(b: Bucket):
+    """fp32 compute view of one bucket (trace-safe; jnp ops on narrow dtypes).
+
+    fp32 storage returns the bucket object unchanged — a host-level branch,
+    so the default path's jaxpr is bit-identical to the pre-slab_dtype one
+    (same trick as the formulation layer's ==1.0 scale branches).  Narrow
+    storage dequantizes coeff/cost/mask to fp32; XLA fuses the convert into
+    the consuming op, so HBM reads stay at the storage width.
+    """
+    import jax.numpy as jnp
+
+    if b.slab_dtype == "float32":
+        return b
+    coeff = jnp.asarray(b.coeff).astype(jnp.float32)
+    cost = jnp.asarray(b.cost).astype(jnp.float32)
+    mask = jnp.asarray(b.mask).astype(jnp.float32)
+    if b.coeff_scale is not None:
+        coeff = coeff * jnp.asarray(b.coeff_scale, jnp.float32)
+    if b.cost_scale is not None:
+        cost = cost * jnp.asarray(b.cost_scale, jnp.float32)
+    return dataclasses.replace(
+        b, coeff=coeff, cost=cost, mask=mask,
+        coeff_scale=None, cost_scale=None,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -134,8 +282,12 @@ def bucketize(
 
     Edges in ``inst`` must be sorted by (source, destination) — the generator
     guarantees this.  ``shard_multiple`` pads every bucket's row count so it
-    divides evenly across that many shards.
+    divides evenly across that many shards.  ``dtype`` is the slab storage
+    dtype ("float32" | "bfloat16" | "int8"; see module docstring): slabs are
+    packed in fp32 and converted per bucket, and the rhs stays fp32 for
+    narrow dtypes (dual space is always fp32).
     """
+    slab_dt = resolve_slab_dtype(dtype)
     spec = inst.spec
     I, J, m = spec.num_sources, spec.num_destinations, spec.num_families
 
@@ -169,9 +321,9 @@ def bucketize(
         rows_src = active[b_of == t]
         n = _pad_rows(rows_src.size, shard_multiple)
         idx = np.zeros((n, Lt), dtype=np.int32)
-        coeff = np.zeros((m, n, Lt), dtype=dtype)
-        cost = np.zeros((n, Lt), dtype=dtype)
-        mask = np.zeros((n, Lt), dtype=dtype)
+        coeff = np.zeros((m, n, Lt), dtype=np.float32)
+        cost = np.zeros((n, Lt), dtype=np.float32)
+        mask = np.zeros((n, Lt), dtype=np.float32)
         d = deg[rows_src]
         st = starts[rows_src]
         # vectorised slab fill: flat positions of each (row, within-slice) pair
@@ -185,7 +337,10 @@ def bucketize(
             for k in range(m):
                 coeff[k, r, o] = inst.coeff[k, e]
         buckets.append(
-            Bucket(idx=idx, coeff=coeff, cost=cost, mask=mask, length=Lt)
+            convert_bucket(
+                Bucket(idx=idx, coeff=coeff, cost=cost, mask=mask, length=Lt),
+                slab_dt,
+            )
         )
         sid = np.full(n, -1, dtype=np.int64)
         sid[: rows_src.size] = rows_src
@@ -195,7 +350,7 @@ def bucketize(
 
     out = BucketedInstance(
         buckets=tuple(buckets),
-        rhs=inst.rhs.astype(dtype),
+        rhs=inst.rhs.astype(rhs_dtype(slab_dt)),
         num_sources=I,
         num_destinations=J,
         num_families=m,

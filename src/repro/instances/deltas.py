@@ -69,6 +69,8 @@ from repro.instances.buckets import (
     BucketedInstance,
     bucketize,
     pack_source_ids,
+    resolve_slab_dtype,
+    rhs_dtype,
 )
 from repro.instances.generator import EdgeListInstance, MatchingInstanceSpec
 
@@ -323,7 +325,17 @@ class DeltaIngestor:
         self.shard_multiple = int(shard_multiple)
         self.min_length = int(min_length)
         self.row_headroom = int(row_headroom)
-        self.dtype = dtype
+        self.dtype = resolve_slab_dtype(dtype)
+        if np.dtype(self.dtype) == np.int8:
+            # In-place slab surgery on quantised cells is unsound: a delta's
+            # new coefficient can exceed the bucket's frozen per-family scale,
+            # and rescaling would rewrite every cell (O(nnz), defeating the
+            # O(delta) ScatterPlan contract).  bf16 is the serving-path narrow
+            # storage; int8 stays batch-only (launch/solve.py).
+            raise ValueError(
+                "DeltaIngestor does not support int8 slabs; use float32 or "
+                "bfloat16"
+            )
         # Label for this ingestor's telemetry series; the owning session sets
         # it to its tenant name ("" keeps standalone ingestors unlabelled).
         self.telemetry_tenant = ""
@@ -372,7 +384,7 @@ class DeltaIngestor:
             sids.append(np.asarray(sid, np.int64))
         self.packed = BucketedInstance(
             buckets=tuple(buckets),
-            rhs=self._rhs64.astype(self.dtype),
+            rhs=self._rhs64.astype(rhs_dtype(self.dtype)),
             num_sources=packed.num_sources,
             num_destinations=packed.num_destinations,
             num_families=packed.num_families,
@@ -548,7 +560,7 @@ class DeltaIngestor:
         self.shard_multiple = int(meta["shard_multiple"])
         self.min_length = int(meta["min_length"])
         self.row_headroom = int(meta["row_headroom"])
-        self.dtype = np.dtype(meta["dtype"])
+        self.dtype = resolve_slab_dtype(meta["dtype"])
         self._rhs64 = np.asarray(arrays["rhs64"], np.float64).copy()
         self._pending_dc_sq = float(arrays["pending_dc_sq"])
         self.generation = int(arrays["generation"])
@@ -574,7 +586,7 @@ class DeltaIngestor:
             )
         self.packed = BucketedInstance(
             buckets=tuple(buckets),
-            rhs=self._rhs64.astype(self.dtype),
+            rhs=self._rhs64.astype(rhs_dtype(self.dtype)),
             num_sources=self.spec.num_sources,
             num_destinations=self.spec.num_destinations,
             num_families=self.spec.num_families,
@@ -662,7 +674,7 @@ class DeltaIngestor:
             # 6. budgets
             if delta.rhs is not None:
                 self._rhs64[:] = delta.rhs
-                self.packed.rhs = self._rhs64.astype(self.dtype)
+                self.packed.rhs = self._rhs64.astype(rhs_dtype(self.dtype))
             self.generation += 1
             plan = self._emit_plan(rhs_updated=delta.rhs is not None)
         finally:

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.instances.buckets import Bucket, BucketedInstance
+from repro.instances.buckets import Bucket, BucketedInstance, rhs_dtype
 from repro.instances.generator import MatchingInstanceSpec, generate_matching_instance
 
 __all__ = ["production_bucket_shapes", "solver_input_specs"]
@@ -80,6 +80,9 @@ def solver_input_specs(
         shard_multiple=shard_multiple,
     )
     sds = jax.ShapeDtypeStruct
+    # mirror the real bucketize layout: int8 slabs carry per-bucket fp32
+    # scales, and any narrow storage keeps the rhs (and hence duals) fp32
+    quantized = jnp.dtype(dtype) == jnp.dtype(jnp.int8)
     buckets = tuple(
         Bucket(
             idx=sds((n, L), jnp.int32),
@@ -87,12 +90,18 @@ def solver_input_specs(
             cost=sds((n, L), dtype),
             mask=sds((n, L), dtype),
             length=L,
+            coeff_scale=(
+                sds((num_families, 1, 1), jnp.float32) if quantized else None
+            ),
+            cost_scale=sds((1, 1), jnp.float32) if quantized else None,
         )
         for L, n in shapes
     )
     return BucketedInstance(
         buckets=buckets,
-        rhs=sds((num_families * num_destinations,), dtype),
+        rhs=sds(
+            (num_families * num_destinations,), rhs_dtype(jnp.dtype(dtype))
+        ),
         num_sources=num_sources,
         num_destinations=num_destinations,
         num_families=num_families,

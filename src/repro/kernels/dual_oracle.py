@@ -86,22 +86,29 @@ def pick_row_chunk(block_rows: int, length: int, num_destinations: int) -> int:
 
 def dual_oracle_kernel_body(
     idx_ref,  # [block, L] int32
-    coeff_ref,  # [m, block, L]
-    cost_ref,  # [block, L]
-    mask_ref,  # [block, L]
+    coeff_ref,  # [m, block, L] slab dtype (fp32 / bf16 / int8)
+    cost_ref,  # [block, L] slab dtype
+    mask_ref,  # [block, L] slab dtype
     lam_ref,  # [m, J]  whole dual vector resident in VMEM
     ginv_ref,  # [1, 1]  1/gamma (traced; continuation changes it per stage)
-    x_ref,  # [block, L] out: primal tile
-    hist_ref,  # [1, m, J] out: this grid step's partial A x
-    scal_ref,  # [1, 2] out: (c'x, ||x||^2) partials
-    *,
+    *rest,  # quantized: (coeff_scale_ref [m,1], cost_scale_ref [1,1]) prepended
+    # outputs (always last three refs):
+    #   x_ref     [block, L] out: primal tile (storage dtype; f32 for int8)
+    #   hist_ref  [1, m, J] out: this grid step's partial A x (f32)
+    #   scal_ref  [1, 2] out: (c'x, ||x||^2) partials (f32)
     radius: float,
     inequality: bool,
     row_chunk: int,
 ):
+    if len(rest) == 5:
+        coeff_scale_ref, cost_scale_ref, x_ref, hist_ref, scal_ref = rest
+    else:
+        coeff_scale_ref = cost_scale_ref = None
+        x_ref, hist_ref, scal_ref = rest
     x = fused_primal_tile(
         idx_ref, coeff_ref, cost_ref, mask_ref, lam_ref, ginv_ref,
         radius=radius, inequality=inequality,
+        coeff_scale_ref=coeff_scale_ref, cost_scale_ref=cost_scale_ref,
     )
     x_ref[...] = x.astype(x_ref.dtype)
 
@@ -110,9 +117,14 @@ def dual_oracle_kernel_body(
     J = lam_ref.shape[1]
     idx = idx_ref[...]
     coeff = coeff_ref[...].astype(jnp.float32)
+    if coeff_scale_ref is not None:
+        coeff = coeff * coeff_scale_ref[...].reshape(m, 1, 1)
 
     # scalar partials: cost/x are exact zeros on padded slots already
-    scal_ref[0, 0] = jnp.sum(cost_ref[...].astype(jnp.float32) * x)
+    cost_f32 = cost_ref[...].astype(jnp.float32)
+    if cost_scale_ref is not None:
+        cost_f32 = cost_f32 * cost_scale_ref[0, 0]
+    scal_ref[0, 0] = jnp.sum(cost_f32 * x)
     scal_ref[0, 1] = jnp.sum(x * x)
 
     # binned scatter as a chunked one-hot contraction:
@@ -154,15 +166,22 @@ def make_dual_oracle_call(
     radius: float = 1.0,
     inequality: bool = True,
     interpret: bool = True,
+    quantized: bool = False,
+    out_dtype=None,
 ):
     """pallas_call for one bucket slab returning (x, hist_partials, scalar_partials).
 
     Call-time arguments: (idx, coeff, cost, mask, lam2, gamma_inv) exactly as
-    `make_dual_primal_call`.  Outputs:
-      x               [n_rows, length]       projected primal slab
+    `make_dual_primal_call`; with ``quantized`` two more — (coeff_scale
+    [m, 1] f32, cost_scale [1, 1] f32), dequantized in-kernel.  Outputs:
+      x               [n_rows, length]       projected primal slab, written
+                                             in ``out_dtype`` (defaults to
+                                             the storage ``dtype``; ops.py
+                                             passes fp32 for int8 slabs)
       hist_partials   [grid, m, J] fp32      per-grid-step partial A x
       scalar_partials [grid, 2] fp32         per-grid-step (c'x, ||x||^2)
     The caller tree-sums the partials over the grid axis (O(grid*(m*J + 2))).
+    All partials accumulate in fp32 regardless of the storage dtype.
     """
     assert n_rows % block_rows == 0
     assert length <= MAX_FUSED_LENGTH
@@ -180,6 +199,12 @@ def make_dual_oracle_call(
         (1, num_families, num_destinations), lambda i: (i, 0, 0)
     )
     scal_spec = pl.BlockSpec((1, 2), lambda i: (i, 0))
+    in_specs = [row_spec, coeff_spec, row_spec, row_spec, lam_spec, ginv_spec]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((num_families, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ]
     body = functools.partial(
         dual_oracle_kernel_body,
         radius=radius,
@@ -189,14 +214,16 @@ def make_dual_oracle_call(
     return pl.pallas_call(
         body,
         out_shape=(
-            jax.ShapeDtypeStruct((n_rows, length), dtype),
+            jax.ShapeDtypeStruct(
+                (n_rows, length), dtype if out_dtype is None else out_dtype
+            ),
             jax.ShapeDtypeStruct(
                 (grid_n, num_families, num_destinations), jnp.float32
             ),
             jax.ShapeDtypeStruct((grid_n, 2), jnp.float32),
         ),
         grid=grid,
-        in_specs=[row_spec, coeff_spec, row_spec, row_spec, lam_spec, ginv_spec],
+        in_specs=in_specs,
         out_specs=(row_spec, hist_spec, scal_spec),
         interpret=interpret,
     )

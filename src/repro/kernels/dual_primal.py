@@ -38,33 +38,43 @@ __all__ = ["make_dual_primal_call", "fused_primal_tile"]
 
 def fused_primal_tile(
     idx_ref,  # [block, L] int32
-    coeff_ref,  # [m, block, L]
-    cost_ref,  # [block, L]
-    mask_ref,  # [block, L]
+    coeff_ref,  # [m, block, L] slab dtype (fp32 / bf16 / int8)
+    cost_ref,  # [block, L] slab dtype
+    mask_ref,  # [block, L] slab dtype
     lam_ref,  # [m, J]  (whole dual vector in VMEM, replicated per grid step)
     ginv_ref,  # [1, 1]  1/gamma (dynamic: continuation changes it per stage)
     *,
     radius: float,
     inequality: bool,
+    coeff_scale_ref=None,  # [m, 1] f32: int8 per-family dequant scales
+    cost_scale_ref=None,  # [1, 1] f32: int8 cost dequant scale
 ) -> jax.Array:
     """One VMEM tile of x = Pi_simplex( -(A^T lam + c)/gamma ), fp32.
 
     Shared by the dual-primal kernel (writes x only) and the dual-oracle
     kernel (additionally reduces this tile's A x / c'x / ||x||^2 partials).
     Mask-zero (padded) slots come out exactly 0.0.
+
+    Narrow slab dtypes are widened to fp32 on load — HBM->VMEM traffic is at
+    the storage width, all arithmetic is fp32.  The scale refs are present
+    only for quantized (int8) slabs (value = q * scale); their None checks
+    are host-static, so the fp32/bf16 kernel body is unchanged by them.
     """
     idx = idx_ref[...]
     cost = cost_ref[...].astype(jnp.float32)
     mask = mask_ref[...].astype(jnp.float32)
+    if cost_scale_ref is not None:
+        cost = cost * cost_scale_ref[0, 0]
     m = coeff_ref.shape[0]
 
     # gather + axpy: A^T lam restricted to this tile
     atl = jnp.zeros_like(cost)
     for k in range(m):  # m is tiny (constraint families); unrolled
         lam_k = lam_ref[k, :]
-        atl = atl + coeff_ref[k].astype(jnp.float32) * jnp.take(
-            lam_k, idx, axis=0
-        )
+        coeff_k = coeff_ref[k].astype(jnp.float32)
+        if coeff_scale_ref is not None:
+            coeff_k = coeff_k * coeff_scale_ref[k, 0]
+        atl = atl + coeff_k * jnp.take(lam_k, idx, axis=0)
     v = -(atl + cost) * ginv_ref[0, 0].astype(jnp.float32)
 
     # fused Duchi projection (same pipeline as simplex_proj kernel)
@@ -94,14 +104,19 @@ def dual_primal_kernel_body(
     mask_ref,
     lam_ref,
     ginv_ref,
-    out_ref,  # [block, L]
-    *,
+    *rest,  # quantized: (coeff_scale_ref, cost_scale_ref, out_ref); else (out_ref,)
     radius: float,
     inequality: bool,
 ):
+    if len(rest) == 3:
+        coeff_scale_ref, cost_scale_ref, out_ref = rest
+    else:
+        coeff_scale_ref = cost_scale_ref = None
+        (out_ref,) = rest
     out = fused_primal_tile(
         idx_ref, coeff_ref, cost_ref, mask_ref, lam_ref, ginv_ref,
         radius=radius, inequality=inequality,
+        coeff_scale_ref=coeff_scale_ref, cost_scale_ref=cost_scale_ref,
     )
     out_ref[...] = out.astype(out_ref.dtype)
 
@@ -117,13 +132,18 @@ def make_dual_primal_call(
     radius: float = 1.0,
     inequality: bool = True,
     interpret: bool = True,
+    quantized: bool = False,
+    out_dtype=None,
 ):
     """pallas_call for one bucket slab: x = Pi( -(A^T lam + c)/gamma ).
 
     Arguments at call time: (idx, coeff, cost, mask, lam2, gamma_inv) with
     lam2 = lam.reshape(m, J) staged whole into VMEM for every grid step and
     gamma_inv a (1, 1) array (traced — continuation changes it per stage
-    without retracing).
+    without retracing).  ``dtype`` is the slab storage dtype; the primal
+    slab comes back in ``out_dtype`` (defaults to ``dtype``; ops.py passes
+    fp32 for int8 slabs).  ``quantized`` appends two call-time operands —
+    (coeff_scale [m, 1] f32, cost_scale [1, 1] f32) — dequantized in-kernel.
     """
     assert n_rows % block_rows == 0
     assert length <= MAX_FUSED_LENGTH
@@ -136,14 +156,22 @@ def make_dual_primal_call(
         (num_families, num_destinations), lambda i: (0, 0)
     )
     ginv_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    in_specs = [row_spec, coeff_spec, row_spec, row_spec, lam_spec, ginv_spec]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((num_families, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ]
     body = functools.partial(
         dual_primal_kernel_body, radius=radius, inequality=inequality
     )
     return pl.pallas_call(
         body,
-        out_shape=jax.ShapeDtypeStruct((n_rows, length), dtype),
+        out_shape=jax.ShapeDtypeStruct(
+            (n_rows, length), dtype if out_dtype is None else out_dtype
+        ),
         grid=grid,
-        in_specs=[row_spec, coeff_spec, row_spec, row_spec, lam_spec, ginv_spec],
+        in_specs=in_specs,
         out_specs=row_spec,
         interpret=interpret,
     )

@@ -8,12 +8,16 @@ Responsibilities (mirrors the paper's dispatch policy, §4.3):
   * fall back to the multi-op reference implementation for slab widths beyond
     MAX_FUSED_LENGTH = 8192 or non-power-of-two widths — "beyond this limit,
     execution falls back to the multi-launch implementation";
+  * route unsupported slab storage dtypes (anything outside fp32 / bf16 /
+    int8-with-scales) through the dtype-faithful reference oracle, which
+    widens to fp32 on load and accumulates in fp32 exactly like the kernel;
   * `interpret=None` auto-selects: real Mosaic lowering on TPU backends,
     interpret mode (Python execution of the same kernel body) on CPU.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +32,7 @@ __all__ = [
     "fused_dual_primal",
     "fused_dual_oracle",
     "oracle_hist_partial_bytes",
+    "oracle_slab_slot_bytes",
     "pick_block_rows",
 ]
 
@@ -38,6 +43,38 @@ _VMEM_TILE_ELEMS = 1 << 17  # 128k fp32 elements per tile
 
 def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
+
+
+# Slab storage dtypes the Pallas kernels load natively (widened to fp32 in
+# VMEM; see kernels/dual_primal.fused_primal_tile).  int8 additionally needs
+# its per-bucket dequant scales; anything else takes the reference path.
+_KERNEL_SLAB_DTYPES = (jnp.float32, jnp.bfloat16, jnp.int8)
+
+
+def _kernel_supports_dtype(dtype, quantized: bool) -> bool:
+    d = jnp.dtype(dtype)
+    if d == jnp.dtype(jnp.int8):
+        return quantized
+    return d in (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16))
+
+
+def _primal_out_dtype(storage_dtype, quantized: bool):
+    """The dtype the primal slab x is written back in: the storage dtype for
+    float storage (so the x write shares the slab's HBM width), fp32 for
+    quantized slabs (x is a simplex point, not a scaled integer)."""
+    return jnp.dtype(jnp.float32) if quantized else jnp.dtype(storage_dtype)
+
+
+def oracle_slab_slot_bytes(num_families: int, slab_dtype="float32") -> int:
+    """Analytic per-slot HBM bytes of one fused-oracle iteration: the idx
+    read (int32) + coeff/cost/mask reads at the storage width + the x write
+    at the primal-out width (storage width for float slabs, fp32 for int8).
+    Shared by `launch.dryrun` and `benchmarks.table2_iteration_time` — the
+    two records must agree for the perf trajectory to be comparable."""
+    d = jnp.dtype(jnp.bfloat16) if slab_dtype == "bfloat16" else jnp.dtype(slab_dtype)
+    quantized = d == jnp.dtype(jnp.int8)
+    x_bytes = _primal_out_dtype(d, quantized).itemsize
+    return 4 + (num_families + 2) * d.itemsize + x_bytes
 
 
 def pick_block_rows(n_rows: int, length: int) -> int:
@@ -116,24 +153,32 @@ def fused_project_simplex(
 )
 def fused_dual_primal(
     idx: jax.Array,  # [n, L] int32
-    coeff: jax.Array,  # [m, n, L]
-    cost: jax.Array,  # [n, L]
-    mask: jax.Array,  # [n, L]
-    lam: jax.Array,  # [m * J]
+    coeff: jax.Array,  # [m, n, L] slab dtype
+    cost: jax.Array,  # [n, L] slab dtype
+    mask: jax.Array,  # [n, L] slab dtype
+    lam: jax.Array,  # [m * J] fp32
     gamma: jax.Array,  # scalar
     *,
     num_destinations: int,
     radius: float = 1.0,
     inequality: bool = True,
     interpret: bool | None = None,
+    coeff_scale: Optional[jax.Array] = None,  # [m, 1, 1] f32 (int8 slabs)
+    cost_scale: Optional[jax.Array] = None,  # [1, 1] f32 (int8 slabs)
 ) -> jax.Array:
     """Whole fused primal step  x = Pi( -(A^T lam + c)/gamma )  for one bucket."""
     n, L = cost.shape
     m = coeff.shape[0]
-    if not _is_pow2(L) or L > MAX_FUSED_LENGTH:
+    quantized = coeff_scale is not None
+    if (
+        not _is_pow2(L)
+        or L > MAX_FUSED_LENGTH
+        or not _kernel_supports_dtype(cost.dtype, quantized)
+    ):
         return kref.dual_primal_ref(
             idx, coeff, cost, mask, lam, gamma, num_destinations,
             radius, inequality=inequality,
+            coeff_scale=coeff_scale, cost_scale=cost_scale,
         )
     block = pick_block_rows(n, L)
     n_pad = ((n + block - 1) // block) * block
@@ -147,31 +192,41 @@ def fused_dual_primal(
         radius=radius,
         inequality=inequality,
         interpret=_use_interpret(interpret),
+        quantized=quantized,
+        out_dtype=_primal_out_dtype(cost.dtype, quantized),
     )
     ginv = (1.0 / gamma).astype(jnp.float32).reshape(1, 1)
-    out = call(
+    operands = [
         _pad_rows(idx, n_pad),
         _pad_rows(coeff.swapaxes(0, 1), n_pad).swapaxes(0, 1),
         _pad_rows(cost, n_pad),
         _pad_rows(mask, n_pad),
         lam.reshape(m, num_destinations),
         ginv,
-    )
+    ]
+    if quantized:
+        operands += [
+            coeff_scale.astype(jnp.float32).reshape(m, 1),
+            jnp.asarray(cost_scale, jnp.float32).reshape(1, 1),
+        ]
+    out = call(*operands)
     return out[:n]
 
 
 def fused_dual_oracle(
     idx: jax.Array,  # [n, L] int32
-    coeff: jax.Array,  # [m, n, L]
-    cost: jax.Array,  # [n, L]
-    mask: jax.Array,  # [n, L]
-    lam: jax.Array,  # [m * J]
+    coeff: jax.Array,  # [m, n, L] slab dtype
+    cost: jax.Array,  # [n, L] slab dtype
+    mask: jax.Array,  # [n, L] slab dtype
+    lam: jax.Array,  # [m * J] fp32
     gamma: jax.Array,  # scalar
     *,
     num_destinations: int,
     radius: float = 1.0,
     inequality: bool = True,
     interpret: bool | None = None,
+    coeff_scale: Optional[jax.Array] = None,  # [m, 1, 1] f32 (int8 slabs)
+    cost_scale: Optional[jax.Array] = None,  # [1, 1] f32 (int8 slabs)
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """One-pass fused dual oracle for one bucket: `(x, hist, lin, sq)`.
 
@@ -180,9 +235,17 @@ def fused_dual_oracle(
     `lin = c'x`, `sq = ||x||^2`) from a single read of the slab; the
     per-grid-step histogram partials are tree-summed here (O(grid*m*J)).
 
+    Storage dtypes: fp32, bf16, and int8-with-scales slabs take the kernel
+    path (loaded narrow into VMEM, widened to fp32, partials accumulated in
+    fp32; the x slab is written back in the storage dtype — fp32 for int8);
+    any other dtype routes to the dtype-faithful reference below.
+
     Fallback matrix (see also docs/architecture.md):
       * L not a power of two or L > MAX_FUSED_LENGTH -> `dual_oracle_ref`
         (the paper's multi-launch fallback policy, §4.3);
+      * slab dtype outside {fp32, bf16, int8+scales} -> `dual_oracle_ref`
+        (same widen-to-fp32 accumulation contract, so quality is identical
+        up to reduction order);
       * L * J beyond the one-hot contraction's VMEM budget
         (`fits_onehot_budget`) -> `dual_oracle_ref`: even a one-row chunk's
         [L, J] one-hot tile would blow the kernel's working set;
@@ -205,10 +268,12 @@ def fused_dual_oracle(
     """
     n, L = cost.shape
     m = coeff.shape[0]
+    quantized = coeff_scale is not None
     use_kernel = (
         _is_pow2(L)
         and L <= MAX_FUSED_LENGTH
         and fits_onehot_budget(L, num_destinations)
+        and _kernel_supports_dtype(cost.dtype, quantized)
     )
     if interpret is None and jax.default_backend() != "tpu":
         use_kernel = False
@@ -216,6 +281,7 @@ def fused_dual_oracle(
         return kref.dual_oracle_ref(
             idx, coeff, cost, mask, lam, gamma, num_destinations,
             radius, inequality=inequality,
+            coeff_scale=coeff_scale, cost_scale=cost_scale,
         )
     block = pick_block_rows(n, L)
     n_pad = ((n + block - 1) // block) * block
@@ -229,14 +295,22 @@ def fused_dual_oracle(
         radius=radius,
         inequality=inequality,
         interpret=bool(interpret) if interpret is not None else False,
+        quantized=quantized,
+        out_dtype=_primal_out_dtype(cost.dtype, quantized),
     )
     ginv = (1.0 / gamma).astype(jnp.float32).reshape(1, 1)
-    x, hist_p, scal_p = call(
+    operands = [
         _pad_rows(idx, n_pad),
         _pad_rows(coeff.swapaxes(0, 1), n_pad).swapaxes(0, 1),
         _pad_rows(cost, n_pad),
         _pad_rows(mask, n_pad),
         lam.reshape(m, num_destinations),
         ginv,
-    )
+    ]
+    if quantized:
+        operands += [
+            jnp.asarray(coeff_scale, jnp.float32).reshape(m, 1),
+            jnp.asarray(cost_scale, jnp.float32).reshape(1, 1),
+        ]
+    x, hist_p, scal_p = call(*operands)
     return x[:n], hist_p.sum(axis=0), scal_p[:, 0].sum(), scal_p[:, 1].sum()

@@ -10,8 +10,19 @@ tests compare against and the off-TPU execution path `ops.fused_dual_oracle`
 dispatches to (XLA fuses its passes; the kernel's one-hot MXU contraction
 does not pay off on a scalar backend).  Kernel tests sweep shapes/dtypes and
 assert_allclose against these.
+
+Mixed-precision slabs: both oracles accept narrow-dtype (bf16 / int8+scales)
+slabs and mirror the kernels' accumulation contract — inputs are widened to
+fp32 on load (`_f32`; int8 additionally multiplied by its per-bucket scales),
+every reduction (projection, Ax histogram, c'x, ||x||^2) runs in fp32, and
+the primal slab is written back in the storage dtype for float storage (fp32
+for int8).  The widening is a *host-level dtype branch*: fp32 inputs take
+the exact pre-slab_dtype expressions, so the default path's jaxpr is
+bit-identical (the `--slab-dtype float32` array_equal pin relies on this).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +31,11 @@ from repro.core.objective import binned_segment_sum
 from repro.core.projections import project_simplex
 
 __all__ = ["simplex_ref", "dual_primal_ref", "dual_oracle_ref"]
+
+
+def _f32(a: jax.Array) -> jax.Array:
+    """Widen to fp32 — host no-op (same object, same jaxpr) for fp32 input."""
+    return a if a.dtype == jnp.float32 else a.astype(jnp.float32)
 
 
 def simplex_ref(
@@ -35,35 +51,51 @@ def simplex_ref(
 
 def dual_primal_ref(
     idx: jax.Array,  # [n, L] int32 destination ids
-    coeff: jax.Array,  # [m, n, L] constraint coefficients
-    cost: jax.Array,  # [n, L]
-    mask: jax.Array,  # [n, L]
-    lam: jax.Array,  # [m * J]
+    coeff: jax.Array,  # [m, n, L] constraint coefficients (slab dtype)
+    cost: jax.Array,  # [n, L] (slab dtype)
+    mask: jax.Array,  # [n, L] (slab dtype)
+    lam: jax.Array,  # [m * J] fp32
     gamma,
     J: int,
     radius: float = 1.0,
     *,
     inequality: bool = True,
+    coeff_scale: Optional[jax.Array] = None,  # [m, 1, 1] f32 (int8 slabs)
+    cost_scale: Optional[jax.Array] = None,  # [1, 1] f32 (int8 slabs)
 ) -> jax.Array:
-    """Unfused primal step for one bucket: gather, axpy, scale, project."""
+    """Unfused primal step for one bucket: gather, axpy, scale, project.
+
+    Narrow slab dtypes are widened to fp32 (dequantized for int8) before the
+    gather/axpy; the projection runs in fp32 and the result is cast back to
+    the storage dtype for float storage (fp32 when quantized).
+    """
+    out_dtype = cost.dtype if coeff_scale is None else jnp.float32
+    coeff, cost, mask = _f32(coeff), _f32(cost), _f32(mask)
+    if coeff_scale is not None:
+        coeff = coeff * coeff_scale
+    if cost_scale is not None:
+        cost = cost * cost_scale
     m = coeff.shape[0]
     lam2 = lam.reshape(m, J)
     atl = jnp.einsum("mnl,mnl->nl", coeff, jnp.take(lam2, idx, axis=1))
     z = -(atl + cost) / jnp.asarray(gamma, cost.dtype)
-    return project_simplex(z, mask, radius, inequality=inequality)
+    x = project_simplex(z, mask, radius, inequality=inequality)
+    return x if x.dtype == out_dtype else x.astype(out_dtype)
 
 
 def dual_oracle_ref(
     idx: jax.Array,  # [n, L] int32 destination ids
-    coeff: jax.Array,  # [m, n, L] constraint coefficients
-    cost: jax.Array,  # [n, L]
-    mask: jax.Array,  # [n, L]
-    lam: jax.Array,  # [m * J]
+    coeff: jax.Array,  # [m, n, L] constraint coefficients (slab dtype)
+    cost: jax.Array,  # [n, L] (slab dtype)
+    mask: jax.Array,  # [n, L] (slab dtype)
+    lam: jax.Array,  # [m * J] fp32
     gamma,
     J: int,
     radius: float = 1.0,
     *,
     inequality: bool = True,
+    coeff_scale: Optional[jax.Array] = None,  # [m, 1, 1] f32 (int8 slabs)
+    cost_scale: Optional[jax.Array] = None,  # [1, 1] f32 (int8 slabs)
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """One-pass oracle for one bucket: `(x, hist, lin, sq)` where
 
@@ -77,11 +109,22 @@ def dual_oracle_ref(
     [m, n, L] gradient intermediates outlive the oracle.  The projection
     multiplies by `mask`, so x is already exact-zero on padded slots and the
     histogram/scalars need no re-masking.
+
+    Accumulation contract (matches the kernel): hist/lin/sq reduce the fp32
+    primal tile; the returned x is in the slab storage dtype for float
+    storage (fp32 when quantized), exactly what the kernel writes back.
     """
+    out_dtype = cost.dtype if coeff_scale is None else jnp.float32
+    coeff, cost, mask = _f32(coeff), _f32(cost), _f32(mask)
+    if coeff_scale is not None:
+        coeff = coeff * coeff_scale
+    if cost_scale is not None:
+        cost = cost * cost_scale
     x = dual_primal_ref(
         idx, coeff, cost, mask, lam, gamma, J, radius, inequality=inequality
     )
     hist = binned_segment_sum(idx, (coeff * x[None]).astype(jnp.float32), J)
     lin = jnp.vdot(cost, x)
     sq = jnp.vdot(x, x)
-    return x, hist, lin.astype(jnp.float32), sq.astype(jnp.float32)
+    x_out = x if x.dtype == out_dtype else x.astype(out_dtype)
+    return x_out, hist, lin.astype(jnp.float32), sq.astype(jnp.float32)

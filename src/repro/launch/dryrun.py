@@ -160,6 +160,7 @@ def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
     from repro.configs import LP_INSTANCES
     from repro.core.maximizer import MaximizerConfig
     from repro.core.sharding import DistConfig, DistributedMaximizer
+    from repro.kernels import ops as kops
     from repro.formulation import scenario_formulation
     from repro.instances.specs import solver_input_specs
     from repro.launch.mesh import solver_axes
@@ -189,7 +190,8 @@ def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
                         tol_viol=tol_viol),
         DistConfig(axes=axes, comm_mode=comm_mode, compress=compress,
                    fused_kernel=fused_kernel, fused_oracle=fused_oracle,
-                   kernel_interpret=True),
+                   kernel_interpret=True,
+                   slab_dtype=jnp.dtype(slab_dtype).name),
         projection=projection,
     )
     t0 = time.time()
@@ -234,20 +236,23 @@ def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
                 for b in inst.buckets
             )
         ),
+        # per slot per iteration: the fused oracle reads the slab exactly
+        # once — kops.oracle_slab_slot_bytes (idx + m coeff families + cost +
+        # mask at the storage width, x written at the primal-out width) plus
+        # the O(grid*m*J) partial-histogram write+read tree-sum; the unfused
+        # paths additionally pay the z write+read (unfused primal) and the
+        # gradient half's slab re-read — idx + coeff + x for the segment-sum
+        # plus cost + x for the objective scalars (same model as
+        # benchmarks/table2_iteration_time._analytic_bytes)
         "bytes_global": float(
             iters * sum(
-                # per slot per iteration: idx(4B) + coeff/cost/mask reads +
-                # x write + (unfused primal only) z write+read + (unfused
-                # oracle only) the gradient half's slab re-read — idx +
-                # coeff + x for the segment-sum plus cost + x for the
-                # objective scalars; the fused oracle instead pays the
-                # O(grid*m*J) partial-histogram write+read tree-sum (same
-                # model as benchmarks/table2_iteration_time._analytic_bytes)
-                (4 + 3 * jnp.dtype(slab_dtype).itemsize
+                (kops.oracle_slab_slot_bytes(
+                    spec["num_families"], jnp.dtype(slab_dtype).name)
+                 if fused_oracle
+                 else 4 + 3 * jnp.dtype(slab_dtype).itemsize
                  + jnp.dtype(slab_dtype).itemsize
-                 + (0 if (fused_kernel or fused_oracle) else 8)
-                 + (0 if fused_oracle
-                    else 4 + 4 * jnp.dtype(slab_dtype).itemsize))
+                 + (0 if fused_kernel else 8)
+                 + 4 + 4 * jnp.dtype(slab_dtype).itemsize)
                 * float(jnp.prod(jnp.asarray(b.cost.shape)))
                 + (_oracle_partial_bytes(b, spec["num_destinations"],
                                          spec["num_families"])
@@ -381,6 +386,8 @@ def main(argv: Optional[list[str]] = None) -> int:
                 tag += f"__{args.comm_mode}-{args.compress}"
             if args.fused_oracle:
                 tag += "__fusedoracle"
+            if args.slab_dtype != "float32":
+                tag += f"__{args.slab_dtype}"
             if args.tol_grad is not None or args.tol_viol is not None:
                 tag += "__earlystop"
             if args.formulation != "matching":

@@ -60,7 +60,9 @@ continuation floor) is the stability/fidelity trade-off the paper exposes;
 from repro.service.engine import (
     RawSolve,
     compiled_solver,
+    compiled_solver_fixed_sigma,
     compiled_batch_solver,
+    compiled_batch_solver_fixed_sigma,
     to_solve_result,
     to_solve_results,
     compile_cache_report,
@@ -75,7 +77,9 @@ from repro.service.session import ServiceConfig, SolveSession
 __all__ = [
     "RawSolve",
     "compiled_solver",
+    "compiled_solver_fixed_sigma",
     "compiled_batch_solver",
+    "compiled_batch_solver_fixed_sigma",
     "to_solve_result",
     "to_solve_results",
     "compile_cache_report",

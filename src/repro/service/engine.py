@@ -55,7 +55,7 @@ from repro.core.maximizer import (
     step_size,
 )
 from repro.core.objective import MatchingObjective, normalize_rows_traced
-from repro.instances.buckets import Bucket, BucketedInstance
+from repro.instances.buckets import BucketedInstance
 from repro.instances.deltas import ScatterPlan
 
 __all__ = [
@@ -63,6 +63,7 @@ __all__ = [
     "compiled_solver",
     "compiled_solver_fixed_sigma",
     "compiled_batch_solver",
+    "compiled_batch_solver_fixed_sigma",
     "to_solve_result",
     "to_solve_results",
     "compile_cache_report",
@@ -163,6 +164,7 @@ def _raw_solve(
 _SINGLE: dict[tuple, object] = {}
 _SINGLE_SIGMA: dict[tuple, object] = {}
 _BATCH: dict[tuple, object] = {}
+_BATCH_SIGMA: dict[tuple, object] = {}
 
 
 def _shape_key(inst) -> str:
@@ -281,6 +283,37 @@ def compiled_batch_solver(
     return fn
 
 
+def compiled_batch_solver_fixed_sigma(
+    cfg: MaximizerConfig, normalize: bool = False, fused_oracle: bool = False
+):
+    """Jitted, vmapped `(stacked_instance, lam0s[B, :], sigma_sqs[B]) ->
+    RawSolve` — the batched counterpart of `compiled_solver_fixed_sigma`.
+
+    Gives batched warm tenants the same sigma-reuse fast path solo dispatch
+    has: each lane skips its power iteration (~cfg.power_iters oracle calls)
+    and runs from its own carried sigma_max(A)^2 estimate.  The scheduler
+    dispatches a warm shape-group here only when *every* member's estimate is
+    clean (`SolveSession.sigma_reuse_ready`); mixed groups fall back to
+    `compiled_batch_solver`.  `RawSolve.sigma_sq` echoes the per-lane values.
+    """
+    key = (cfg, normalize, fused_oracle)
+    fn = _BATCH_SIGMA.get(key)
+    if fn is None:
+        fn = _instrument(
+            jax.jit(
+                jax.vmap(
+                    lambda inst, lam0, sigma_sq: _raw_solve(
+                        inst, lam0, cfg, normalize, fused_oracle,
+                        sigma_sq=sigma_sq,
+                    )
+                )
+            ),
+            "batch_sigma",
+        )
+        _BATCH_SIGMA[key] = fn
+    return fn
+
+
 def to_solve_result(raw: RawSolve) -> SolveResult:
     """Host-side `SolveResult` view of a (single-tenant) RawSolve."""
     return SolveResult(
@@ -373,14 +406,24 @@ def apply_scatter_plan(
     for op in plan.ops:
         b = buckets[op.bucket]
         rows, slots = _expand_runs(op)
-        buckets[op.bucket] = Bucket(
+        # Delta payloads are gathered from the ingestor's host slabs, so they
+        # already carry the storage dtype (bf16 slabs ship bf16 cells); the
+        # explicit casts below are no-op safeties that keep the replayed slab
+        # dtype-identical to a re-upload.  `dataclasses.replace` preserves the
+        # per-bucket quantisation scales untouched (int8 ingest is rejected
+        # upstream, but the invariant costs nothing to keep).
+        buckets[op.bucket] = dataclasses.replace(
+            b,
             idx=jnp.asarray(b.idx).at[rows, slots].set(jnp.asarray(op.idx)),
             coeff=jnp.asarray(b.coeff).at[:, rows, slots].set(
-                jnp.asarray(op.coeff)
+                jnp.asarray(op.coeff, dtype=jnp.asarray(b.coeff).dtype)
             ),
-            cost=jnp.asarray(b.cost).at[rows, slots].set(jnp.asarray(op.cost)),
-            mask=jnp.asarray(b.mask).at[rows, slots].set(jnp.asarray(op.mask)),
-            length=b.length,
+            cost=jnp.asarray(b.cost).at[rows, slots].set(
+                jnp.asarray(op.cost, dtype=jnp.asarray(b.cost).dtype)
+            ),
+            mask=jnp.asarray(b.mask).at[rows, slots].set(
+                jnp.asarray(op.mask, dtype=jnp.asarray(b.mask).dtype)
+            ),
         )
     rhs = inst.rhs if plan.rhs is None else jnp.asarray(plan.rhs)
     return dataclasses.replace(inst, buckets=tuple(buckets), rhs=rhs)
@@ -400,6 +443,7 @@ def compile_cache_report() -> dict[str, int]:
         ("single", _SINGLE),
         ("single_sigma", _SINGLE_SIGMA),
         ("batch", _BATCH),
+        ("batch_sigma", _BATCH_SIGMA),
     ):
         for (cfg, normalize, fused_oracle), fn in cache.items():
             key = (

@@ -45,6 +45,7 @@ from repro.instances.buckets import BucketedInstance
 from repro.service.engine import (
     RawSolve,
     compiled_batch_solver,
+    compiled_batch_solver_fixed_sigma,
     to_solve_results,
 )
 
@@ -98,8 +99,17 @@ class BatchedSolvePool:
         self,
         instances: Sequence[BucketedInstance],
         lam0s: Optional[Sequence[Optional[jax.Array]]] = None,
+        sigma_sqs: Optional[Sequence[float]] = None,
     ) -> RawSolve:
         """Dispatch one batched solve; `lam0s[i] = None` cold-starts that tenant.
+
+        ``sigma_sqs`` — one carried sigma_max(A)^2 estimate per tenant —
+        routes the batch through the fixed-sigma vmapped solver: every lane
+        skips its power iteration and runs from its own estimate (the batched
+        counterpart of `SolveSession.dispatch_raw`'s solo reuse path).  All
+        tenants must supply one (partial reuse inside a single vmapped call
+        would make the skip lane-divergent); the scheduler partitions groups
+        by reuse-readiness instead.
 
         Returns immediately with a `RawSolve` of device futures — pair with
         `finish` (or `jax.block_until_ready`) to consume results.  Host work
@@ -133,6 +143,22 @@ class BatchedSolvePool:
             int(np.prod(b.idx.shape)) for b in instances[0].buckets
         )
         reg.set_gauge("pool_padded_cells", cells * batch)
+        if sigma_sqs is not None:
+            if len(sigma_sqs) != batch:
+                raise ValueError("sigma_sqs must match the instance batch")
+            if any(s is None for s in sigma_sqs):
+                raise ValueError(
+                    "sigma_sqs must be provided for every tenant in the "
+                    "batch; split reuse-ready tenants into their own group"
+                )
+            reg.inc("pool_sigma_reuse_solves_total", batch)
+            return compiled_batch_solver_fixed_sigma(
+                self.config, self.normalize, self.fused_oracle
+            )(
+                stacked,
+                jnp.stack(rows),
+                jnp.asarray(list(sigma_sqs), jnp.float32),
+            )
         return compiled_batch_solver(self.config, self.normalize, self.fused_oracle)(
             stacked, jnp.stack(rows)
         )
@@ -147,6 +173,7 @@ class BatchedSolvePool:
         self,
         instances: Sequence[BucketedInstance],
         lam0s: Optional[Sequence[Optional[jax.Array]]] = None,
+        sigma_sqs: Optional[Sequence[float]] = None,
     ) -> list[SolveResult]:
         """One blocking batched solve (`solve_async` + `finish`)."""
-        return self.finish(self.solve_async(instances, lam0s))
+        return self.finish(self.solve_async(instances, lam0s, sigma_sqs))

@@ -5,8 +5,10 @@ One `Scheduler` owns all tenant `SolveSession`s and drives a cadence:
   1. apply each tenant's `InstanceDelta` on the host slabs (O(delta) in-place
      when headroom allows — see `repro.instances.deltas`), queueing the
      emitted scatter plans for the device-resident copies;
-  2. partition tenants by `(shape_signature, warm/cold)` — shape-identical
-     tenants in the same start mode can share one compiled executable;
+  2. partition tenants by `(shape_signature, warm/cold, warm gamma schedule,
+     sigma-reuse readiness)` — shape-identical tenants in the same start
+     mode, at the same warm-escalation level, with uniform power-iteration
+     skip eligibility can share one compiled executable;
   3. groups of >= `batch_min` tenants are solved by ONE vmapped call through
      the shared engine; the rest solve individually (still sharing the
      shape-keyed compile cache).  Solves run against device-resident slabs,
@@ -146,21 +148,34 @@ class Scheduler:
             # count the solve's A corresponds to.  Deltas ingested during
             # the overlap then cannot be attributed to — or corrupt the
             # drift metering / sigma-cache validity of — the in-flight solve.
+            dc_norm = s.ingestor.drain_cost_drift()
             starts[name] = (
                 cold,
                 reason,
                 lam0,
-                s.ingestor.drain_cost_drift(),
+                dc_norm,
                 s.ingestor.primal_unpacker(),
                 s._dirty_count,
             )
-            key = (shape_signature(s.instance()), cold)
+            # Batching key beyond shape+mode: the escalation-chosen warm
+            # gamma schedule (tenants at different escalation levels run
+            # different continuation tails — different executables), and
+            # sigma-reuse readiness (the fixed-sigma vmapped solver skips
+            # the power iteration for ALL lanes, so a group must be
+            # uniformly ready or uniformly not).
+            reuse = (not cold) and s.sigma_reuse_ready(dc_norm)
+            warm_key = None if cold else s.warm_config().gammas
+            key = (shape_signature(s.instance()), cold, warm_key, reuse)
             groups.setdefault(key, []).append(name)
 
-        batched: list[tuple[list[str], bool, Any]] = []
+        batched: list[tuple[list[str], bool, Any, bool]] = []
         solo: list[tuple[str, bool, Any, bool]] = []
-        for (_, cold), names in groups.items():
-            cfg = self.config.cold if cold else self.config.warm
+        for (_, cold, _, reuse), names in groups.items():
+            cfg = (
+                self.config.cold
+                if cold
+                else self.sessions[names[0]].warm_config()
+            )
             if len(names) >= self.batch_min:
                 pool = BatchedSolvePool(
                     cfg,
@@ -170,18 +185,23 @@ class Scheduler:
                 raw = pool.solve_async(
                     [self.sessions[n].device_instance() for n in names],
                     [starts[n][2] for n in names],
+                    sigma_sqs=(
+                        [self.sessions[n]._sigma_sq for n in names]
+                        if reuse
+                        else None
+                    ),
                 )
                 self._record_group_padding(names)
-                batched.append((list(names), cold, raw))
+                batched.append((list(names), cold, raw, reuse))
             else:
                 for name in names:
                     # dispatch_raw owns the per-tenant power-iteration skip
-                    # on quiet warm cadences (the batched pool always
-                    # recomputes — see ROADMAP)
-                    raw, reuse = self.sessions[name].dispatch_raw(
+                    # on quiet warm cadences (recomputing `reuse` there is
+                    # equivalent — same inputs)
+                    raw, solo_reuse = self.sessions[name].dispatch_raw(
                         cfg, starts[name][2], starts[name][3], cold=cold
                     )
-                    solo.append((name, cold, raw, reuse))
+                    solo.append((name, cold, raw, solo_reuse))
         # Serving capture runs after every dispatch path has synced its
         # device copy, so the captured instance + occupancy maps reflect
         # exactly the generation this cadence is solving; absorb publishes
@@ -219,7 +239,7 @@ class Scheduler:
         """Block until every dispatched solve's device work is complete."""
         batched, solo, _, _ = dispatched
         jax.block_until_ready(
-            [raw for _, _, raw in batched] + [raw for _, _, raw, _ in solo]
+            [raw for _, _, raw, _ in batched] + [raw for _, _, raw, _ in solo]
         )
 
     def _absorb(self, dispatched):
@@ -228,7 +248,7 @@ class Scheduler:
         reports: dict[str, dict[str, Any]] = {}
         batched_groups: list[list[str]] = []
         solo_names: list[str] = []
-        for names, cold, raw in batched:
+        for names, cold, raw, reuse in batched:
             batched_groups.append(list(names))
             for name, res in zip(names, BatchedSolvePool.finish(raw)):
                 reports[name] = self.sessions[name].absorb(
@@ -238,6 +258,7 @@ class Scheduler:
                     batched=True,
                     dc_norm=starts[name][3],
                     unpack=starts[name][4],
+                    sigma_reused=reuse,
                     dirty_count=starts[name][5],
                     serving=serving[name],
                 )

@@ -43,6 +43,7 @@ from repro import telemetry
 from repro.core.maximizer import MaximizerConfig, SolveResult
 from repro.core.stability import drift_bound
 from repro.telemetry import ConvergenceTrace, StallDetector
+from repro.instances.buckets import slab_dtype_name
 from repro.instances.deltas import (
     DeltaIngestor,
     DeltaReport,
@@ -98,24 +99,79 @@ class ServiceConfig:
     # recompute (cost-only updates — the common quiet cadence — keep it
     # valid; dc_norm then only gates how quiet the cadence was).  Cold starts
     # always recompute.  None disables reuse.  Honored by the synchronous
-    # `SolveSession.solve` and the scheduler's solo dispatch path; the
-    # batched (vmapped) pool always recomputes (see ROADMAP).
+    # `SolveSession.solve`, the scheduler's solo dispatch path, and — when
+    # every member of a warm shape-group is reuse-ready — the batched
+    # (vmapped) pool via `compiled_batch_solver_fixed_sigma`; mixed groups
+    # recompute (a vmapped lane cannot skip its power iteration alone).
     sigma_reuse_dc_threshold: Optional[float] = None
+    # Escalating warm-start schedule.  None keeps the fixed `warm_gammas`
+    # tail.  A tuple of ascending relative-drift thresholds turns the warm
+    # schedule adaptive: after each cadence the session compares the observed
+    # relative primal drift (`drift_rel`, falling back to the analytic
+    # thresholds (first cadences with no previous primal stay at level 0) —
+    # each threshold exceeded adds one escalation level, and a
+    # failed drift SLA (`sla_ok is False`) adds one more.  Escalation level e
+    # prepends the e smallest cold-schedule gammas that are still above
+    # `warm_gammas[0]` (re-entering that much of the continuation run-up), so
+    # a quiet tenant keeps the short tail while a churning tenant climbs back
+    # toward the cold schedule instead of thrashing inside the small-gamma
+    # basin.  The chosen schedule is reported (`report["warm_schedule"]`) and
+    # is part of the scheduler's batching key — tenants at different
+    # escalation levels never share a vmapped executable.
+    warm_escalation: Optional[tuple[float, ...]] = None
+    # Slab storage dtype for every tenant's packed instance ("float32" or
+    # "bfloat16"; int8 is batch-only — see DeltaIngestor).  Narrow storage
+    # halves steady-state slab HBM traffic per oracle read; duals, rhs and
+    # all in-kernel accumulation stay fp32 (see docs/architecture.md,
+    # "Mixed-precision slabs").
+    slab_dtype: str = "float32"
     # Packing knobs forwarded to each tenant's DeltaIngestor.
     row_headroom: int = 8
     min_length: int = 1
     shard_multiple: int = 1
 
+    def __post_init__(self):
+        from repro.instances.buckets import SLAB_DTYPES
+
+        if self.slab_dtype not in SLAB_DTYPES or self.slab_dtype == "int8":
+            raise ValueError(
+                f"ServiceConfig.slab_dtype={self.slab_dtype!r}: the service "
+                "path supports 'float32' and 'bfloat16' (int8 requires "
+                "frozen per-bucket scales, incompatible with O(delta) slab "
+                "surgery)"
+            )
+
     @property
     def warm(self) -> MaximizerConfig:
         """The warm-start solver config: `cold` with the shortened gamma tail."""
+        return self.warm_for(0)
+
+    def escalated_warm_gammas(self, level: int) -> tuple[float, ...]:
+        """The warm gamma schedule at escalation level ``level``.
+
+        Level 0 is the configured `warm_gammas` tail; each level above it
+        prepends the next-smallest cold-schedule gamma still above the tail's
+        head, re-entering that much of the continuation run-up (ordered
+        descending, as continuation schedules are).  Saturates once the full
+        cold run-up is prepended.
+        """
+        if level <= 0:
+            return self.warm_gammas
+        runup = sorted(g for g in self.cold.gammas if g > self.warm_gammas[0])
+        prepend = tuple(sorted(runup[: min(level, len(runup))], reverse=True))
+        return prepend + self.warm_gammas
+
+    def warm_for(self, level: int) -> MaximizerConfig:
+        """The warm solver config at escalation level ``level``."""
         iters = (
             self.cold.iters_per_stage
             if self.warm_iters_per_stage is None
             else self.warm_iters_per_stage
         )
         return dataclasses.replace(
-            self.cold, gammas=self.warm_gammas, iters_per_stage=iters
+            self.cold,
+            gammas=self.escalated_warm_gammas(level),
+            iters_per_stage=iters,
         )
 
 
@@ -132,6 +188,7 @@ class SolveSession:
             shard_multiple=config.shard_multiple,
             min_length=config.min_length,
             row_headroom=config.row_headroom,
+            dtype=config.slab_dtype,
         )
         self.ingestor.telemetry_tenant = tenant
         # per-tenant stall detection over the ConvergenceTraces absorb builds
@@ -164,6 +221,10 @@ class SolveSession:
         self._sigma_sq: Optional[float] = None
         self._dirty_count = 0
         self._sigma_clean_at = -1
+        # Warm-escalation level chosen for the NEXT warm solve (see
+        # `ServiceConfig.warm_escalation`); updated from the observed drift
+        # at every absorb, 0 while no escalation thresholds are configured.
+        self.warm_level = 0
         # Attached allocation-serving store (repro.serving.DualStore).  When
         # set, every absorbed solve publishes its duals as an immutable
         # generation-stamped snapshot (see `_publish_duals`); queries are
@@ -204,6 +265,15 @@ class SolveSession:
                 "mode": "full",
                 "bytes": instance_nbytes(self._device_inst),
             }
+            # Slab bytes the narrow storage dtype saves vs fp32 — both the
+            # resident-HBM footprint and (x1 per oracle read) the per-
+            # iteration traffic reduction evidence (0 for fp32 slabs).
+            telemetry.get_registry().set_gauge(
+                "service_slab_bytes_saved",
+                float(_slab_bytes_saved(self._device_inst)),
+                tenant=self.tenant,
+                slab_dtype=slab_dtype_name(self.ingestor.dtype),
+            )
         elif plans:
             nbytes = 0
             for plan in plans:
@@ -258,6 +328,13 @@ class SolveSession:
             and self._sigma_clean_at == self._dirty_count
             and dc_norm <= thr
         )
+
+    def warm_config(self) -> MaximizerConfig:
+        """The warm solver config this tenant's next warm solve should use —
+        `ServiceConfig.warm` escalated to the drift-chosen level.  The
+        scheduler keys its batching groups on this config's gamma schedule,
+        so escalated tenants never share an executable with quiet ones."""
+        return self.config.warm_for(self.warm_level)
 
     def dispatch_raw(self, cfg, lam0, dc_norm: float, *, cold: bool):
         """Dispatch one compiled solve of the device-resident instance.
@@ -329,7 +406,7 @@ class SolveSession:
         (`compiled_solver_fixed_sigma`); the report says so (`sigma_reused`).
         """
         cold, reason, lam0 = self._start_state(force_cold)
-        cfg = self.config.cold if cold else self.config.warm
+        cfg = self.config.cold if cold else self.warm_config()
         dc_norm = self.ingestor.drain_cost_drift()
         dirty_count = self._dirty_count  # A-state the solve runs against
         with telemetry.span(
@@ -401,7 +478,7 @@ class SolveSession:
         dirty_count: Optional[int] = None,
         serving: Optional[dict[str, Any]] = None,
     ) -> dict[str, Any]:
-        cfg = self.config.cold if cold else self.config.warm
+        cfg = self.config.cold if cold else self.warm_config()
         gamma_floor = cfg.gammas[-1]
         if dc_norm is None:
             dc_norm = self.ingestor.drain_cost_drift()
@@ -420,6 +497,11 @@ class SolveSession:
             "gamma_floor": gamma_floor,
             "dc_norm": dc_norm,
             "sigma_reused": sigma_reused,
+            # the gamma schedule this solve actually ran (escalation-aware
+            # for warm solves; the full cold schedule otherwise) and the
+            # escalation level it was chosen at
+            "warm_schedule": [float(g) for g in cfg.gammas],
+            "warm_level": 0 if cold else self.warm_level,
             "upload_mode": (
                 self.last_transfer["mode"] if self.last_transfer else None
             ),
@@ -480,11 +562,32 @@ class SolveSession:
         # the estimate is stored but never considered clean.
         self._sigma_sq = float(res.sigma_sq)
         self._sigma_clean_at = -1 if dirty_count is None else dirty_count
+        self.warm_level = self._next_warm_level(report)
         self.cadence += 1
         self.last_report = report
         if serving is not None and self.dual_store is not None:
             self._publish_duals(res, serving, gamma_floor, report)
         return report
+
+    def _next_warm_level(self, report: dict[str, Any]) -> int:
+        """Escalation level for the NEXT warm solve, from this cadence's drift.
+
+        One level per `warm_escalation` threshold the observed relative drift
+        exceeded, plus one when the drift SLA failed outright; 0 when
+        escalation is disabled or no drift was measurable yet (first solve).
+        The level is recomputed fresh each cadence — a tenant that goes quiet
+        de-escalates immediately rather than ratcheting.
+        """
+        thresholds = self.config.warm_escalation
+        if not thresholds:
+            return 0
+        level = 0
+        drift_rel = report.get("drift_rel")
+        if drift_rel is not None:
+            level = sum(1 for t in sorted(thresholds) if drift_rel > t)
+        if report.get("sla_ok") is False:
+            level += 1
+        return level
 
     def _publish_duals(
         self,
@@ -594,6 +697,7 @@ class SolveSession:
             # whose instance arrays were mutated out-of-band (offline delta)
             # must re-run the power iteration.
             "sigma_generation": int(self.ingestor.generation),
+            "warm_level": int(self.warm_level),
         }
         if self._sigma_sq is not None:
             arrays["sigma_sq"] = np.asarray(self._sigma_sq, np.float64)
@@ -658,8 +762,23 @@ class SolveSession:
             meta.get("sigma_generation") == self.ingestor.generation
         )
         self._sigma_clean_at = 0 if clean else -1
+        # older checkpoints restore at base level; one noisy cadence re-raises
+        self.warm_level = int(meta.get("warm_level", 0))
         self.dual_store = None
         return self
+
+
+def _slab_bytes_saved(inst) -> int:
+    """Bytes the storage dtype saves vs fp32 slabs (idx/rhs are unaffected).
+
+    Computed from shapes+dtypes only — never forces a device transfer.
+    Negative never happens (no slab dtype is wider than fp32).
+    """
+    saved = 0
+    for b in inst.buckets:
+        for leaf in (b.coeff, b.cost, b.mask):
+            saved += leaf.size * (4 - np.dtype(leaf.dtype).itemsize)
+    return saved
 
 
 def _edge_drift(

@@ -85,6 +85,43 @@ def test_dual_oracle_kernel_basic():
     assert float(only_pad[2]) == 0.0 and float(only_pad[3]) == 0.0
 
 
+@pytest.mark.parametrize("dt", ["bfloat16", "int8"])
+def test_dual_oracle_kernel_dtype_parity(dt):
+    """Narrow-storage kernel parity: the interpret-mode kernel consuming a
+    bf16/int8 slab (with per-bucket scales for int8) matches the
+    dtype-faithful reference fed the SAME narrow inputs — both widen on
+    load and accumulate in fp32, so they must agree to fp32 noise."""
+    from repro.instances.buckets import Bucket, convert_bucket
+
+    J, n, L, m = 64, 24, 32, 2
+    rng = np.random.default_rng(11)
+    idx, coeff, cost, mask = _random_bucket(rng, n, L, m, J, padded_rows=4)
+    bd = convert_bucket(
+        Bucket(idx=idx, coeff=coeff, cost=cost, mask=mask, length=L), dt
+    )
+    assert bd.slab_dtype == dt
+    assert (bd.coeff_scale is not None) == (dt == "int8")
+    lam = jnp.asarray(rng.random(m * J).astype(np.float32))
+    for gamma in [0.05, 1.0]:
+        got = kops.fused_dual_oracle(
+            bd.idx, bd.coeff, bd.cost, bd.mask, lam, jnp.float32(gamma),
+            num_destinations=J, interpret=True,
+            coeff_scale=bd.coeff_scale, cost_scale=bd.cost_scale,
+        )
+        want = kref.dual_oracle_ref(
+            bd.idx, bd.coeff, bd.cost, bd.mask, lam, gamma, J,
+            coeff_scale=bd.coeff_scale, cost_scale=bd.cost_scale,
+        )
+        _assert_oracle_close(got, want, f"dtype={dt} gamma={gamma}")
+        # partials accumulate in fp32 regardless of storage width; the
+        # primal slab is written at the storage width for float slabs
+        x, hist, lin, sq = got
+        assert hist.dtype == jnp.float32
+        assert x.dtype == (jnp.bfloat16 if dt == "bfloat16" else jnp.float32)
+        # mask-zero (padded) rows still contribute exact zeros
+        assert float(jnp.abs(x[:4].astype(jnp.float32)).max()) == 0.0
+
+
 def test_dual_oracle_fallback_widths():
     """Non-pow2 and > MAX_FUSED_LENGTH widths take the reference path."""
     J, m = 16, 1

@@ -1,0 +1,328 @@
+"""Mixed-precision slab storage: quality drift, parity, and fp32 pins.
+
+The slab_dtype axis stores the bucketed-ELL slabs (coeff/cost/mask) in
+bfloat16 or int8 (symmetric per-bucket scales) while every accumulation —
+the Ax histogram, c'x, ||x||^2, duals, gamma/continuation math — stays
+fp32.  These tests pin the contract:
+
+  * fp32 default is bit-identical to the pre-slab_dtype pipeline (the
+    dtype plumbing is a host-level branch that adds nothing to the jaxpr);
+  * bf16/int8 end-to-end solves drift within table4-style tolerances;
+  * O(delta) ScatterPlan replay stays bit-for-bit at narrow dtypes;
+  * int8 is rejected on the service path (frozen per-bucket scales are
+    unsound under in-place slab surgery);
+  * the warm-escalation knob adapts the warm gamma tail from drift;
+  * the batched fixed-sigma pool matches the recompute pool.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Maximizer, MaximizerConfig, MatchingObjective, normalize_rows
+from repro.instances import (
+    DeltaIngestor,
+    InstanceDelta,
+    MatchingInstanceSpec,
+    bucketize,
+    generate_matching_instance,
+)
+from repro.instances.buckets import dequantize_bucket, rhs_dtype
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.service import ServiceConfig, SolveSession
+
+SPEC = MatchingInstanceSpec(
+    num_sources=400, num_destinations=30, avg_degree=5.0,
+    num_families=2, seed=17,
+)
+BASE = generate_matching_instance(SPEC)
+
+# short continuation solve for the drift regressions (same shape as the
+# table2 sweep's quality metric)
+CFG = MaximizerConfig(gammas=(0.1, 0.01), iters_per_stage=60)
+
+# quality-drift tolerances per storage dtype, calibrated like table4's
+# quality bars: duals rel-L2 vs the fp32 solve + normalized objective gap.
+# bf16 is a rounding cast (~3 decimal digits); int8 quantizes A itself, so
+# its drift is inherent to the quantization, not the pipeline (the
+# dequantized-fp32 solve of the SAME quantized problem is bit-identical).
+DRIFT_TOL = {"bfloat16": 3e-2, "int8": 1.5e-1}
+GAP_TOL = {"bfloat16": 1e-2, "int8": 1e-1}
+
+
+def _solve(dtype: str):
+    packed = bucketize(BASE, dtype=dtype)
+    scaled, _ = normalize_rows(packed)
+    return Maximizer(MatchingObjective(scaled), CFG).solve()
+
+
+# -- quality drift regressions ------------------------------------------------
+
+
+@pytest.mark.parametrize("dt", ["bfloat16", "int8"])
+def test_narrow_storage_quality_drift(dt):
+    ref = _solve("float32")
+    res = _solve(dt)
+    drift = float(
+        jnp.linalg.norm(res.lam - ref.lam)
+        / jnp.maximum(jnp.linalg.norm(ref.lam), 1e-12)
+    )
+    gap = abs(float(res.g) - float(ref.g)) / (1.0 + abs(float(ref.g)))
+    assert drift <= DRIFT_TOL[dt], (dt, drift)
+    assert gap <= GAP_TOL[dt], (dt, gap)
+
+
+def test_int8_pipeline_exact_vs_dequantized_solve():
+    """int8's drift is inherent to quantizing A, not the narrow pipeline:
+    solving the dequantized-to-fp32 copy of the SAME quantized instance
+    must land on bit-identical duals and objective."""
+    packed = bucketize(BASE, dtype="int8")
+    wide = dataclasses.replace(
+        packed,
+        buckets=tuple(dequantize_bucket(b) for b in packed.buckets),
+        rhs=jnp.asarray(packed.rhs, jnp.float32),
+    )
+    # no row normalization: its host-side scale folding rounds in a
+    # different order on quantized vs dequantized storage; the pin is about
+    # the solve pipeline, which dequantizes with the exact same converts
+    r8 = Maximizer(MatchingObjective(packed), CFG).solve()
+    r32 = Maximizer(MatchingObjective(wide), CFG).solve()
+    np.testing.assert_array_equal(np.asarray(r8.lam), np.asarray(r32.lam))
+    assert float(r8.g) == float(r32.g)
+
+
+# -- fp32 default: bitwise pin ------------------------------------------------
+
+
+def test_fp32_default_adds_nothing():
+    """The dtype plumbing is a host-level branch: fp32 buckets pass through
+    dequantize_bucket and the objective's _buckets view by IDENTITY (no
+    copies, no converts in the jaxpr), and the dispatched oracle equals the
+    plain reference bit-for-bit."""
+    packed = bucketize(BASE)  # default dtype
+    for b in packed.buckets:
+        assert b.slab_dtype == "float32" and b.coeff_scale is None
+        assert dequantize_bucket(b) is b
+    obj = MatchingObjective(packed, fused_oracle=True)
+    for view, own in zip(obj._buckets, packed.buckets):
+        assert view is own
+    # no narrow dtypes anywhere in the fp32 fused-oracle jaxpr
+    lam = jnp.zeros((packed.dual_dim,), jnp.float32)
+    jaxpr = str(jax.make_jaxpr(
+        lambda l: obj.calculate(l, jnp.float32(1.0))
+    )(lam))
+    assert "bf16" not in jaxpr and "i8" not in jaxpr
+    # dispatch path (off-TPU -> reference) == calling the reference directly
+    b = packed.buckets[0]
+    lam_r = jnp.asarray(
+        np.random.default_rng(0).random(packed.dual_dim).astype(np.float32)
+    )
+    got = kops.fused_dual_oracle(
+        b.idx, b.coeff, b.cost, b.mask, lam_r, jnp.float32(1.0),
+        num_destinations=packed.num_destinations,
+    )
+    want = kref.dual_oracle_ref(
+        b.idx, b.coeff, b.cost, b.mask, lam_r, 1.0, packed.num_destinations
+    )
+    for a, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(w))
+
+
+def test_storage_layout_per_dtype():
+    """bf16: narrow slabs, no scales, fp32 rhs.  int8: scale tensors with
+    the documented shapes; mask keeps its exact 0/1 pattern."""
+    b16 = bucketize(BASE, dtype="bfloat16")
+    assert all(b.slab_dtype == "bfloat16" for b in b16.buckets)
+    assert all(b.coeff_scale is None for b in b16.buckets)
+    assert np.dtype(rhs_dtype("bfloat16")) == np.float32
+    assert np.asarray(b16.rhs).dtype == np.float32
+    i8 = bucketize(BASE, dtype="int8")
+    for b in i8.buckets:
+        assert b.slab_dtype == "int8"
+        m = b.coeff.shape[0]
+        assert b.coeff_scale.shape == (m, 1, 1)
+        assert b.cost_scale.shape == (1, 1)
+        assert set(np.unique(np.asarray(b.mask))) <= {0, 1}
+        # padding invariant survives quantization: mask-zero slots hold 0
+        pad = np.asarray(b.mask) == 0
+        assert not np.asarray(b.cost)[pad].any()
+        assert not np.asarray(b.coeff)[:, pad].any()
+
+
+# -- O(delta) scatter replay at narrow dtypes ---------------------------------
+
+
+def _perturb_delta(edge_list, rng, frac=0.1):
+    n = max(1, int(frac * edge_list.nnz))
+    idx = rng.permutation(edge_list.nnz)[:n]
+    return InstanceDelta(
+        update_src=edge_list.src[idx],
+        update_dst=edge_list.dst[idx],
+        update_values=edge_list.values[idx] * rng.uniform(0.9, 1.1, n),
+        update_coeff=rng.uniform(0.1, 2.0, (SPEC.num_families, n)),
+    )
+
+
+def test_scatter_plan_replay_bit_for_bit_bf16():
+    """Device .at[].set replay == mutated host slabs, exactly, when the
+    slabs are stored in bfloat16 (delta payloads are cast to the storage
+    dtype before the scatter, so host and device round identically)."""
+    from repro.service import apply_scatter_plan, device_put_instance
+
+    rng = np.random.default_rng(5)
+    ing = DeltaIngestor(BASE, row_headroom=4, dtype="bfloat16")
+    dev = device_put_instance(ing.instance())
+    for _ in range(3):
+        rep = ing.apply(_perturb_delta(ing.to_edge_list(), rng))
+        assert rep.plan is not None and rep.in_place
+        dev = apply_scatter_plan(dev, rep.plan)
+        host = ing.instance()
+        for db, hb in zip(dev.buckets, host.buckets):
+            assert np.asarray(db.coeff).dtype == np.asarray(hb.coeff).dtype
+            np.testing.assert_array_equal(np.asarray(db.idx), hb.idx)
+            np.testing.assert_array_equal(
+                np.asarray(db.cost).view(np.uint16),
+                np.asarray(hb.cost).view(np.uint16),
+            )
+            np.testing.assert_array_equal(
+                np.asarray(db.coeff).view(np.uint16),
+                np.asarray(hb.coeff).view(np.uint16),
+            )
+            np.testing.assert_array_equal(
+                np.asarray(db.mask).view(np.uint16),
+                np.asarray(hb.mask).view(np.uint16),
+            )
+        np.testing.assert_array_equal(np.asarray(dev.rhs), np.asarray(host.rhs))
+
+
+def test_int8_rejected_on_service_path():
+    """In-place slab surgery under frozen per-bucket scales is unsound, so
+    both the ingestor and the service config refuse int8 up front."""
+    with pytest.raises(ValueError, match="int8"):
+        DeltaIngestor(BASE, dtype="int8")
+    with pytest.raises(ValueError, match="int8"):
+        ServiceConfig(slab_dtype="int8")
+    with pytest.raises(ValueError):
+        ServiceConfig(slab_dtype="float64")
+    # the supported service dtypes construct fine
+    ServiceConfig(slab_dtype="float32")
+    ServiceConfig(slab_dtype="bfloat16")
+
+
+def test_session_checkpoint_roundtrip_preserves_dtype():
+    """state_dict/from_state round-trips the slab dtype tag: the restored
+    ingestor re-packs at the configured width, bit-for-bit."""
+    cfg = ServiceConfig(slab_dtype="bfloat16", row_headroom=4)
+    sess = SolveSession("t0", BASE, cfg)
+    sess.solve()
+    arrays, meta = sess.state_dict()
+    back = SolveSession.from_state(cfg, arrays, meta)
+    assert back.ingestor.dtype == sess.ingestor.dtype
+    for a, b in zip(back.instance().buckets, sess.instance().buckets):
+        assert np.asarray(a.coeff).dtype == np.asarray(b.coeff).dtype
+        np.testing.assert_array_equal(
+            np.asarray(a.coeff).view(np.uint16),
+            np.asarray(b.coeff).view(np.uint16),
+        )
+
+
+# -- warm escalation ----------------------------------------------------------
+
+
+def test_escalated_warm_gammas_schedule():
+    """Level e prepends the e smallest cold gammas above the warm head,
+    descending, saturating at the full cold run-up."""
+    cfg = ServiceConfig(
+        cold=MaximizerConfig(gammas=(10.0, 1.0, 0.3, 0.1, 0.01)),
+        warm_gammas=(0.1, 0.01),
+        warm_escalation=(1e-4, 1e-2),
+    )
+    assert cfg.escalated_warm_gammas(0) == (0.1, 0.01)
+    assert cfg.escalated_warm_gammas(1) == (0.3, 0.1, 0.01)
+    assert cfg.escalated_warm_gammas(2) == (1.0, 0.3, 0.1, 0.01)
+    assert cfg.escalated_warm_gammas(3) == (10.0, 1.0, 0.3, 0.1, 0.01)
+    # saturates: no more cold gammas to prepend
+    assert cfg.escalated_warm_gammas(99) == (10.0, 1.0, 0.3, 0.1, 0.01)
+    assert cfg.warm_for(0).gammas == cfg.warm_gammas
+    assert cfg.warm_for(2).gammas == (1.0, 0.3, 0.1, 0.01)
+    # the warm iters-per-stage knob still applies at every level
+    cfg2 = dataclasses.replace(cfg, warm_iters_per_stage=7)
+    assert cfg2.warm_for(2).iters_per_stage == 7
+
+
+def test_warm_escalation_tracks_observed_drift():
+    """A quiet cadence stays at level 0; a violent one escalates the next
+    warm solve's schedule (reported in the solve record) and a following
+    quiet cadence de-escalates — the level is recomputed fresh, not
+    ratcheted."""
+    cfg = ServiceConfig(
+        warm_gammas=(0.1, 0.01),
+        warm_escalation=(1e-4, 1e-2),
+        row_headroom=4,
+    )
+    rng = np.random.default_rng(23)
+    sess = SolveSession("t0", BASE, cfg)
+    _, rep0 = sess.solve()
+    assert rep0["warm_level"] == 0  # cold solves report level 0
+    sess.ingest(_perturb_delta(sess.ingestor.to_edge_list(), rng, frac=0.02))
+    _, rep1 = sess.solve()
+    assert rep1["mode"] == "warm"
+    assert rep1["warm_level"] == 0
+    assert rep1["warm_schedule"] == [0.1, 0.01]
+    # violent cost shock -> drift above both thresholds -> escalation
+    cur = sess.ingestor.to_edge_list()
+    sess.ingest(InstanceDelta(
+        update_src=cur.src, update_dst=cur.dst,
+        update_values=cur.values * rng.uniform(3.0, 6.0, cur.nnz),
+    ))
+    _, rep2 = sess.solve()
+    assert rep2["mode"] == "warm"
+    if rep2["drift_rel"] > 1e-2:
+        _, rep3 = sess.solve()  # zero-delta cadence runs the escalated tail
+        assert rep3["warm_level"] >= 2
+        assert len(rep3["warm_schedule"]) > len(rep1["warm_schedule"])
+        assert rep3["warm_schedule"][-2:] == [0.1, 0.01]
+        # quiet again -> recomputed level drops back
+        _, rep4 = sess.solve()
+        assert rep4["warm_level"] <= rep3["warm_level"]
+
+
+def test_warm_escalation_disabled_by_default():
+    sess = SolveSession("t0", BASE, ServiceConfig(row_headroom=4))
+    sess.solve()
+    sess.ingest(_perturb_delta(
+        sess.ingestor.to_edge_list(), np.random.default_rng(3)
+    ))
+    _, rep = sess.solve()
+    assert rep["warm_level"] == 0
+    assert rep["warm_schedule"] == list(sess.config.warm_gammas)
+
+
+# -- batched fixed-sigma pool -------------------------------------------------
+
+
+def test_batched_fixed_sigma_matches_recompute():
+    """The vmapped fixed-sigma solver fed the recompute pool's own sigma
+    estimates reproduces its duals exactly (the power iteration is the only
+    thing skipped)."""
+    from repro.service import (
+        compiled_batch_solver,
+        compiled_batch_solver_fixed_sigma,
+        stack_instances,
+    )
+
+    cfg = MaximizerConfig(gammas=(0.1, 0.01), iters_per_stage=40)
+    packed = bucketize(BASE)
+    stacked = stack_instances([packed, packed])
+    lam0 = jnp.zeros((2, packed.dual_dim), jnp.float32)
+    raw = compiled_batch_solver(cfg, True)(stacked, lam0)
+    sig = compiled_batch_solver_fixed_sigma(cfg, True)(
+        stacked, lam0, jnp.asarray(raw.sigma_sq, jnp.float32)
+    )
+    np.testing.assert_array_equal(np.asarray(sig.lam), np.asarray(raw.lam))
+    np.testing.assert_array_equal(
+        np.asarray(sig.sigma_sq), np.asarray(raw.sigma_sq)
+    )

@@ -12,6 +12,12 @@ Usage:
 ``--require-kinds`` additionally fails unless every listed kind appears at
 least once across the validated files — CI uses it to assert the service
 dry-run actually exported something, not just an empty-but-valid file.
+
+``--require-bench-dtypes`` fails unless every ``bench`` record carries a
+``slab_dtypes`` list of known slab storage dtypes (the mixed-precision
+sweep axis benchmarks/run.py stamps into the history record) — CI's
+bench-smoke step uses it so the perf-trajectory artifact always says
+which dtypes each run swept.
 Exits non-zero listing every schema error.
 """
 from __future__ import annotations
@@ -27,7 +33,27 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 from repro.telemetry import SCHEMA, validate_record  # noqa: E402
 
 
-def check(paths: list[str], require_kinds: set[str]) -> list[str]:
+def _check_bench_dtypes(obj: dict) -> list[str]:
+    """Validate a bench record's ``slab_dtypes`` payload field."""
+    from repro.instances import SLAB_DTYPES
+
+    dtypes = obj.get("payload", {}).get("slab_dtypes")
+    if not isinstance(dtypes, list) or not dtypes:
+        return ["bench record missing non-empty 'slab_dtypes' list"]
+    unknown = [d for d in dtypes if d not in SLAB_DTYPES]
+    if unknown:
+        return [f"bench record has unknown slab dtypes {unknown!r} "
+                f"(known: {list(SLAB_DTYPES)})"]
+    if "float32" not in dtypes:
+        return ["bench record 'slab_dtypes' lacks the float32 baseline"]
+    return []
+
+
+def check(
+    paths: list[str],
+    require_kinds: set[str],
+    require_bench_dtypes: bool = False,
+) -> list[str]:
     errors: list[str] = []
     seen_kinds: set[str] = set()
     total = 0
@@ -52,6 +78,11 @@ def check(paths: list[str], require_kinds: set[str]) -> list[str]:
             )
             if isinstance(obj, dict) and obj.get("kind") in SCHEMA:
                 seen_kinds.add(obj["kind"])
+                if require_bench_dtypes and obj["kind"] == "bench":
+                    errors.extend(
+                        f"{name}:{lineno}: {e}"
+                        for e in _check_bench_dtypes(obj)
+                    )
         if n == 0:
             errors.append(f"{name}: no records")
         total += n
@@ -73,13 +104,19 @@ def main() -> int:
         default="",
         help="comma-separated record kinds that must each appear at least once",
     )
+    ap.add_argument(
+        "--require-bench-dtypes",
+        action="store_true",
+        help="every 'bench' record must carry a valid 'slab_dtypes' list "
+             "(known dtypes, float32 baseline included)",
+    )
     args = ap.parse_args()
     require = {k.strip() for k in args.require_kinds.split(",") if k.strip()}
     unknown = require - set(SCHEMA)
     if unknown:
         print(f"unknown kinds in --require-kinds: {sorted(unknown)}")
         return 2
-    errors = check(args.paths, require)
+    errors = check(args.paths, require, args.require_bench_dtypes)
     for e in errors:
         print(e)
     return 1 if errors else 0
