@@ -45,7 +45,7 @@ _DEFAULT_BENCH_OUT = os.path.join(
 
 
 def _write_oracle_bench(path: str) -> None:
-    from benchmarks import common, table2_iteration_time
+    from benchmarks import common, table2_iteration_time, table3_vs_pdhg
 
     if not table2_iteration_time.RESULTS:
         return
@@ -62,6 +62,11 @@ def _write_oracle_bench(path: str) -> None:
         },
         "fig1_oracle_rows": fig1_rows,
     }
+    if table3_vs_pdhg.RESULTS:
+        # engine-subsystem acceptance record: fused structured PDHG vs the
+        # seed COO path at matched tolerance (per-iteration speedup gated
+        # >= 5x on the standard instance by CI's bench-smoke step)
+        record["pdhg_engines"] = table3_vs_pdhg.RESULTS
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
         f.write("\n")

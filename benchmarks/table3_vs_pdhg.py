@@ -1,10 +1,30 @@
-"""Table 3: Dualip (this system) vs D-PDLP-family baseline, runtime to target.
+"""Table 3: PDHG engine sweep vs AGD at matched tolerance.
 
-CPU-scaled instances.  Dualip runs its continuation schedule; PDHG runs to the
-paper's 1e-4 relative tolerance.  Also reports the structural memory argument
-from Table 3: PDHG must materialise the simplex rows explicitly (the L1/
-reformulation blow-up that OOMs D-PDLP at scale), while the bucketed layout
-absorbs them into the projection operator.
+Four PDHG variants solve the same LP to the paper's 1e-4 relative tolerance:
+
+  * ``pdhg_coo_seed``            — the seed baseline (`core.pdhg.solve_pdhg`):
+    generic COO form with the per-source simplex rows materialised explicitly
+    (the reformulation blow-up D-PDLP pays), scatter-add SpMVs.
+  * ``pdhg_fused``               — `engines.pdhg`: bucketed-ELL structured
+    form, prox + A-apply fused through the one-pass dual-oracle kernel,
+    no restarts.  On small shards the engine's dense fast path kicks in
+    (buckets coalesced into one slab, sort-free comparison-matrix simplex
+    prox, `A x` as one destination-major contraction, ax-free carry).
+  * ``pdhg_fused_restart``       — + adaptive (sufficient-decay) restarts.
+  * ``pdhg_fused_restart_warm``  — + warm start from the previous cadence's
+    primal-dual pair with the engine-agnostic sigma cache (no power
+    iteration), the recurring-cadence production path.
+
+AGD (the paper's solver) runs at the same tolerance for context.  The gated
+comparison (CI bench-smoke; ROADMAP acceptance) is **per-iteration wall
+time** of the fused-structured engine vs the seed COO path on the standard
+synthetic instance — the structured form reads each nnz once from dense
+slabs while the COO form scatter-adds (m+1)x the entries (coupling rows
+plus explicit simplex rows).
+
+Full (non --quick) mode adds a scale point measured at a fixed iteration
+count (to-tolerance at that size would dominate harness wall time) plus the
+Table-3 structural memory argument: explicit-row nnz vs bucketed slots.
 """
 from __future__ import annotations
 
@@ -12,7 +32,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import cpu_instance, emit
 from repro.core import (
@@ -23,34 +42,185 @@ from repro.core import (
     from_edge_list,
     solve_pdhg,
 )
+from repro.engines.pdhg import PDHGEngineConfig, pdhg_raw_solve
+from repro.instances import (
+    MatchingInstanceSpec,
+    bucketize,
+    generate_matching_instance,
+)
+
+TOL = 1e-4
+BUDGET = 20_000
+CHECK_EVERY = 50
+
+# instance-tag -> {variant: measurements}; persisted into BENCH_oracle.json
+# (benchmarks/run.py) as the acceptance record for the engine subsystem.
+RESULTS: dict[str, dict] = {}
+
+
+REPS = 7
+
+
+def _timed(fn):
+    """(best wall_seconds of REPS calls, result); first call compiles.
+
+    Min-of-N because the gated quantity is a per-iteration *ratio* — single
+    measurements on a shared CPU swing +-10% and would make the CI gate
+    flaky; the minimum estimates the noise-free cost of each path.
+    """
+    out = fn()
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _coo(inst, *, max_iters=BUDGET, tol=TOL):
+    lp = from_edge_list(inst)
+    cfg = PDHGConfig(max_iters=max_iters, tol=tol, check_every=CHECK_EVERY)
+    wall, res = _timed(lambda: solve_pdhg(lp, cfg).x)
+    res = solve_pdhg(lp, cfg)
+    iters = max(int(res.iters), 1)
+    return {
+        "wall_s": wall,
+        "iters": iters,
+        "per_iter_us": wall / iters * 1e6,
+        "obj": float(res.primal_obj),
+        "converged": bool(res.converged),
+        "explicit_nnz": int(lp.rows.shape[0]),
+    }
+
+
+def _structured(packed, *, restart, max_iters=BUDGET, tol=TOL,
+                lam0=None, sigma_sq=None):
+    cfg = MaximizerConfig(gammas=(0.01,), iters_per_stage=max_iters,
+                          tol_grad=tol, check_every=CHECK_EVERY)
+    pcfg = PDHGEngineConfig(restart=restart)
+    l0 = jnp.zeros(packed.dual_dim, jnp.float32) if lam0 is None else lam0
+
+    # jit the whole solve like the service's compiled_solver does — the COO
+    # baseline is jitted, so an unjitted engine call would time re-tracing
+    if sigma_sq is None:
+        run = jax.jit(lambda i, l: pdhg_raw_solve(
+            i, l, cfg, normalize=False, fused_oracle=True, pcfg=pcfg))
+        args = (packed, l0)
+    else:
+        run = jax.jit(lambda i, l, s: pdhg_raw_solve(
+            i, l, cfg, normalize=False, fused_oracle=True, sigma_sq=s,
+            pcfg=pcfg))
+        args = (packed, l0, sigma_sq)
+
+    wall, raw = _timed(lambda: run(*args).lam)
+    raw = run(*args)
+    iters = max(int(raw.iters[0]), 1)
+    return {
+        "wall_s": wall,
+        "iters": iters,
+        "per_iter_us": wall / iters * 1e6,
+        "obj": float(raw.g),
+        "restarts": int(raw.restarts),
+        "slots": sum(b.rows * b.length for b in packed.buckets),
+        "_raw": raw,
+    }
+
+
+def _agd(scaled, *, tol=TOL):
+    obj = MatchingObjective(scaled)
+    cfg = MaximizerConfig(tol_grad=tol, tol_viol=tol,
+                          check_every=CHECK_EVERY)
+    mx = Maximizer(obj, cfg)
+    wall, res = _timed(lambda: mx.solve().lam)
+    res = mx.solve()
+    iters = max(res.total_iters_used or cfg.total_iters, 1)
+    return {
+        "wall_s": wall,
+        "iters": iters,
+        "per_iter_us": wall / iters * 1e6,
+        "obj": float(res.g),
+    }
+
+
+def _sweep_to_tol(tag: str, inst, packed) -> None:
+    """All engine variants to tol 1e-4 on one instance; emits + RESULTS."""
+    coo = _coo(inst)
+    fused = _structured(packed, restart="none")
+    restart = _structured(packed, restart="adaptive")
+    cold_raw = restart.pop("_raw")
+    warm = _structured(packed, restart="adaptive",
+                       lam0=cold_raw.lam, sigma_sq=cold_raw.sigma_sq)
+    warm.pop("_raw")
+    fused.pop("_raw")
+
+    speedup = coo["per_iter_us"] / fused["per_iter_us"]
+    emit(f"table3/pdhg_coo_seed_{tag}", coo["per_iter_us"],
+         f"iters={coo['iters']};wall_ms={coo['wall_s'] * 1e3:.1f};"
+         f"converged={coo['converged']};explicit_nnz={coo['explicit_nnz']}")
+    emit(f"table3/pdhg_fused_{tag}", fused["per_iter_us"],
+         f"iters={fused['iters']};wall_ms={fused['wall_s'] * 1e3:.1f};"
+         f"speedup_per_iter_vs_coo={speedup:.2f}x;slots={fused['slots']}")
+    emit(f"table3/pdhg_fused_restart_{tag}", restart["per_iter_us"],
+         f"iters={restart['iters']};restarts={restart['restarts']};"
+         f"wall_ms={restart['wall_s'] * 1e3:.1f}")
+    emit(f"table3/pdhg_fused_restart_warm_{tag}", warm["per_iter_us"],
+         f"iters={warm['iters']};cold_iters={restart['iters']};"
+         f"wall_ms={warm['wall_s'] * 1e3:.1f};"
+         f"warm_fewer_iters={warm['iters'] < restart['iters']}")
+
+    from repro.core import normalize_rows
+
+    scaled, _ = normalize_rows(packed)
+    agd = _agd(scaled)
+    emit(f"table3/agd_{tag}", agd["per_iter_us"],
+         f"iters={agd['iters']};wall_ms={agd['wall_s'] * 1e3:.1f}")
+
+    fused["per_iter_speedup_vs_coo"] = speedup
+    warm["cold_iters"] = restart["iters"]
+    warm["warm_fewer_iters"] = warm["iters"] < restart["iters"]
+    RESULTS[tag] = {
+        "tol": TOL,
+        "pdhg_coo_seed": coo,
+        "pdhg_fused": fused,
+        "pdhg_fused_restart": restart,
+        "pdhg_fused_restart_warm": warm,
+        "agd": agd,
+    }
 
 
 def run() -> None:
-    for sources in (20_000, 100_000):
-        inst, packed, scaled = cpu_instance(sources, destinations=500)
-        obj = MatchingObjective(scaled)
-        cfg = MaximizerConfig(iters_per_stage=150)
-        mx = Maximizer(obj, cfg)
-        t0 = time.perf_counter()
-        res = mx.solve()
-        t_dualip = time.perf_counter() - t0
+    # The gated point: the standard synthetic instance the test suite solves
+    # everywhere (60 sources x 10 destinations, degree 4, seed 5).
+    spec = MatchingInstanceSpec(num_sources=60, num_destinations=10,
+                                avg_degree=4.0, seed=5)
+    inst = generate_matching_instance(spec)
+    packed = bucketize(inst)
+    _sweep_to_tol("std", inst, packed)
 
-        lp = from_edge_list(inst)
-        t0 = time.perf_counter()
-        pres = solve_pdhg(lp, PDHGConfig(max_iters=20_000))
-        jax.block_until_ready(pres.x)
-        t_pdhg = time.perf_counter() - t0
+    from benchmarks import common
 
-        # explicit-row memory for the generic formulation vs bucketed layout
-        pdhg_nnz = int(lp.rows.shape[0])
-        ours_slots = sum(b.rows * b.length for b in packed.buckets)
-        emit(
-            f"table3/dualip_s{sources}", t_dualip * 1e6,
-            f"g={float(res.g):.4f};slots={ours_slots}",
-        )
-        emit(
-            f"table3/pdhg_s{sources}", t_pdhg * 1e6,
-            f"obj={float(pres.primal_obj):.4f};iters={int(pres.iters)};"
-            f"converged={bool(pres.converged)};explicit_nnz={pdhg_nnz};"
-            f"nnz_blowup={pdhg_nnz / max(inst.nnz, 1):.2f}x",
-        )
+    if common.QUICK:
+        return
+
+    # Scale point: per-iteration cost at fixed iteration count (running to
+    # tolerance at this size would dominate the harness) + the Table-3
+    # explicit-row memory blow-up argument.
+    inst, packed, scaled = cpu_instance(20_000, destinations=500)
+    n = 300
+    coo = _coo(inst, max_iters=n, tol=0.0)
+    fused = _structured(packed, restart="none", max_iters=n, tol=None)
+    fused.pop("_raw")
+    emit("table3/pdhg_coo_seed_s20000_fixed300", coo["per_iter_us"],
+         f"explicit_nnz={coo['explicit_nnz']};"
+         f"nnz_blowup={coo['explicit_nnz'] / max(inst.nnz, 1):.2f}x")
+    emit("table3/pdhg_fused_s20000_fixed300", fused["per_iter_us"],
+         f"slots={fused['slots']};"
+         f"speedup_per_iter_vs_coo="
+         f"{coo['per_iter_us'] / fused['per_iter_us']:.2f}x")
+    RESULTS["s20000_fixed300"] = {
+        "fixed_iters": n,
+        "pdhg_coo_seed": coo,
+        "pdhg_fused": fused,
+    }

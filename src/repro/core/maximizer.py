@@ -117,6 +117,9 @@ class SolveResult(NamedTuple):
     # per-stage iterations actually executed (< iters_per_stage when the
     # early-stop criterion fires); None when early stopping is disabled
     iters_used: Optional[tuple[int, ...]] = None
+    # explicit solver restarts taken (PDHG anchor/average restarts); None for
+    # engines that don't count them (AGD's in-scan momentum resets)
+    restarts: Optional[int] = None
 
     @property
     def total_iters_used(self) -> Optional[int]:
@@ -198,6 +201,72 @@ def _stage_scan(
     return final.lam, StageStats(g=gs, grad_norm=gns, max_violation=viols), final.comm
 
 
+def _chunked_early_scan(
+    body: Callable,
+    carry0,
+    iters: int,
+    *,
+    check_every: int,
+    trace_dtype,
+    num_traces: int,
+    stop_predicate: Callable,
+    stop_reduce: Optional[Callable] = None,
+):
+    """Generic chunked-scan-inside-while_loop early-stop machinery.
+
+    Engine-agnostic core shared by the AGD stage loop (`_stage_scan_early`)
+    and the structured PDHG engine (`repro.engines.pdhg`): runs `body` — any
+    `lax.scan` body emitting a tuple of `num_traces` scalar traces per step —
+    in chunks of `check_every` steps inside a `lax.while_loop`.  After each
+    chunk, `stop_predicate(chunk_traces)` (a boolean of the just-scanned
+    trace chunk) decides convergence, optionally reduced collectively by
+    `stop_reduce` (e.g. the psum'd all-shards-agree vote in
+    `repro.core.sharding` — it must return the same value on every
+    participant, or shards exit at different trip counts and the collectives
+    inside `body` deadlock).
+
+    Returns `(final_carry, trace_bufs, steps_used)`.  Trace buffers are
+    preallocated at the padded budget (`ceil(iters/chunk) * chunk`); entries
+    past `steps_used` are backfilled with the last computed value, so
+    `buf[-1]` stays meaningful after an early exit.  Under `vmap` the batch
+    runs lockstep until every element has converged.
+    """
+    chunk = max(1, min(int(check_every), int(iters)))
+    n_chunks = -(-int(iters) // chunk)  # ceil
+    total = n_chunks * chunk
+    bufs0 = tuple(jnp.zeros((total,), trace_dtype) for _ in range(num_traces))
+    state0 = (
+        carry0,
+        jnp.asarray(0, jnp.int32),  # chunks completed
+        jnp.asarray(False),  # converged
+        bufs0,
+    )
+
+    def cond(state):
+        _, k, done, _ = state
+        return jnp.logical_and(k < n_chunks, jnp.logical_not(done))
+
+    def step(state):
+        carry, k, _, bufs = state
+        carry, traces = jax.lax.scan(body, carry, None, length=chunk)
+        off = k * chunk
+        bufs = tuple(
+            jax.lax.dynamic_update_slice(b, t, (off,))
+            for b, t in zip(bufs, traces)
+        )
+        done = stop_predicate(traces)
+        if stop_reduce is not None:
+            done = stop_reduce(done)
+        return carry, k + 1, done, bufs
+
+    final, k, _, bufs = jax.lax.while_loop(cond, step, state0)
+    steps_used = (k * chunk).astype(jnp.int32)
+    last = jnp.maximum(steps_used - 1, 0)
+    pos = jnp.arange(total)
+    bufs = tuple(jnp.where(pos < steps_used, b, b[last]) for b in bufs)
+    return final, bufs, steps_used
+
+
 def _stage_scan_early(
     calculate: Callable,
     lam0: jax.Array,
@@ -216,76 +285,45 @@ def _stage_scan_early(
     """Early-stopping variant of `_stage_scan` (recurring-solve service).
 
     Runs the same AGD body in chunks of `check_every` iterations inside a
-    `lax.while_loop`; after each chunk the convergence criterion
+    `lax.while_loop` (`_chunked_early_scan`); after each chunk the criterion
     ``||grad|| <= tol_grad * max(1, |g|)  and  max(0, Ax-b) <= tol_viol``
     is evaluated and the loop exits once met.  Warm-started solves therefore
     pay only as many iterations as they need instead of the full fixed budget.
 
-    `stop_reduce` makes the stop decision *collective*: it maps the local
-    boolean convergence predicate to the global one (e.g. a psum-based
-    all-shards-agree reduction inside `shard_map` — see
-    `repro.core.sharding`).  It must return the same value on every
-    participant, otherwise shards exit the while_loop at different trip
-    counts and the collectives inside the body deadlock.  None (default)
-    keeps the local predicate — correct for single-device and vmapped use.
+    `stop_reduce` makes the stop decision *collective* (see
+    `_chunked_early_scan`); None keeps the local predicate — correct for
+    single-device and vmapped use.
 
     Returns `(lam, stats, comm, iters_used)`.  Stats traces are preallocated at
     the padded budget; entries past `iters_used` are backfilled with the last
-    computed value, so `stats.g[-1]` etc. stay meaningful.  Under `vmap` the
-    batch runs lockstep until every element has converged.
+    computed value, so `stats.g[-1]` etc. stay meaningful.
     """
     body = _agd_body(
         calculate, gamma, eta,
         acceleration=acceleration, adaptive_restart=adaptive_restart,
     )
-    chunk = max(1, min(int(check_every), int(iters)))
-    n_chunks = -(-int(iters) // chunk)  # ceil
-    total = n_chunks * chunk
-    dt = lam0.dtype
-    bufs0 = (
-        jnp.zeros((total,), dt),  # g
-        jnp.zeros((total,), dt),  # grad_norm
-        jnp.zeros((total,), dt),  # max_violation
-    )
-    state0 = (
-        _init_carry(lam0, comm0),
-        jnp.asarray(0, jnp.int32),  # chunks completed
-        jnp.asarray(False),  # converged
-        bufs0,
-    )
 
-    def cond(state):
-        _, k, done, _ = state
-        return jnp.logical_and(k < n_chunks, jnp.logical_not(done))
-
-    def step(state):
-        carry, k, _, (bg, bgn, bv) = state
-        carry, (gs, gns, viols) = jax.lax.scan(body, carry, None, length=chunk)
-        off = k * chunk
-        bg = jax.lax.dynamic_update_slice(bg, gs, (off,))
-        bgn = jax.lax.dynamic_update_slice(bgn, gns, (off,))
-        bv = jax.lax.dynamic_update_slice(bv, viols, (off,))
+    def stop_predicate(traces):
+        gs, gns, viols = traces
         done = jnp.asarray(True)
         if tol_grad is not None:
             scale = jnp.maximum(1.0, jnp.abs(gs[-1]))
             done = jnp.logical_and(done, gns[-1] <= tol_grad * scale)
         if tol_viol is not None:
             done = jnp.logical_and(done, viols[-1] <= tol_viol)
-        if stop_reduce is not None:
-            done = stop_reduce(done)
-        return carry, k + 1, done, (bg, bgn, bv)
+        return done
 
-    final, k, _, (bg, bgn, bv) = jax.lax.while_loop(cond, step, state0)
-    iters_used = (k * chunk).astype(jnp.int32)
-    last = jnp.maximum(iters_used - 1, 0)
-    pos = jnp.arange(total)
-
-    def backfill(buf):
-        return jnp.where(pos < iters_used, buf, buf[last])
-
-    stats = StageStats(
-        g=backfill(bg), grad_norm=backfill(bgn), max_violation=backfill(bv)
+    final, (bg, bgn, bv), iters_used = _chunked_early_scan(
+        body,
+        _init_carry(lam0, comm0),
+        iters,
+        check_every=check_every,
+        trace_dtype=lam0.dtype,
+        num_traces=3,
+        stop_predicate=stop_predicate,
+        stop_reduce=stop_reduce,
     )
+    stats = StageStats(g=bg, grad_norm=bgn, max_violation=bv)
     return final.lam, stats, final.comm, iters_used
 
 

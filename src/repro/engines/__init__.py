@@ -1,0 +1,17 @@
+"""Solver engines: the layer between the dual oracle and the service.
+
+See `repro.engines.base` for the contract, `repro.engines.agd` /
+`repro.engines.pdhg` for the two implementations, and
+`repro.engines.selector` for the per-tenant adaptive routing policy.
+Documented in docs/solvers.md.
+"""
+from repro.engines.base import ENGINES, Engine, RawSolve, resolve_engine
+from repro.engines.selector import EngineSelector
+
+__all__ = [
+    "ENGINES",
+    "Engine",
+    "EngineSelector",
+    "RawSolve",
+    "resolve_engine",
+]

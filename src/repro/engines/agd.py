@@ -1,0 +1,127 @@
+"""AGD engine: the paper's smoothed-dual continuation solve as an Engine.
+
+This is the service's original `_raw_solve` (repro.service.engine) relocated
+behind the engine contract — the full gamma-continuation schedule of
+accelerated projected dual ascent, with convergence-based early stopping per
+stage when the config carries tolerances.  The service keeps compiling and
+caching it exactly as before; the move only makes "which solver" a value
+(`repro.engines.base.resolve_engine`) instead of an assumption.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.maximizer import (
+    MaximizerConfig,
+    StageStats,
+    _stage_scan,
+    _stage_scan_early,
+    step_size,
+)
+from repro.core.objective import MatchingObjective, normalize_rows_traced
+from repro.engines.base import RawSolve
+from repro.instances.buckets import BucketedInstance
+
+__all__ = ["AGDEngine", "AGD_ENGINE", "agd_raw_solve"]
+
+
+def agd_raw_solve(
+    inst: BucketedInstance,
+    lam0: jax.Array,
+    cfg: MaximizerConfig,
+    normalize: bool,
+    fused_oracle: bool = False,
+    sigma_sq: Optional[jax.Array] = None,
+) -> RawSolve:
+    """Full continuation solve as a pure traced function of the instance.
+
+    ``sigma_sq=None`` runs the power iteration (~cfg.power_iters oracle
+    calls); a traced scalar skips it and reuses the caller's estimate — the
+    warm-cadence path (`SolveSession`) passes the previous solve's value when
+    the coefficients haven't drifted, since sigma_max(A) is a function of A
+    alone (see `repro.service.engine.compiled_solver_fixed_sigma`).
+    """
+    if normalize:
+        # Jacobi preconditioning applied device-side each solve, so the
+        # delta-mutated raw slabs never need a host-side re-normalization
+        inst, _ = normalize_rows_traced(inst)
+    obj = MatchingObjective(inst, fused_oracle=fused_oracle)
+
+    def calc(lam, gamma, comm):
+        return obj.calculate(lam, gamma), comm
+
+    if sigma_sq is None:
+        sigma_sq = obj.power_iteration(
+            jax.random.key(cfg.seed), iters=cfg.power_iters
+        )
+    lam = lam0
+    stats: list[StageStats] = []
+    etas: list[jax.Array] = []
+    iters: list[jax.Array] = []
+    for gamma in cfg.gammas:
+        eta = step_size(cfg, sigma_sq, gamma).astype(lam.dtype)
+        gamma_t = jnp.asarray(gamma, lam.dtype)
+        if cfg.early_stop:
+            # stop_reduce=None: the service engine is single-shard (or
+            # vmapped, where the batch runs lockstep anyway), so the local
+            # convergence predicate IS the global one.  The distributed path
+            # (core.sharding) passes a psum'd all-shards-agree reduction here.
+            lam, st, _, used = _stage_scan_early(
+                calc, lam, gamma_t, eta, cfg.iters_per_stage,
+                acceleration=cfg.acceleration,
+                adaptive_restart=cfg.adaptive_restart,
+                tol_grad=cfg.tol_grad,
+                tol_viol=cfg.tol_viol,
+                check_every=cfg.check_every,
+                stop_reduce=None,
+            )
+        else:
+            lam, st, _ = _stage_scan(
+                calc, lam, gamma_t, eta, cfg.iters_per_stage,
+                acceleration=cfg.acceleration,
+                adaptive_restart=cfg.adaptive_restart,
+            )
+            used = jnp.asarray(cfg.iters_per_stage, jnp.int32)
+        stats.append(st)
+        etas.append(eta)
+        iters.append(used)
+    final = obj.calculate(lam, jnp.asarray(cfg.gammas[-1], lam.dtype))
+    return RawSolve(
+        lam=lam,
+        x_slabs=final.x_slabs,
+        g=final.g,
+        stats=tuple(stats),
+        sigma_sq=sigma_sq,
+        etas=jnp.stack(etas),
+        iters=jnp.stack(iters),
+        # AGD's O'Donoghue–Candès momentum resets happen inside the scan and
+        # are not individually counted; the restart budget telemetry is a
+        # PDHG concept (anchor/ergodic restarts).
+        restarts=jnp.asarray(0, jnp.int32),
+    )
+
+
+class AGDEngine:
+    """Engine-protocol wrapper over `agd_raw_solve`."""
+
+    name = "agd"
+
+    @staticmethod
+    def raw_solve(
+        inst,
+        lam0,
+        cfg: MaximizerConfig,
+        *,
+        normalize: bool,
+        fused_oracle: bool = False,
+        sigma_sq=None,
+    ) -> RawSolve:
+        return agd_raw_solve(
+            inst, lam0, cfg, normalize, fused_oracle, sigma_sq
+        )
+
+
+AGD_ENGINE = AGDEngine()

@@ -1,0 +1,90 @@
+"""Engine contract: the layer between the dual oracle and the service.
+
+A solver *engine* is anything that can run one full solve of a
+`BucketedInstance` as a pure traced function and return a `RawSolve` — the
+vmap-friendly device pytree the service compiles, caches, batches and absorbs
+(`repro.service.engine`).  Two engines ship today:
+
+  * ``"agd"``  — smoothed-dual accelerated gradient ascent with
+    gamma-continuation (the paper's Maximizer; `repro.engines.agd`);
+  * ``"pdhg"`` — structured primal-dual hybrid gradient on the same
+    bucketed-ELL form, with restarts and D-PDLP-style relative-residual
+    termination (`repro.engines.pdhg`).
+
+The contract every engine satisfies:
+
+  * **solve**: ``raw_solve(inst, lam0, cfg, normalize=..., fused_oracle=...,
+    sigma_sq=None) -> RawSolve`` is pure in the instance pytree (jit / vmap /
+    shard_map safe), derives every hyperparameter from the shared
+    `MaximizerConfig` (budgets, tolerances, check cadence), runs the power
+    iteration itself when ``sigma_sq`` is None and reuses the caller's
+    estimate otherwise (sigma_max(A) is a function of A alone, so the
+    service's sigma cache is engine-agnostic).
+  * **warm state**: the dual vector ``lam`` lives in the SAME [m*J] space for
+    every engine (the coupling-row multipliers, Jacobi-scaled when
+    ``normalize``), so yesterday's duals warm-start either engine — the
+    scheduler can re-route a tenant without losing its warm state.
+  * **stats**: ``RawSolve.stats`` is a tuple of `StageStats` traces and
+    ``iters`` the per-stage iteration counts, consumed unchanged by
+    `telemetry.ConvergenceTrace.from_result` (PDHG emits one stage at
+    `check_every` resolution; `trace_stride` bridges the granularity).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Protocol, runtime_checkable
+
+import jax
+
+from repro.core.maximizer import MaximizerConfig, StageStats
+
+__all__ = ["ENGINES", "Engine", "RawSolve", "resolve_engine"]
+
+#: Engine names the service accepts; "auto" is a scheduler policy on top
+#: (`repro.engines.selector`), not an engine.
+ENGINES: tuple[str, ...] = ("agd", "pdhg")
+
+
+class RawSolve(NamedTuple):
+    """Device-side output of one engine solve (vmap-friendly pytree)."""
+
+    lam: jax.Array  # [dual_dim]
+    x_slabs: tuple[jax.Array, ...]
+    g: jax.Array  # final objective value (scalar; engine-native sign)
+    stats: tuple[StageStats, ...]  # one per stage, traces of length budget
+    sigma_sq: jax.Array
+    etas: jax.Array  # [num_stages] step sizes
+    iters: jax.Array  # [num_stages] iterations executed (int32)
+    restarts: jax.Array  # scalar int32: momentum/anchor restarts taken
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """Static engine object: a name plus the pure raw-solve entry point."""
+
+    name: str
+
+    def raw_solve(
+        self,
+        inst,
+        lam0: jax.Array,
+        cfg: MaximizerConfig,
+        *,
+        normalize: bool,
+        fused_oracle: bool = False,
+        sigma_sq: Optional[jax.Array] = None,
+    ) -> RawSolve:
+        ...
+
+
+def resolve_engine(name: str) -> Engine:
+    """Engine registry lookup; raises ValueError on unknown names."""
+    from repro.engines.agd import AGD_ENGINE
+    from repro.engines.pdhg import PDHG_ENGINE
+
+    engines = {"agd": AGD_ENGINE, "pdhg": PDHG_ENGINE}
+    try:
+        return engines[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; choose from {ENGINES}"
+        ) from None

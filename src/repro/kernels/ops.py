@@ -31,6 +31,7 @@ __all__ = [
     "fused_project_simplex",
     "fused_dual_primal",
     "fused_dual_oracle",
+    "fused_pdhg_step",
     "oracle_hist_partial_bytes",
     "oracle_slab_slot_bytes",
     "pick_block_rows",
@@ -314,3 +315,50 @@ def fused_dual_oracle(
         ]
     x, hist_p, scal_p = call(*operands)
     return x[:n], hist_p.sum(axis=0), scal_p[:, 0].sum(), scal_p[:, 1].sum()
+
+
+def fused_pdhg_step(
+    idx: jax.Array,  # [n, L] int32
+    coeff: jax.Array,  # [m, n, L] fp32 compute view
+    cost: jax.Array,  # [n, L] fp32
+    mask: jax.Array,  # [n, L] fp32
+    x: jax.Array,  # [n, L] fp32 current primal slab
+    y: jax.Array,  # [m * J] fp32 current duals
+    tau: jax.Array,  # scalar primal step
+    *,
+    num_destinations: int,
+    radius: float = 1.0,
+    inequality: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One structured-PDHG primal prox step for one bucket: `(x_new, hist)`.
+
+    The PDHG primal update `x+ = Proj_C(x - tau * (c + A'y))` is exactly the
+    dual oracle's `Proj_C(-(A'y + cost_eff) / gamma)` with the identification
+    `cost_eff = c - x / tau`, `gamma = 1 / tau` — so ONE fused launch both
+    takes the prox step and emits this bucket's `hist = A x+` partial [m, J],
+    which is what the extrapolated dual update needs.  That single-read fusion
+    (vs the seed COO path's gather for `A'y` plus scatter-add for `A x`) is
+    the structured engine's per-iteration win; see `repro.engines.pdhg`.
+
+    Inputs must be fp32 compute views (`BucketedInstance` dequantized slabs):
+    `cost_eff` is iterate-dependent, so the quantized-storage kernel variants
+    (which assume a static per-bucket cost scale) don't apply here.
+    """
+    inv_tau = (1.0 / tau).astype(jnp.float32)
+    cost_eff = cost - x * inv_tau
+    x_new, hist, _, _ = fused_dual_oracle(
+        idx,
+        coeff,
+        cost_eff,
+        mask,
+        y,
+        inv_tau,
+        num_destinations=num_destinations,
+        radius=radius,
+        inequality=inequality,
+        interpret=interpret,
+        coeff_scale=None,
+        cost_scale=None,
+    )
+    return x_new, hist

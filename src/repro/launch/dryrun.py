@@ -155,7 +155,8 @@ def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
                     fused_oracle: bool = False,
                     tol_grad: Optional[float] = None,
                     tol_viol: Optional[float] = None,
-                    formulation: str = "matching") -> dict:
+                    formulation: str = "matching",
+                    engine: str = "agd") -> dict:
     from repro.analysis.hlo_stats import collective_stats
     from repro.configs import LP_INSTANCES
     from repro.core.maximizer import MaximizerConfig
@@ -168,6 +169,14 @@ def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
     if formulation != "matching" and (fused_kernel or fused_oracle):
         raise ValueError("fused kernels implement the simplex feasible set; "
                          "only the matching formulation can use them")
+    engine = "agd" if engine == "auto" else engine  # auto: service policy
+    if engine == "pdhg":
+        if formulation != "matching":
+            raise ValueError("engine pdhg solves the simplex-constrained "
+                             "matching LP; only formulation matching applies")
+        if fused_kernel:
+            raise ValueError("engine pdhg fuses its prox step through the "
+                             "one-pass dual oracle; use fused_oracle")
     # The spec-shaped dry-run has no concrete instance to attach a spec to,
     # so lower the feasible set directly and hand the DistributedMaximizer
     # its projection (the supported zero-sharding-edits path).
@@ -184,18 +193,22 @@ def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
     # tol_grad/tol_viol lower the early-stop (psum'd-predicate while_loop)
     # stage variant instead of the fixed-budget scan — same coherence proof,
     # different collective program.
-    dm = DistributedMaximizer(
-        inst, mesh,
-        MaximizerConfig(iters_per_stage=iters, tol_grad=tol_grad,
-                        tol_viol=tol_viol),
-        DistConfig(axes=axes, comm_mode=comm_mode, compress=compress,
-                   fused_kernel=fused_kernel, fused_oracle=fused_oracle,
-                   kernel_interpret=True,
-                   slab_dtype=jnp.dtype(slab_dtype).name),
-        projection=projection,
-    )
+    cfg = MaximizerConfig(iters_per_stage=iters, tol_grad=tol_grad,
+                          tol_viol=tol_viol)
+    dist = DistConfig(axes=axes, comm_mode=comm_mode, compress=compress,
+                      fused_kernel=fused_kernel, fused_oracle=fused_oracle,
+                      kernel_interpret=True,
+                      slab_dtype=jnp.dtype(slab_dtype).name)
     t0 = time.time()
-    lowered = dm.lower_stage()
+    if engine == "pdhg":
+        from repro.engines.pdhg import lower_pdhg_sharded
+
+        lowered = lower_pdhg_sharded(inst, mesh, cfg, dist,
+                                     projection=projection)
+    else:
+        dm = DistributedMaximizer(inst, mesh, cfg, dist,
+                                  projection=projection)
+        lowered = dm.lower_stage()
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -213,9 +226,11 @@ def run_solver_cell(inst_name: str, mesh_name: str, *, comm_mode="psum",
     model_flops = 4.0 * nnz * iters
     return {
         "cell": f"solver-{inst_name}/{comm_mode}+{compress}/{mesh_name}"
-                + ("" if formulation == "matching" else f"/{formulation}"),
+                + ("" if formulation == "matching" else f"/{formulation}")
+                + ("" if engine == "agd" else f"/{engine}"),
         "arch": f"solver-{inst_name}",
         "formulation": formulation,
+        "engine": engine,
         "shape": f"stage{iters}",
         "kind": "solver",
         "mesh": mesh_name,
@@ -355,6 +370,10 @@ def main(argv: Optional[list[str]] = None) -> int:
     ap.add_argument("--fused-oracle", action="store_true")
     ap.add_argument("--tol-grad", type=float, default=None)
     ap.add_argument("--tol-viol", type=float, default=None)
+    ap.add_argument("--engine", default="agd",
+                    choices=["agd", "pdhg", "auto"],
+                    help="solver engine lowered for the solver cell "
+                         "(docs/solvers.md); auto falls back to agd")
     ap.add_argument("--formulation", default="matching",
                     choices=["matching", "capacity-cap", "fairness-floor",
                              "budget-pacing"],
@@ -380,7 +399,8 @@ def main(argv: Optional[list[str]] = None) -> int:
                                   fused_oracle=args.fused_oracle,
                                   tol_grad=args.tol_grad,
                                   tol_viol=args.tol_viol,
-                                  formulation=args.formulation)
+                                  formulation=args.formulation,
+                                  engine=args.engine)
             tag = f"solver-{args.solver}__{args.mesh}"
             if args.comm_mode != "psum" or args.compress != "none":
                 tag += f"__{args.comm_mode}-{args.compress}"
@@ -392,6 +412,8 @@ def main(argv: Optional[list[str]] = None) -> int:
                 tag += "__earlystop"
             if args.formulation != "matching":
                 tag += f"__{args.formulation}"
+            if args.engine != "agd":
+                tag += f"__{args.engine}"
             if args.tag:
                 tag += "__" + args.tag
         else:

@@ -99,6 +99,11 @@ def main() -> int:
     ap.add_argument("--sigma-reuse-threshold", type=float, default=None,
                     help="warm cadences with ||dc|| at or below this skip "
                          "the power iteration (reuse previous sigma_sq)")
+    ap.add_argument("--engine", default="agd",
+                    choices=["agd", "pdhg", "auto"],
+                    help="solver engine for every tenant, or 'auto' for the "
+                         "per-tenant adaptive selector (docs/solvers.md); "
+                         "the routed engine shows up in each solve_report")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true",
                     help="cross-check warm vs cold and batched vs sequential")
@@ -155,6 +160,7 @@ def main() -> int:
         row_headroom=args.row_headroom,
         fused_oracle=args.fused_oracle,
         sigma_reuse_dc_threshold=args.sigma_reuse_threshold,
+        engine=args.engine,
     )
     sched = Scheduler(cfg)
 
@@ -288,7 +294,8 @@ def main() -> int:
             )
             sigma_s = " sigma[reused]" if r.get("sigma_reused") else ""
             print(
-                f"  {name}: {r['mode']:4s} iters {r['iters_used']}/{r['iter_budget']}"
+                f"  {name}: {r['mode']:4s} [{r['engine']}] "
+                f"iters {r['iters_used']}/{r['iter_budget']}"
                 f" g={r['g']:.4f} viol={r['max_violation']:.2e} "
                 f"up[{r['upload_mode']}:{r['upload_bytes']}B] {drift}{sigma_s}{ing_s}"
             )
@@ -305,14 +312,21 @@ def main() -> int:
         # warm numbers from the last cadence report
         warm_r = sess.last_report
         full_cfg = MaximizerConfig(iters_per_stage=args.iters_per_stage)
+        # Pin the cold reference to the engine that served the warm cadence:
+        # under engine="auto" the selector's exploration may route
+        # consecutive cadences to different engines, and the agd (smoothed
+        # dual) and pdhg (exact LP) objectives differ by O(gamma) — the
+        # same-quality check is only meaningful within one engine.
+        verify_engine = warm_r["engine"]
         cold = to_solve_result(
-            compiled_solver(full_cfg, cfg.normalize)(
+            compiled_solver(full_cfg, cfg.normalize, engine=verify_engine)(
                 inst, np.zeros(inst.dual_dim, np.float32)
             )
         )
         g_rel = abs(warm_r["g"] - float(cold.g)) / max(abs(float(cold.g)), 1e-9)
         print(
-            f"  cold: iters {full_cfg.total_iters} g={float(cold.g):.4f} "
+            f"  cold: [{verify_engine}] iters {full_cfg.total_iters} "
+            f"g={float(cold.g):.4f} "
             f"viol={float(cold.stats[-1].max_violation[-1]):.2e}"
         )
         print(

@@ -26,6 +26,10 @@ def main() -> int:
                          "all accumulation stay fp32.  bfloat16 halves and "
                          "int8 quarters the per-iteration slab HBM traffic "
                          "(int8 adds per-bucket symmetric scales)")
+    ap.add_argument("--engine", default="agd", choices=["agd", "pdhg", "auto"],
+                    help="solver engine (docs/solvers.md).  'auto' is the "
+                         "service-level adaptive policy; a one-shot solve "
+                         "has no per-tenant history, so it falls back to agd")
     ap.add_argument("--fused-kernel", action="store_true")
     ap.add_argument("--fused-oracle", action="store_true",
                     help="one-pass fused dual oracle (kernel Ax + objective "
@@ -62,6 +66,14 @@ def main() -> int:
     if args.formulation != "matching" and (args.fused_kernel or args.fused_oracle):
         ap.error("--fused-kernel/--fused-oracle implement the simplex "
                  "feasible set; only --formulation matching can use them")
+    engine = "agd" if args.engine == "auto" else args.engine
+    if engine == "pdhg":
+        if args.formulation != "matching":
+            ap.error("--engine pdhg solves the simplex-constrained matching "
+                     "LP; only --formulation matching is supported")
+        if args.fused_kernel:
+            ap.error("--engine pdhg fuses its prox step through the one-pass "
+                     "dual oracle; use --fused-oracle, not --fused-kernel")
 
     n = args.shards or len(jax.devices())
     spec = MatchingInstanceSpec(
@@ -81,7 +93,18 @@ def main() -> int:
     cfg = MaximizerConfig(iters_per_stage=args.iters_per_stage,
                           tol_grad=args.tol_grad, tol_viol=args.tol_viol)
     t0 = time.time()
-    if n > 1:
+    if engine == "pdhg":
+        # Structured PDHG on the same bucketed instance: one driver for any
+        # shard count (a 1-device mesh degenerates to the single-shard core).
+        from repro.engines.pdhg import solve_pdhg_sharded
+
+        mesh = compat.make_mesh((n,), ("data",))
+        res = solve_pdhg_sharded(
+            scaled, mesh, cfg,
+            DistConfig(axes="data", fused_oracle=args.fused_oracle,
+                       slab_dtype=args.slab_dtype),
+        )
+    elif n > 1:
         mesh = compat.make_mesh((n,), ("data",))
         dm = DistributedMaximizer(
             comp.sharded_instance(), mesh, cfg,
@@ -102,7 +125,7 @@ def main() -> int:
     x = unpack_primal(packed, [np.asarray(s) for s in res.x_slabs])
     budget = cfg.total_iter_budget if cfg.early_stop else cfg.total_iters
     print(f"solved in {dt:.1f}s ({dt / max(total_iters, 1) * 1e3:.2f} ms/iter, "
-          f"{total_iters}/{budget} iters)")
+          f"{total_iters}/{budget} iters, engine={engine})")
     print(f"g = {float(res.g):.6f}  value = {-float(np.dot(inst.cost, x)):.4f}  "
           f"viol = {float(res.stats[-1].max_violation[-1]):.3e}")
     return 0

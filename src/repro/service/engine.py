@@ -39,22 +39,15 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import time
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import telemetry
-from repro.core.maximizer import (
-    MaximizerConfig,
-    SolveResult,
-    StageStats,
-    _stage_scan,
-    _stage_scan_early,
-    step_size,
-)
-from repro.core.objective import MatchingObjective, normalize_rows_traced
+from repro.core.maximizer import MaximizerConfig, SolveResult
+from repro.engines.base import RawSolve, resolve_engine
 from repro.instances.buckets import BucketedInstance
 from repro.instances.deltas import ScatterPlan
 
@@ -73,18 +66,6 @@ __all__ = [
 ]
 
 
-class RawSolve(NamedTuple):
-    """Device-side output of one continuation solve (vmap-friendly pytree)."""
-
-    lam: jax.Array  # [dual_dim]
-    x_slabs: tuple[jax.Array, ...]
-    g: jax.Array  # final dual objective (scalar)
-    stats: tuple[StageStats, ...]  # one per stage, traces of length budget
-    sigma_sq: jax.Array
-    etas: jax.Array  # [num_stages] step sizes
-    iters: jax.Array  # [num_stages] iterations executed (int32)
-
-
 def _raw_solve(
     inst: BucketedInstance,
     lam0: jax.Array,
@@ -92,74 +73,34 @@ def _raw_solve(
     normalize: bool,
     fused_oracle: bool = False,
     sigma_sq: Optional[jax.Array] = None,
+    engine: str = "agd",
 ) -> RawSolve:
-    """Full continuation solve as a pure traced function of the instance.
+    """Full solve as a pure traced function of the instance, on the named
+    engine (`repro.engines`).  ``"agd"`` is the paper's continuation solve
+    (the body formerly inlined here, now `repro.engines.agd`); ``"pdhg"`` is
+    the structured primal-dual engine.  Both share the RawSolve contract and
+    the [m*J] dual space, so everything downstream (caches, pools, sessions,
+    warm starts, sigma reuse) is engine-agnostic.
 
     ``sigma_sq=None`` runs the power iteration (~cfg.power_iters oracle
     calls); a traced scalar skips it and reuses the caller's estimate — the
     warm-cadence path (`SolveSession`) passes the previous solve's value when
     the coefficients haven't drifted, since sigma_max(A) is a function of A
-    alone (see `compiled_solver_fixed_sigma`).
+    alone (see `compiled_solver_fixed_sigma`) and not of the engine.
     """
-    if normalize:
-        # Jacobi preconditioning applied device-side each solve, so the
-        # delta-mutated raw slabs never need a host-side re-normalization
-        inst, _ = normalize_rows_traced(inst)
-    obj = MatchingObjective(inst, fused_oracle=fused_oracle)
-
-    def calc(lam, gamma, comm):
-        return obj.calculate(lam, gamma), comm
-
-    if sigma_sq is None:
-        sigma_sq = obj.power_iteration(
-            jax.random.key(cfg.seed), iters=cfg.power_iters
-        )
-    lam = lam0
-    stats: list[StageStats] = []
-    etas: list[jax.Array] = []
-    iters: list[jax.Array] = []
-    for gamma in cfg.gammas:
-        eta = step_size(cfg, sigma_sq, gamma).astype(lam.dtype)
-        gamma_t = jnp.asarray(gamma, lam.dtype)
-        if cfg.early_stop:
-            # stop_reduce=None: the service engine is single-shard (or
-            # vmapped, where the batch runs lockstep anyway), so the local
-            # convergence predicate IS the global one.  The distributed path
-            # (core.sharding) passes a psum'd all-shards-agree reduction here.
-            lam, st, _, used = _stage_scan_early(
-                calc, lam, gamma_t, eta, cfg.iters_per_stage,
-                acceleration=cfg.acceleration,
-                adaptive_restart=cfg.adaptive_restart,
-                tol_grad=cfg.tol_grad,
-                tol_viol=cfg.tol_viol,
-                check_every=cfg.check_every,
-                stop_reduce=None,
-            )
-        else:
-            lam, st, _ = _stage_scan(
-                calc, lam, gamma_t, eta, cfg.iters_per_stage,
-                acceleration=cfg.acceleration,
-                adaptive_restart=cfg.adaptive_restart,
-            )
-            used = jnp.asarray(cfg.iters_per_stage, jnp.int32)
-        stats.append(st)
-        etas.append(eta)
-        iters.append(used)
-    final = obj.calculate(lam, jnp.asarray(cfg.gammas[-1], lam.dtype))
-    return RawSolve(
-        lam=lam,
-        x_slabs=final.x_slabs,
-        g=final.g,
-        stats=tuple(stats),
+    return resolve_engine(engine).raw_solve(
+        inst,
+        lam0,
+        cfg,
+        normalize=normalize,
+        fused_oracle=fused_oracle,
         sigma_sq=sigma_sq,
-        etas=jnp.stack(etas),
-        iters=jnp.stack(iters),
     )
 
 
-# One compiled entry point per (MaximizerConfig, normalize, fused_oracle)
-# tuple (the config is a hashable frozen dataclass); within each, XLA's jit
-# cache keys executables on the instance's bucket shapes.  Shared
+# One compiled entry point per (MaximizerConfig, normalize, fused_oracle,
+# engine) tuple (the config is a hashable frozen dataclass); within each,
+# XLA's jit cache keys executables on the instance's bucket shapes.  Shared
 # process-wide across sessions, schedulers and pools.
 _SINGLE: dict[tuple, object] = {}
 _SINGLE_SIGMA: dict[tuple, object] = {}
@@ -213,16 +154,17 @@ def _instrument(fn, entry: str):
 
 
 def compiled_solver(
-    cfg: MaximizerConfig, normalize: bool = False, fused_oracle: bool = False
+    cfg: MaximizerConfig, normalize: bool = False, fused_oracle: bool = False,
+    engine: str = "agd",
 ):
     """Jitted `(instance, lam0) -> RawSolve` for one tenant."""
-    key = (cfg, normalize, fused_oracle)
+    key = (cfg, normalize, fused_oracle, engine)
     fn = _SINGLE.get(key)
     if fn is None:
         fn = _instrument(
             jax.jit(
                 lambda inst, lam0: _raw_solve(
-                    inst, lam0, cfg, normalize, fused_oracle
+                    inst, lam0, cfg, normalize, fused_oracle, engine=engine
                 )
             ),
             "single",
@@ -232,7 +174,8 @@ def compiled_solver(
 
 
 def compiled_solver_fixed_sigma(
-    cfg: MaximizerConfig, normalize: bool = False, fused_oracle: bool = False
+    cfg: MaximizerConfig, normalize: bool = False, fused_oracle: bool = False,
+    engine: str = "agd",
 ):
     """Jitted `(instance, lam0, sigma_sq) -> RawSolve` skipping power iteration.
 
@@ -243,13 +186,14 @@ def compiled_solver_fixed_sigma(
     estimate is still (approximately) valid and the warm solve skips the
     recomputation entirely.  `RawSolve.sigma_sq` echoes the passed value.
     """
-    key = (cfg, normalize, fused_oracle)
+    key = (cfg, normalize, fused_oracle, engine)
     fn = _SINGLE_SIGMA.get(key)
     if fn is None:
         fn = _instrument(
             jax.jit(
                 lambda inst, lam0, sigma_sq: _raw_solve(
-                    inst, lam0, cfg, normalize, fused_oracle, sigma_sq=sigma_sq
+                    inst, lam0, cfg, normalize, fused_oracle,
+                    sigma_sq=sigma_sq, engine=engine,
                 )
             ),
             "single_sigma",
@@ -259,21 +203,23 @@ def compiled_solver_fixed_sigma(
 
 
 def compiled_batch_solver(
-    cfg: MaximizerConfig, normalize: bool = False, fused_oracle: bool = False
+    cfg: MaximizerConfig, normalize: bool = False, fused_oracle: bool = False,
+    engine: str = "agd",
 ):
     """Jitted, vmapped `(stacked_instance, lam0s[B, :]) -> RawSolve` pool kernel.
 
     All per-stage work runs lockstep across the tenant batch; with early
     stopping enabled the batch exits a stage once *every* tenant has converged.
     """
-    key = (cfg, normalize, fused_oracle)
+    key = (cfg, normalize, fused_oracle, engine)
     fn = _BATCH.get(key)
     if fn is None:
         fn = _instrument(
             jax.jit(
                 jax.vmap(
                     lambda inst, lam0: _raw_solve(
-                        inst, lam0, cfg, normalize, fused_oracle
+                        inst, lam0, cfg, normalize, fused_oracle,
+                        engine=engine,
                     )
                 )
             ),
@@ -284,7 +230,8 @@ def compiled_batch_solver(
 
 
 def compiled_batch_solver_fixed_sigma(
-    cfg: MaximizerConfig, normalize: bool = False, fused_oracle: bool = False
+    cfg: MaximizerConfig, normalize: bool = False, fused_oracle: bool = False,
+    engine: str = "agd",
 ):
     """Jitted, vmapped `(stacked_instance, lam0s[B, :], sigma_sqs[B]) ->
     RawSolve` — the batched counterpart of `compiled_solver_fixed_sigma`.
@@ -296,7 +243,7 @@ def compiled_batch_solver_fixed_sigma(
     clean (`SolveSession.sigma_reuse_ready`); mixed groups fall back to
     `compiled_batch_solver`.  `RawSolve.sigma_sq` echoes the per-lane values.
     """
-    key = (cfg, normalize, fused_oracle)
+    key = (cfg, normalize, fused_oracle, engine)
     fn = _BATCH_SIGMA.get(key)
     if fn is None:
         fn = _instrument(
@@ -304,7 +251,7 @@ def compiled_batch_solver_fixed_sigma(
                 jax.vmap(
                     lambda inst, lam0, sigma_sq: _raw_solve(
                         inst, lam0, cfg, normalize, fused_oracle,
-                        sigma_sq=sigma_sq,
+                        sigma_sq=sigma_sq, engine=engine,
                     )
                 )
             ),
@@ -324,6 +271,7 @@ def to_solve_result(raw: RawSolve) -> SolveResult:
         sigma_sq=raw.sigma_sq,
         steps=tuple(float(e) for e in raw.etas),
         iters_used=tuple(int(i) for i in raw.iters),
+        restarts=int(raw.restarts),
     )
 
 
@@ -342,6 +290,7 @@ def to_solve_results(raw: RawSolve) -> list[SolveResult]:
                 sigma_sq=raw.sigma_sq[b],
                 steps=tuple(float(e) for e in raw.etas[b]),
                 iters_used=tuple(int(i) for i in raw.iters[b]),
+                restarts=int(raw.restarts[b]),
             )
         )
     return out
@@ -445,9 +394,10 @@ def compile_cache_report() -> dict[str, int]:
         ("batch", _BATCH),
         ("batch_sigma", _BATCH_SIGMA),
     ):
-        for (cfg, normalize, fused_oracle), fn in cache.items():
+        for (cfg, normalize, fused_oracle, engine), fn in cache.items():
             key = (
-                f"{name}:gammas={cfg.gammas},iters={cfg.iters_per_stage},"
+                f"{name}:engine={engine},gammas={cfg.gammas},"
+                f"iters={cfg.iters_per_stage},"
                 f"tol=({cfg.tol_grad},{cfg.tol_viol}),norm={normalize},"
                 f"fused={fused_oracle}"
             )

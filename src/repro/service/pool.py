@@ -94,6 +94,10 @@ class BatchedSolvePool:
     # one-pass fused dual oracle inside the vmapped solve (see engine);
     # vmap adds the tenant axis outside the per-bucket oracle launches
     fused_oracle: bool = False
+    # solver engine the whole batch runs on ("agd" | "pdhg"); one vmapped
+    # executable runs one engine's program, so the scheduler keys its shape
+    # groups on the routed engine
+    engine: str = "agd"
 
     def solve_async(
         self,
@@ -153,15 +157,15 @@ class BatchedSolvePool:
                 )
             reg.inc("pool_sigma_reuse_solves_total", batch)
             return compiled_batch_solver_fixed_sigma(
-                self.config, self.normalize, self.fused_oracle
+                self.config, self.normalize, self.fused_oracle, self.engine
             )(
                 stacked,
                 jnp.stack(rows),
                 jnp.asarray(list(sigma_sqs), jnp.float32),
             )
-        return compiled_batch_solver(self.config, self.normalize, self.fused_oracle)(
-            stacked, jnp.stack(rows)
-        )
+        return compiled_batch_solver(
+            self.config, self.normalize, self.fused_oracle, self.engine
+        )(stacked, jnp.stack(rows))
 
     @staticmethod
     def finish(raw: RawSolve) -> list[SolveResult]:

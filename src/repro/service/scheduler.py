@@ -46,6 +46,7 @@ import jax
 import numpy as np
 
 from repro import telemetry
+from repro.engines.selector import EngineSelector
 from repro.instances.deltas import DeltaReport, InstanceDelta
 from repro.instances.generator import EdgeListInstance
 from repro.service.engine import (
@@ -98,6 +99,13 @@ class Scheduler:
         self.config = config or ServiceConfig()
         self.batch_min = max(2, int(batch_min))
         self.sessions: dict[str, SolveSession] = {}
+        # Per-tenant engine routing policy (`config.engine == "auto"`):
+        # the scheduler owns it so observations from every tenant land in
+        # one place and the state checkpoints with the service
+        # (meta["engine_selector"]).  Constructed even when the engine is
+        # pinned — attaching costs nothing and a config flip mid-life
+        # starts routing from whatever history accumulated.
+        self.engine_selector = EngineSelector()
         # Attached allocation-serving store (repro.serving.DualStore): when
         # set, every tenant session publishes its duals after absorb, so
         # requests are answered from the last COMPLETED cadence while the
@@ -111,6 +119,7 @@ class Scheduler:
             raise ValueError(f"tenant {name!r} already registered")
         s = SolveSession(name, inst, self.config)
         s.dual_store = self.dual_store
+        s.engine_selector = self.engine_selector
         self.sessions[name] = s
         return s
 
@@ -149,6 +158,10 @@ class Scheduler:
             # the overlap then cannot be attributed to — or corrupt the
             # drift metering / sigma-cache validity of — the in-flight solve.
             dc_norm = s.ingestor.drain_cost_drift()
+            # The engine is part of the dispatch decision: resolved HERE
+            # (possibly through the selector) so the choice is frozen with
+            # the rest of the start snapshot and reported after the fence.
+            engine = s.engine_choice()
             starts[name] = (
                 cold,
                 reason,
@@ -156,21 +169,25 @@ class Scheduler:
                 dc_norm,
                 s.ingestor.primal_unpacker(),
                 s._dirty_count,
+                engine,
             )
             # Batching key beyond shape+mode: the escalation-chosen warm
             # gamma schedule (tenants at different escalation levels run
-            # different continuation tails — different executables), and
+            # different continuation tails — different executables),
             # sigma-reuse readiness (the fixed-sigma vmapped solver skips
             # the power iteration for ALL lanes, so a group must be
-            # uniformly ready or uniformly not).
+            # uniformly ready or uniformly not), and the routed engine (a
+            # vmapped executable runs ONE engine's program).
             reuse = (not cold) and s.sigma_reuse_ready(dc_norm)
             warm_key = None if cold else s.warm_config().gammas
-            key = (shape_signature(s.instance()), cold, warm_key, reuse)
+            key = (
+                shape_signature(s.instance()), cold, warm_key, reuse, engine,
+            )
             groups.setdefault(key, []).append(name)
 
         batched: list[tuple[list[str], bool, Any, bool]] = []
         solo: list[tuple[str, bool, Any, bool]] = []
-        for (_, cold, _, reuse), names in groups.items():
+        for (_, cold, _, reuse, engine), names in groups.items():
             cfg = (
                 self.config.cold
                 if cold
@@ -181,6 +198,7 @@ class Scheduler:
                     cfg,
                     normalize=self.config.normalize,
                     fused_oracle=self.config.fused_oracle,
+                    engine=engine,
                 )
                 raw = pool.solve_async(
                     [self.sessions[n].device_instance() for n in names],
@@ -199,7 +217,8 @@ class Scheduler:
                     # on quiet warm cadences (recomputing `reuse` there is
                     # equivalent — same inputs)
                     raw, solo_reuse = self.sessions[name].dispatch_raw(
-                        cfg, starts[name][2], starts[name][3], cold=cold
+                        cfg, starts[name][2], starts[name][3], cold=cold,
+                        engine=engine,
                     )
                     solo.append((name, cold, raw, solo_reuse))
         # Serving capture runs after every dispatch path has synced its
@@ -261,6 +280,7 @@ class Scheduler:
                     sigma_reused=reuse,
                     dirty_count=starts[name][5],
                     serving=serving[name],
+                    engine=starts[name][6],
                 )
         for name, cold, raw, sigma_reused in solo:
             solo_names.append(name)
@@ -274,6 +294,7 @@ class Scheduler:
                 sigma_reused=sigma_reused,
                 dirty_count=starts[name][5],
                 serving=serving[name],
+                engine=starts[name][6],
             )
         return reports, batched_groups, solo_names
 
@@ -412,6 +433,7 @@ class Scheduler:
                 arrays[f"{name}/{k}"] = v
             meta["tenants"][name] = s_meta
         meta["telemetry"] = telemetry.get_registry().state_dict()
+        meta["engine_selector"] = self.engine_selector.state_dict()
         return arrays, meta
 
     def load_state(self, arrays: dict[str, Any], meta: dict) -> None:
@@ -428,9 +450,12 @@ class Scheduler:
                 self.config, s_arrays, s_meta
             )
             self.sessions[name].dual_store = self.dual_store
+            self.sessions[name].engine_selector = self.engine_selector
         # older checkpoints (pre-telemetry) carry no counter state: keep zeros
         if "telemetry" in meta:
             telemetry.get_registry().load_state(meta["telemetry"])
+        # pre-engine checkpoints carry no routing history: start exploring
+        self.engine_selector.load_state(meta.get("engine_selector"))
 
     def save_checkpoint(self, manager, step: int, *, block: bool = False) -> None:
         """Persist every session through a `checkpoint.CheckpointManager`.

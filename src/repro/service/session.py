@@ -125,12 +125,20 @@ class ServiceConfig:
     # all in-kernel accumulation stay fp32 (see docs/architecture.md,
     # "Mixed-precision slabs").
     slab_dtype: str = "float32"
+    # Solver engine every tenant dispatches on: "agd" (the paper's smoothed
+    # continuation solve), "pdhg" (structured primal-dual, repro.engines),
+    # or "auto" — per-tenant adaptive routing from observed iterations-to-tol
+    # (`repro.engines.EngineSelector`; the scheduler owns the selector and
+    # checkpoints it).  A session driven outside a scheduler treats "auto"
+    # as "agd" until a selector is attached.
+    engine: str = "agd"
     # Packing knobs forwarded to each tenant's DeltaIngestor.
     row_headroom: int = 8
     min_length: int = 1
     shard_multiple: int = 1
 
     def __post_init__(self):
+        from repro.engines.base import ENGINES
         from repro.instances.buckets import SLAB_DTYPES
 
         if self.slab_dtype not in SLAB_DTYPES or self.slab_dtype == "int8":
@@ -139,6 +147,11 @@ class ServiceConfig:
                 "path supports 'float32' and 'bfloat16' (int8 requires "
                 "frozen per-bucket scales, incompatible with O(delta) slab "
                 "surgery)"
+            )
+        if self.engine not in ENGINES + ("auto",):
+            raise ValueError(
+                f"ServiceConfig.engine={self.engine!r}: choose from "
+                f"{ENGINES + ('auto',)}"
             )
 
     @property
@@ -231,6 +244,10 @@ class SolveSession:
         # then answered from device-resident duals without touching the
         # solver.  Attach via `Scheduler(dual_store=...)` or directly.
         self.dual_store = None
+        # Engine routing policy for `config.engine == "auto"`; attached by
+        # the owning Scheduler (which also checkpoints it).  None means
+        # "auto" degrades to "agd".
+        self.engine_selector = None
 
     # -- cadence inputs ------------------------------------------------------
 
@@ -336,23 +353,53 @@ class SolveSession:
         so escalated tenants never share an executable with quiet ones."""
         return self.config.warm_for(self.warm_level)
 
-    def dispatch_raw(self, cfg, lam0, dc_norm: float, *, cold: bool):
+    def engine_choice(self) -> str:
+        """The engine this tenant's next solve dispatches on.
+
+        Resolves `config.engine == "auto"` through the attached
+        `EngineSelector` (deterministic given its observed state; "agd" when
+        no selector is attached).  Called exactly once per dispatch decision
+        — by `solve()` and by the scheduler's `_dispatch` — and emits the
+        `engine_selected_total{tenant,engine}` counter there, so routing is
+        observable on both the solo and the batched path.
+        """
+        engine = self.config.engine
+        if engine == "auto":
+            engine = (
+                "agd"
+                if self.engine_selector is None
+                else self.engine_selector.choose(self.tenant)
+            )
+        telemetry.get_registry().inc(
+            "engine_selected_total", 1, tenant=self.tenant, engine=engine
+        )
+        return engine
+
+    def dispatch_raw(
+        self, cfg, lam0, dc_norm: float, *, cold: bool,
+        engine: Optional[str] = None,
+    ):
         """Dispatch one compiled solve of the device-resident instance.
 
         The single site choosing between the fixed-sigma entry point
         (power-iteration skip, `sigma_reuse_ready`) and the full solver —
         both the synchronous `solve()` and the scheduler's solo dispatch go
-        through here, so the reuse gating cannot drift between them.
-        Returns `(RawSolve device futures, sigma_reused)`.
+        through here, so the reuse gating cannot drift between them.  The
+        sigma-reuse fast path is engine-agnostic: sigma_max(A) depends only
+        on A, so an estimate computed under one engine stays valid when the
+        selector re-routes the tenant.  Returns
+        `(RawSolve device futures, sigma_reused)`.
         """
+        if engine is None:
+            engine = self.engine_choice()
         reuse = not cold and self.sigma_reuse_ready(dc_norm)
         if reuse:
             raw = compiled_solver_fixed_sigma(
-                cfg, self.config.normalize, self.config.fused_oracle
+                cfg, self.config.normalize, self.config.fused_oracle, engine
             )(self.device_instance(), lam0, jnp.float32(self._sigma_sq))
         else:
             raw = compiled_solver(
-                cfg, self.config.normalize, self.config.fused_oracle
+                cfg, self.config.normalize, self.config.fused_oracle, engine
             )(self.device_instance(), lam0)
         return raw, reuse
 
@@ -409,16 +456,19 @@ class SolveSession:
         cfg = self.config.cold if cold else self.warm_config()
         dc_norm = self.ingestor.drain_cost_drift()
         dirty_count = self._dirty_count  # A-state the solve runs against
+        engine = self.engine_choice()
         with telemetry.span(
             "tenant_solve", tenant=self.tenant, mode="cold" if cold else "warm"
         ):
-            raw, reuse_sigma = self.dispatch_raw(cfg, lam0, dc_norm, cold=cold)
+            raw, reuse_sigma = self.dispatch_raw(
+                cfg, lam0, dc_norm, cold=cold, engine=engine
+            )
             serving = self.serving_capture()
             res = to_solve_result(raw)
             report = self.absorb(
                 res, cold=cold, cold_reason=reason, batched=False,
                 dc_norm=dc_norm, sigma_reused=reuse_sigma,
-                dirty_count=dirty_count, serving=serving,
+                dirty_count=dirty_count, serving=serving, engine=engine,
             )
         return res, report
 
@@ -434,6 +484,7 @@ class SolveSession:
         sigma_reused: bool = False,
         dirty_count: Optional[int] = None,
         serving: Optional[dict[str, Any]] = None,
+        engine: str = "agd",
     ) -> dict[str, Any]:
         """Fold a finished solve (own or pool-produced) into session state.
 
@@ -463,6 +514,7 @@ class SolveSession:
                 sigma_reused=sigma_reused,
                 dirty_count=dirty_count,
                 serving=serving,
+                engine=engine,
             )
 
     def _absorb(
@@ -477,6 +529,7 @@ class SolveSession:
         sigma_reused: bool = False,
         dirty_count: Optional[int] = None,
         serving: Optional[dict[str, Any]] = None,
+        engine: str = "agd",
     ) -> dict[str, Any]:
         cfg = self.config.cold if cold else self.warm_config()
         gamma_floor = cfg.gammas[-1]
@@ -490,6 +543,7 @@ class SolveSession:
             "mode": "cold" if cold else "warm",
             "cold_reason": cold_reason,
             "batched": batched,
+            "engine": engine,
             "iters_used": res.total_iters_used or cfg.total_iters,
             "iter_budget": cfg.total_iter_budget,
             "g": float(res.g),
@@ -550,7 +604,16 @@ class SolveSession:
                 report["sla_ok"] = bool(
                     report["drift_rel"] <= self.config.drift_sla_rel
                 )
-        self._record_telemetry(res, report)
+        self._record_telemetry(res, report, cfg)
+        if self.engine_selector is not None and self.config.engine == "auto":
+            # feed the routing policy what it routes on: iterations-to-tol,
+            # with budget exhaustion flagged as non-convergence
+            self.engine_selector.observe(
+                self.tenant,
+                engine,
+                report["iters_used"],
+                converged=report["iters_used"] < report["iter_budget"],
+            )
         self.lam_prev = res.lam
         self.prev_primal = (keys, x)
         # The solve's sigma estimate (recomputed or echoed) corresponds to
@@ -623,21 +686,31 @@ class SolveSession:
         report["published_generation"] = snap.generation
 
     def _record_telemetry(
-        self, res: SolveResult, report: dict[str, Any]
+        self, res: SolveResult, report: dict[str, Any], cfg
     ) -> None:
         """Route the finished solve into the metrics registry + stall detector.
 
         Builds the per-solve `ConvergenceTrace` from the already-returned
         `SolveResult.stats` (one host copy of trace arrays after the fence —
         never a per-iteration sync) and attaches its summary + stall flags to
-        the report, so every exporter sees one self-contained record.
+        the report, so every exporter sees one self-contained record.  PDHG
+        stats are one trace entry per residual check, not per iteration;
+        `trace_stride` carries that granularity into the trace's budget
+        accounting.
         """
+        engine = report.get("engine", "agd")
+        stride = (
+            max(1, min(cfg.check_every, cfg.total_iter_budget))
+            if engine == "pdhg"
+            else 1
+        )
         trace = ConvergenceTrace.from_result(
             res,
             tenant=self.tenant,
             cadence=self.cadence,
-            engine="agd",
+            engine=engine,
             mode=report["mode"],
+            trace_stride=stride,
         )
         self.last_convergence = trace
         report["convergence"] = trace.summary()
@@ -656,6 +729,13 @@ class SolveSession:
         )
         if report["sigma_reused"]:
             reg.inc("service_sigma_reuse_total", 1, tenant=self.tenant)
+        if res.restarts:
+            reg.inc(
+                "engine_restarts_total",
+                int(res.restarts),
+                tenant=self.tenant,
+                engine=engine,
+            )
         reg.observe("service_solve_iters", report["iters_used"], mode=report["mode"])
         reg.set_gauge("service_last_g", report["g"], tenant=self.tenant)
         reg.set_gauge(
@@ -765,6 +845,7 @@ class SolveSession:
         # older checkpoints restore at base level; one noisy cadence re-raises
         self.warm_level = int(meta.get("warm_level", 0))
         self.dual_store = None
+        self.engine_selector = None
         return self
 
 

@@ -43,6 +43,7 @@ SCHEMA: dict[str, tuple[str, ...]] = {
         "tenant",
         "cadence",
         "mode",
+        "engine",
         "iters_used",
         "iter_budget",
         "g",

@@ -67,9 +67,9 @@ def test_jsonl_schema_golden_keys():
     golden set and docs/observability.md in the same change."""
     golden = {
         "solve_report": {
-            "tenant", "cadence", "mode", "iters_used", "iter_budget", "g",
-            "max_violation", "dc_norm", "upload_mode", "upload_bytes",
-            "drift_rel", "drift_bound", "sla_ok",
+            "tenant", "cadence", "mode", "engine", "iters_used",
+            "iter_budget", "g", "max_violation", "dc_norm", "upload_mode",
+            "upload_bytes", "drift_rel", "drift_bound", "sla_ok",
         },
         "convergence": {
             "tenant", "cadence", "engine", "iters_used", "stage_budgets",
